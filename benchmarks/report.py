@@ -1,0 +1,120 @@
+"""Render EXPERIMENTS.md tables from artifacts (dry-run, roofline,
+hillclimb) — keeps the document reproducible from the JSON records.
+
+  PYTHONPATH=src python -m benchmarks.report > artifacts/report.md
+"""
+from __future__ import annotations
+
+import glob
+import json
+import sys
+
+PEAK_FLOPS, HBM_BW, ICI_BW = 197e12, 819e9, 50e9
+
+
+def load(pattern):
+    out = []
+    for p in sorted(glob.glob(pattern)):
+        with open(p) as f:
+            out.append(json.load(f))
+    return out
+
+
+def dryrun_table():
+    rows = load("artifacts/dryrun/*.json")
+    print("### §Dry-run — all cells x both meshes\n")
+    print("| arch | shape | mesh | status | GiB/dev | HLO flops (once) |"
+          " coll GiB (corrected) | compile s |")
+    print("|---|---|---|---|---|---|---|---|")
+    n_ok = n_skip = n_fail = 0
+    for r in rows:
+        if r.get("skipped"):
+            n_skip += 1
+            print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | SKIP "
+                  f"(full-attention, long-context) | — | — | — | — |")
+            continue
+        if not r.get("ok"):
+            n_fail += 1
+            print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                  f"FAIL | — | — | — | — |")
+            continue
+        n_ok += 1
+        coll = r["collectives"].get("corrected_total_bytes",
+                                    r["collectives"]["total_bytes"])
+        print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | OK | "
+              f"{r['memory']['per_device_bytes']/2**30:.2f} | "
+              f"{r['cost']['flops']:.3g} | {coll/2**30:.2f} | "
+              f"{r['compile_s']:.0f} |")
+    print(f"\n**{n_ok} ok / {n_skip} skipped / {n_fail} failed**\n")
+
+
+def roofline_table():
+    rows = load("artifacts/dryrun/*__pod16x16.json")
+    print("### §Roofline — single-pod (16x16, 256 chips), per step\n")
+    print("| arch | shape | compute s | memory s | collective s | "
+          "dominant | MODEL/HLO flops | roofline frac | GiB/dev | "
+          "fits v5e |")
+    print("|---|---|---|---|---|---|---|---|---|---|")
+    from repro.configs import get_config
+    from repro.configs.base import SHAPES_BY_NAME, model_flops
+    from repro.launch.analytic import analytic_bytes, analytic_flops
+    for r in rows:
+        if not r.get("ok"):
+            continue
+        c = r["cost"]
+        cfg0 = get_config(r["arch"])
+        shp = SHAPES_BY_NAME[r["shape"]]
+        af = c.get("analytic_flops_per_device")
+        ab = c.get("analytic_bytes_per_device")
+        if af is None:   # older artifact: compute terms (pure functions)
+            micro = r.get("train_policy", {}).get("microbatches", 1)
+            fsdp = r.get("sharding", {}).get("fsdp", False)
+            af = analytic_flops(cfg0, shp) / r["devices"]
+            ab = analytic_bytes(cfg0, shp, n_devices=r["devices"],
+                                model_shards=16,
+                                fsdp_shards=(r["devices"] // 16
+                                             if fsdp else 1),
+                                microbatches=micro)
+        coll = r["collectives"].get("corrected_total_bytes",
+                                    r["collectives"]["total_bytes"])
+        t_c, t_m, t_l = af / PEAK_FLOPS, ab / HBM_BW, coll / ICI_BW
+        dom = max(("compute", t_c), ("memory", t_m),
+                  ("collective", t_l), key=lambda x: x[1])[0]
+        mf = model_flops(cfg0, shp) / r["devices"]
+        useful = mf / af if af else 0
+        frac = (mf / PEAK_FLOPS) / max(t_c, t_m, t_l)
+        gib = r["memory"]["per_device_bytes"] / 2**30
+        print(f"| {r['arch']} | {r['shape']} | {t_c:.4f} | {t_m:.4f} | "
+              f"{t_l:.4f} | {dom} | {useful*100:.0f}% | {frac*100:.1f}% |"
+              f" {gib:.2f} | {'Y' if gib <= 16 else 'N'} |")
+    print()
+
+
+def hillclimb_table():
+    rows = load("artifacts/hillclimb/*.json")
+    if not rows:
+        return
+    print("### §Perf — hillclimb iterations\n")
+    print("| cell | variant | GiB/dev | compute s | memory s | "
+          "collective s | dominant | roofline frac |")
+    print("|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        if "error" in r:
+            print(f"| {r.get('cell','?')} | {r.get('variant','?')} | "
+                  f"ERROR {r['error'][:40]} | | | | | |")
+            continue
+        print(f"| {r['cell']} ({r['arch']}/{r['shape']}) | {r['variant']}"
+              f" | {r['mem_per_dev_gib']:.2f} | {r['t_compute_s']:.4f} | "
+              f"{r['t_memory_s']:.4f} | {r['t_collective_s']:.4f} | "
+              f"{r['dominant']} | {r['roofline_frac']*100:.1f}% |")
+    print()
+
+
+if __name__ == "__main__":
+    which = sys.argv[1] if len(sys.argv) > 1 else "all"
+    if which in ("all", "dryrun"):
+        dryrun_table()
+    if which in ("all", "roofline"):
+        roofline_table()
+    if which in ("all", "hillclimb"):
+        hillclimb_table()

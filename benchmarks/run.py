@@ -1,0 +1,401 @@
+"""Benchmark suite — one function per paper table/figure + roofline.
+
+Prints ``name,us_per_call,derived`` CSV lines per benchmark, then the
+full tables. Heavy inputs (oracle compiles, dry-run artifacts) are
+cached under artifacts/.
+
+  PYTHONPATH=src python -m benchmarks.run [--limit N] [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), os.pardir))
+
+from repro.core.metrics import (anova_oneway, group_by,        # noqa: E402
+                                improvement_vs_best_baseline, mcp, mre,
+                                mean_runtime, pef, quadrant, summarize)
+from benchmarks import common                                   # noqa: E402
+
+CSV: list[str] = []
+
+
+def _csv(name: str, us_per_call: float, derived: str):
+    line = f"{name},{us_per_call:.1f},{derived}"
+    CSV.append(line)
+    print(line, flush=True)
+
+
+# ---------------------------------------------------------------------------
+def bench_rq1_mre(records):
+    """Paper Fig. 7: per-model MRE distribution per estimator."""
+    t0 = time.perf_counter()
+    table = {}
+    for model, recs in group_by(records, "family").items():
+        table[model] = {est: mre(r)
+                        for est, r in group_by(recs, "estimator").items()}
+    s = summarize(records)
+    t = (time.perf_counter() - t0) * 1e6 / max(len(records), 1)
+    xm = s.get("xmem", {}).get("mre")
+    _csv("rq1_mre", t, f"xmem_mre={xm:.4f}" if xm is not None else "n/a")
+    print("\n== RQ1: MRE by family x estimator ==")
+    ests = sorted({e for v in table.values() for e in v})
+    print(f"{'family':10s} " + " ".join(f"{e:>11s}" for e in ests))
+    for fam in sorted(table):
+        row = [table[fam].get(e) for e in ests]
+        print(f"{fam:10s} " + " ".join(
+            f"{(v * 100):10.1f}%" if v is not None else f"{'—':>11s}"
+            for v in row))
+    return table
+
+
+def bench_rq2_pef(records):
+    """Paper Fig. 8: four-quadrant MRE x PEF per (model, estimator)."""
+    t0 = time.perf_counter()
+    quads = {}
+    counts = {}
+    for est, recs in group_by(records, "estimator").items():
+        by_model = {}
+        for r in recs:
+            by_model.setdefault(r.meta["model"], []).append(r)
+        qs = {m: quadrant(v) for m, v in by_model.items()}
+        quads[est] = qs
+        counts[est] = {q: sum(1 for v in qs.values() if v == q)
+                       for q in ("optimal", "overestimation",
+                                 "underestimation", "worst")}
+    t = (time.perf_counter() - t0) * 1e6 / max(len(records), 1)
+    xm = counts.get("xmem", {})
+    _csv("rq2_pef_quadrants", t,
+         f"xmem_optimal={xm.get('optimal', 0)}")
+    print("\n== RQ2: quadrant counts (models per quadrant) ==")
+    for est, c in counts.items():
+        pe = pef([r for r in records if r.estimator == est])
+        print(f"{est:12s} {c}  overall_PEF={pe:.3f}")
+    return counts
+
+
+def bench_rq3_mcp(mc_records):
+    """Paper Table 3: memory conservation potential (Monte Carlo only)."""
+    t0 = time.perf_counter()
+    out = {}
+    for est, recs in group_by(mc_records, "estimator").items():
+        fam_split = {}
+        for fam in ("dense", "moe", "hybrid", "ssm", "vlm", "audio"):
+            fr = [r for r in recs if r.family == fam]
+            if fr:
+                fam_split[fam] = mcp(fr) / common.MiB
+        out[est] = {"overall_MiB": mcp(recs) / common.MiB, **fam_split}
+    t = (time.perf_counter() - t0) * 1e6 / max(len(mc_records), 1)
+    _csv("rq3_mcp", t,
+         f"xmem_mcp_mib={out.get('xmem', {}).get('overall_MiB', 0):.1f}")
+    print("\n== RQ3: MCP (MiB conserved per run, OOM-penalized) ==")
+    for est, v in out.items():
+        print(f"{est:12s} overall={v['overall_MiB']:8.1f} MiB  " +
+              " ".join(f"{k}={x:7.1f}" for k, x in v.items()
+                       if k != "overall_MiB"))
+    return out
+
+
+def bench_rq4_runtime(records):
+    """Paper Table 4: estimation runtime per method."""
+    t0 = time.perf_counter()
+    out = {est: mean_runtime(recs)
+           for est, recs in group_by(records, "estimator").items()}
+    t = (time.perf_counter() - t0) * 1e6 / max(len(records), 1)
+    _csv("rq4_runtime", t,
+         f"xmem_s={out.get('xmem', 0):.3f}")
+    print("\n== RQ4: mean estimation runtime (s) ==")
+    for est, v in sorted(out.items()):
+        print(f"{est:12s} {v:8.3f}s")
+    return out
+
+
+def bench_rq5_scale():
+    """Paper Fig. 9 / RQ5: full-scale per-device estimates vs the
+    dry-run's XLA memory_analysis (the A100 analogue)."""
+    import jax
+    from repro.configs import ARCH_IDS, get_config
+    from repro.configs.base import TRAIN_4K
+    from repro.configs.registry import input_specs
+    from repro.core.estimator import XMemEstimator
+    from repro.distributed.sharding import ShardingPolicy, shard_factor_fn
+    from repro.models import model as M
+    from repro.train import TrainPolicy, make_estimator_hooks
+
+    axis_sizes = {"data": 16, "model": 16}
+    results = {}
+    t0 = time.perf_counter()
+    n = 0
+    for arch in ARCH_IDS:
+        art = f"artifacts/dryrun/{arch}__train_4k__pod16x16.json"
+        if not os.path.exists(art):
+            continue
+        with open(art) as f:
+            rec = json.load(f)
+        if not rec.get("ok"):
+            continue
+        truth = rec["memory"]["per_device_bytes"]
+        cfg = get_config(arch)
+        fsdp = cfg.param_count() > 8e9
+        pol = ShardingPolicy(fsdp=fsdp, batch_axes=("data",))
+        micro = rec.get("train_policy", {}).get("microbatches", 1)
+        optname = rec.get("train_policy", {}).get("optimizer", "adamw")
+        tp = TrainPolicy(optimizer=optname, microbatches=micro)
+        fwd_bwd, update, opt_init = make_estimator_hooks(cfg, tp)
+        params = M.abstract_params(cfg)
+        mb = dict(input_specs(cfg, TRAIN_4K))
+        # estimator sees one microbatch (activations scale with it)
+        mb = jax.tree_util.tree_map(
+            lambda s: jax.ShapeDtypeStruct(
+                (max(s.shape[0] // micro, 1),) + s.shape[1:], s.dtype), mb)
+        est = XMemEstimator.for_tpu(scan_unroll_cap=2)
+        try:
+            rep = est.estimate_training(
+                fwd_bwd, params, mb, update_fn=update,
+                opt_init_fn=opt_init,
+                shard_factor_fn=shard_factor_fn(cfg, axis_sizes, pol))
+            err = abs(rep.peak_bytes - truth) / truth
+            results[arch] = {"truth_gib": truth / 2**30,
+                             "xmem_gib": rep.peak_bytes / 2**30,
+                             "xmem_err": err,
+                             "xmem_t": rep.wall_time_s}
+            n += 1
+        except Exception as e:  # noqa: BLE001
+            results[arch] = {"error": str(e)[:200]}
+    t = (time.perf_counter() - t0) * 1e6 / max(n, 1)
+    errs = [v["xmem_err"] for v in results.values() if "xmem_err" in v]
+    _csv("rq5_scale", t,
+         f"median_err={np.median(errs):.3f}" if errs else "no-cells")
+    print("\n== RQ5: full-scale train_4k cells, per-device (GiB) ==")
+    for arch, v in results.items():
+        if "error" in v:
+            print(f"{arch:24s} ERROR {v['error'][:80]}")
+        else:
+            print(f"{arch:24s} truth={v['truth_gib']:7.2f} "
+                  f"xmem={v['xmem_gib']:7.2f} err={v['xmem_err']*100:6.1f}% "
+                  f"({v['xmem_t']:.1f}s)")
+    return results
+
+
+def bench_fig6_fidelity():
+    """Paper Fig. 6: simulated segment curve vs tensor (live) curve."""
+    from repro.core.simulator import MemorySimulator
+    from repro.core.allocator import CUDA_CACHING
+    from repro.core.analyzer import reconstruct_lifecycles
+    from repro.core.tracer import trace_fn
+    from repro.core.events import BlockKind
+    import jax
+
+    t0 = time.perf_counter()
+    out = {}
+    for arch in ("qwen3-32b", "phi3.5-moe-42b-a6.6b", "xlstm-1.3b"):
+        smoke = common.get_smoke(arch)
+        c = common.build_job({"arch": arch, "model": smoke.name,
+                              "family": smoke.family,
+                              "optimizer": "adam", "batch": 4,
+                              "grad_release": "pos0"})
+        flat_p = list(jax.tree_util.tree_leaves(c.params))
+        flat_b = list(jax.tree_util.tree_leaves(c.batch))
+        pst = jax.tree_util.tree_structure(c.params)
+        bst = jax.tree_util.tree_structure(c.batch)
+        trace, _ = trace_fn(
+            lambda *ls: c.fwd_bwd_fn(
+                jax.tree_util.tree_unflatten(pst, ls[:len(flat_p)]),
+                jax.tree_util.tree_unflatten(bst, ls[len(flat_p):])),
+            *(flat_p + flat_b),
+            arg_kinds=[BlockKind.PARAM] * len(flat_p)
+            + [BlockKind.INPUT] * len(flat_b))
+        blocks = reconstruct_lifecycles(trace)
+        sim = MemorySimulator(CUDA_CACHING).replay(blocks)
+        reserved = np.array([r for _, _, r in sim.curve])
+        allocated = np.array([a for _, a, _ in sim.curve])
+        gap = (reserved - allocated)
+        out[arch] = {
+            "peak_reserved_mib": sim.peak_reserved / common.MiB,
+            "peak_tensor_mib": sim.peak_allocated / common.MiB,
+            "mean_segment_overhead": float(
+                gap.mean() / max(allocated.mean(), 1)),
+            "frag_at_peak": sim.fragmentation_overhead,
+        }
+    t = (time.perf_counter() - t0) * 1e6 / 3
+    _csv("fig6_fidelity", t,
+         f"mean_frag={np.mean([v['frag_at_peak'] for v in out.values()]):.3f}")
+    print("\n== Fig 6 analogue: segment vs tensor curves ==")
+    for arch, v in out.items():
+        print(f"{arch:24s} reserved={v['peak_reserved_mib']:7.1f}MiB "
+              f"tensors={v['peak_tensor_mib']:7.1f}MiB "
+              f"frag_at_peak={v['frag_at_peak']*100:5.1f}%")
+    return out
+
+
+def bench_anova(records):
+    """Paper §4.1.4: one-way ANOVA on relative error."""
+    t0 = time.perf_counter()
+    groups = []
+    names = []
+    for est, recs in group_by(records, "estimator").items():
+        errs = [r.rel_error for r in recs if r.rel_error is not None]
+        if len(errs) > 2:
+            groups.append(errs)
+            names.append(est)
+    r_est = anova_oneway(groups)
+    xrec = [r for r in records if r.estimator == "xmem"]
+    fam_groups = [[r.rel_error for r in v if r.rel_error is not None]
+                  for v in group_by(xrec, "family").values()]
+    r_fam = anova_oneway([g for g in fam_groups if len(g) > 2])
+    t = (time.perf_counter() - t0) * 1e6
+    _csv("anova", t, f"F_estimators={r_est['F']:.1f}")
+    print("\n== ANOVA ==")
+    print(f"between estimators ({names}): F={r_est['F']:.2f} "
+          f"df=({r_est['df_between']},{r_est['df_within']}) "
+          f"eta^2={r_est['eta_sq']:.3f}")
+    print(f"xmem across families: F={r_fam['F']:.2f} "
+          f"eta^2={r_fam['eta_sq']:.3f}")
+    return {"estimators": r_est, "xmem_families": r_fam}
+
+
+def bench_ablation(rows):
+    """Beyond-paper: which Orchestrator passes buy the accuracy."""
+    from repro.core.estimator import XMemEstimator
+    from repro.core.orchestrator import OrchestratorPolicy
+    from repro.core.allocator import CUDA_CACHING, TPU_ARENA
+
+    variants = {
+        "full": dict(),
+        "no_donation": dict(donate_params=False, donate_opt_state=False),
+        "no_fusion_fold": dict(fusion_folding=False),
+        "grads_at_update": dict(grad_release="at_update"),
+        "cuda_alloc": dict(),   # allocator swap handled below
+    }
+    t0 = time.perf_counter()
+    errs: dict[str, list[float]] = {k: [] for k in variants}
+    sample = [r for r in rows if r["grad_release"] == "pos0"][::7][:24]
+    for r in sample:
+        job = common.build_job(r)
+        for name, kw in variants.items():
+            alloc = CUDA_CACHING if name == "cuda_alloc" else TPU_ARENA
+            est = XMemEstimator(
+                allocator_policy=alloc,
+                orchestrator_policy=OrchestratorPolicy(**kw))
+            try:
+                rep = est.estimate_training(
+                    job.fwd_bwd_fn, job.params, job.batch,
+                    update_fn=job.update_fn, opt_init_fn=job.opt_init_fn)
+                errs[name].append(
+                    abs(rep.peak_bytes - r["truth"]) / r["truth"])
+            except Exception:  # noqa: BLE001
+                pass
+    t = (time.perf_counter() - t0) * 1e6 / max(len(sample), 1)
+    meds = {k: float(np.median(v)) if v else float("nan")
+            for k, v in errs.items()}
+    _csv("ablation", t, f"full={meds['full']:.3f}")
+    print("\n== Ablation: median rel. error per orchestrator variant ==")
+    for k, v in meds.items():
+        print(f"{k:16s} {v*100:6.1f}%")
+    return meds
+
+
+def bench_roofline():
+    """Assignment §Roofline: three-term analysis per dry-run cell."""
+    PEAK_FLOPS = 197e12          # bf16 / chip
+    HBM_BW = 819e9               # B/s / chip
+    ICI_BW = 50e9                # B/s / link
+    from repro.configs import get_config
+    from repro.configs.base import SHAPES_BY_NAME
+    from repro.launch.analytic import analytic_bytes, analytic_flops
+    t0 = time.perf_counter()
+    rows = []
+    for path in sorted(glob.glob("artifacts/dryrun/*.json")):
+        with open(path) as f:
+            r = json.load(f)
+        if not r.get("ok"):
+            continue
+        # analytic compute/memory terms (cost_analysis counts loop
+        # bodies once — see launch/hlo_analysis.py); collectives use the
+        # loop-trip-corrected HLO parse where available
+        cfg0 = get_config(r["arch"])
+        shp = SHAPES_BY_NAME[r["shape"]]
+        af = r["cost"].get("analytic_flops_per_device")
+        ab = r["cost"].get("analytic_bytes_per_device")
+        if af is None:
+            micro = r.get("train_policy", {}).get("microbatches", 1)
+            fsdp = r.get("sharding", {}).get("fsdp", False)
+            af = analytic_flops(cfg0, shp) / r["devices"]
+            ab = analytic_bytes(cfg0, shp, n_devices=r["devices"],
+                                model_shards=16,
+                                fsdp_shards=(r["devices"] // 16
+                                             if fsdp else 1),
+                                microbatches=micro)
+        t_comp = af / PEAK_FLOPS
+        t_mem = ab / HBM_BW
+        t_coll = r["collectives"].get(
+            "corrected_total_bytes",
+            r["collectives"]["total_bytes"]) / ICI_BW
+        dom = max(("compute", t_comp), ("memory", t_mem),
+                  ("collective", t_coll), key=lambda x: x[1])[0]
+        rows.append({
+            "cell": f"{r['arch']}|{r['shape']}|{r['mesh']}",
+            "t_compute_s": t_comp, "t_memory_s": t_mem,
+            "t_collective_s": t_coll, "dominant": dom,
+            "hlo_flops": r["cost"]["flops"],
+            "mem_per_dev_gib": r["memory"]["per_device_bytes"] / 2**30,
+        })
+    t = (time.perf_counter() - t0) * 1e6 / max(len(rows), 1)
+    n_dom = {}
+    for row in rows:
+        n_dom[row["dominant"]] = n_dom.get(row["dominant"], 0) + 1
+    _csv("roofline", t, f"cells={len(rows)};dominant={n_dom}")
+    print("\n== Roofline terms per cell (seconds/step, dominant term) ==")
+    for row in rows:
+        print(f"{row['cell']:58s} comp={row['t_compute_s']:9.4f} "
+              f"mem={row['t_memory_s']:9.4f} "
+              f"coll={row['t_collective_s']:9.4f} -> {row['dominant']}"
+              f"  mem/dev={row['mem_per_dev_gib']:7.2f}GiB")
+    return rows
+
+
+# ---------------------------------------------------------------------------
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--limit", type=int, default=None)
+    ap.add_argument("--quick", action="store_true",
+                    help="small population for CI-speed runs")
+    ap.add_argument("--refresh", action="store_true")
+    args = ap.parse_args()
+    limit = 60 if args.quick else args.limit
+
+    print("== generating / loading oracle records ==", flush=True)
+    rows = common.generate_records(limit=limit, refresh=args.refresh)
+    print(f"rows: {len(rows)}")
+    records = common.to_run_records(rows)
+    mc = common.monte_carlo_records(rows, n=1306)
+
+    bench_rq1_mre(records)
+    bench_rq2_pef(records)
+    bench_rq3_mcp(mc)
+    bench_rq4_runtime(records)
+    bench_anova(records)
+    bench_fig6_fidelity()
+    bench_ablation(rows)
+    bench_rq5_scale()
+    bench_roofline()
+
+    print("\n== headline improvements vs best baseline (paper abstract) ==")
+    imp = improvement_vs_best_baseline(mc)
+    for k, v in imp.items():
+        print(f"{k}: {v:+.0f}%" if v is not None else f"{k}: n/a")
+
+    print("\n== CSV summary (name,us_per_call,derived) ==")
+    for line in CSV:
+        print(line)
+
+
+if __name__ == "__main__":
+    main()

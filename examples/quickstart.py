@@ -1,0 +1,53 @@
+"""Quickstart: estimate a training job's peak device memory with xMem.
+
+Runs entirely on CPU in a few seconds — zero accelerator use, which is
+the paper's whole point. The job here is the qwen3-family smoke model
+with AdamW; we estimate, then verify against XLA's actual reservation.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+
+from repro.configs import get_smoke
+from repro.configs.base import smoke_shape
+from repro.configs.registry import input_specs
+from repro.core.estimator import XMemEstimator
+from repro.core.baselines import JobSpec
+from repro.core.baselines.directprobe import measured_peak
+from repro.models import model as M
+from repro.train import TrainPolicy, make_estimator_hooks
+
+
+def main():
+    cfg = get_smoke("qwen3-32b")
+    shape = smoke_shape(seq_len=128, global_batch=8)
+    policy = TrainPolicy(optimizer="adamw", clip_norm=None)
+
+    # the estimator consumes the *real* step functions of the framework
+    fwd_bwd, update, opt_init = make_estimator_hooks(cfg, policy)
+    params = M.abstract_params(cfg)          # ShapeDtypeStructs — no alloc
+    batch = input_specs(cfg, shape)
+
+    est = XMemEstimator.for_tpu()
+    report = est.estimate_training(fwd_bwd, params, batch,
+                                   update_fn=update, opt_init_fn=opt_init)
+    print(f"xMem estimate        : {report.peak_bytes/2**20:8.2f} MiB")
+    print(f"  persistent (P+opt) : {report.persistent_bytes/2**20:8.2f} MiB")
+    print(f"  tensor peak        : {report.peak_tensor_bytes/2**20:8.2f} MiB")
+    print(f"  estimation time    : {report.wall_time_s*1e3:8.1f} ms "
+          f"({report.num_events} memory events)")
+
+    # ground truth: XLA's actual reservation for the compiled step
+    job = JobSpec("quickstart", fwd_bwd, params, batch, update, opt_init)
+    truth = measured_peak(job)
+    err = abs(report.peak_bytes - truth) / truth
+    print(f"XLA ground truth     : {truth/2**20:8.2f} MiB")
+    print(f"relative error       : {err*100:8.1f} %")
+
+    # OOM verdict at a hypothetical capacity
+    cap = int(truth * 1.1)
+    print(f"fits in {cap/2**20:.1f} MiB?  -> {report.fits(cap)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""repro.core — the paper's contribution: xMem, a CPU-only a-priori
+peak-memory estimator for DL training jobs, adapted to JAX/XLA/TPU.
+
+Pipeline: tracer (CPU jaxpr interpretation) -> analyzer (lifecycles +
+attribution) -> orchestrator (device-semantics lifecycle rewriting) ->
+simulator (two-level BFC allocator replay) -> peak estimate + OOM verdict.
+"""
+from .allocator import (AllocatorPolicy, CachingAllocatorSim, CUDA_CACHING,
+                        DeviceAllocatorSim, POLICIES, SimOOMError, TPU_ARENA,
+                        XLA_BFC)
+from .analyzer import (attribute_by_time_window, classify_blocks,
+                       layer_report, reconstruct_from_address_events,
+                       reconstruct_lifecycles)
+from .estimator import (EstimateReport, XMemEstimator, flatten_kinds,
+                        update_grad_coupling)
+from .events import (BlockKind, BlockLifecycle, MemoryEvent, Phase, Trace,
+                     lifecycles_to_events, liveness_curve, peak_live_bytes)
+from .orchestrator import (CollectiveSpec, FUSIBLE_OPS, MemoryOrchestrator,
+                           OrchestratorPolicy)
+from .simulator import MemorySimulator, SimResult
+from .tracer import JaxprMemoryTracer, aval_bytes, trace_fn
+
+__all__ = [
+    "AllocatorPolicy", "CachingAllocatorSim", "CUDA_CACHING",
+    "DeviceAllocatorSim", "POLICIES", "SimOOMError", "TPU_ARENA", "XLA_BFC",
+    "attribute_by_time_window", "classify_blocks", "layer_report",
+    "reconstruct_from_address_events", "reconstruct_lifecycles",
+    "EstimateReport", "XMemEstimator", "flatten_kinds",
+    "update_grad_coupling", "BlockKind", "BlockLifecycle", "MemoryEvent",
+    "Phase", "Trace", "lifecycles_to_events", "liveness_curve",
+    "peak_live_bytes", "CollectiveSpec", "FUSIBLE_OPS", "MemoryOrchestrator",
+    "OrchestratorPolicy", "MemorySimulator", "SimResult",
+    "JaxprMemoryTracer", "aval_bytes", "trace_fn",
+]

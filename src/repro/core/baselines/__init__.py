@@ -1,0 +1,31 @@
+"""Baseline estimators reproduced from the paper's evaluation (§4.1.1).
+
+Each baseline represents one methodology family:
+
+* ``TensorSumEstimator``   — Horus-style: sums tensor sizes, no allocator,
+                             no liveness (paper §5.1's "simpler static").
+* ``DNNMemEstimator``      — static graph analysis + framework-level BFC
+                             only: no device level, no cache reclaim, no
+                             optimizer-phase capture, no code-placement
+                             sensitivity (paper §5.1).
+* ``SchedTuneEstimator``   — data-driven ridge regression on model/job
+                             features; exhibits the cold-start problem on
+                             unseen families (paper §5.2).
+* ``DirectProbeEstimator`` — LLMem-style direct measurement: actually
+                             compiles/measures scaled-down jobs and
+                             extrapolates — high fidelity, but consumes
+                             the very resources estimation should spare
+                             (paper §5.3).
+
+All share the ``estimate(job) -> int`` interface over a ``JobSpec``.
+"""
+from .common import JobSpec
+from .tensorsum import TensorSumEstimator
+from .dnnmem import DNNMemEstimator
+from .schedtune import SchedTuneEstimator
+from .directprobe import DirectProbeEstimator
+
+__all__ = [
+    "JobSpec", "TensorSumEstimator", "DNNMemEstimator",
+    "SchedTuneEstimator", "DirectProbeEstimator",
+]

@@ -1,0 +1,54 @@
+"""Shared job description consumed by all estimators (xMem + baselines)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+
+
+@dataclasses.dataclass
+class JobSpec:
+    """One training-job configuration (paper notation: configuration j)."""
+
+    name: str
+    fwd_bwd_fn: Callable          # (params, batch) -> (loss, grads)
+    params: Any                   # pytree of ShapeDtypeStruct
+    batch: Any                    # pytree of ShapeDtypeStruct
+    update_fn: Callable | None = None
+    opt_init_fn: Callable | None = None
+    meta: dict = dataclasses.field(default_factory=dict)
+    # meta keys used by feature-based estimators / reporting:
+    #   family, optimizer, batch_size, seq_len, d_model, n_layers,
+    #   grad_release
+
+    def param_bytes(self) -> int:
+        return sum(leaf.size * leaf.dtype.itemsize
+                   for leaf in jax.tree_util.tree_leaves(self.params))
+
+    def batch_bytes(self) -> int:
+        return sum(leaf.size * leaf.dtype.itemsize
+                   for leaf in jax.tree_util.tree_leaves(self.batch))
+
+    def opt_state_bytes(self) -> int:
+        if self.opt_init_fn is None:
+            return 0
+        st = jax.eval_shape(self.opt_init_fn, self.params)
+        return sum(leaf.size * leaf.dtype.itemsize
+                   for leaf in jax.tree_util.tree_leaves(st))
+
+    def features(self) -> list[float]:
+        """Feature vector for data-driven estimators (SchedTune-style)."""
+        m = self.meta
+        return [
+            self.param_bytes() / 1e6,
+            self.batch_bytes() / 1e6,
+            float(m.get("batch_size", 1)),
+            float(m.get("seq_len", 0)),
+            float(m.get("d_model", 0)),
+            float(m.get("n_layers", 0)),
+            float(m.get("optimizer_states", 0)),  # 0 sgd, 1 rmsprop, 2 adam
+            self.param_bytes() / 1e6 * float(m.get("optimizer_states", 0)),
+            float(m.get("batch_size", 1)) * float(m.get("seq_len", 1))
+            * float(m.get("d_model", 1)) / 1e6,   # activation proxy
+        ]

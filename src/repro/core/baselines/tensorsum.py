@@ -1,0 +1,47 @@
+"""Horus-style naive estimator: sum tensor sizes, ignore the allocator.
+
+The paper cites Horus as "primarily sums tensor sizes" (§5.1) and uses it
+to motivate allocator-aware simulation: without liveness or segment
+modeling, estimates are either wild over-counts (every activation
+coexists) or under-counts (ignores allocator rounding/caching). We follow
+the common formulation: persistent state + gradients + every forward
+activation, no liveness, no allocator.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from ..events import BlockKind
+from ..tracer import trace_fn
+from .common import JobSpec
+
+
+class TensorSumEstimator:
+    name = "tensorsum"
+
+    def estimate(self, job: JobSpec) -> int:
+        t0 = time.perf_counter()
+        params_b = job.param_bytes()
+        opt_b = job.opt_state_bytes()
+        grads_b = params_b  # gradient per parameter
+        batch_b = job.batch_bytes()
+        # forward activations: one alloc per eqn output, no liveness
+        flat_p = jax.tree_util.tree_leaves(job.params)
+        flat_b = jax.tree_util.tree_leaves(job.batch)
+        trace, _ = trace_fn(
+            lambda *leaves: job.fwd_bwd_fn(
+                jax.tree_util.tree_unflatten(
+                    jax.tree_util.tree_structure(job.params),
+                    leaves[:len(flat_p)]),
+                jax.tree_util.tree_unflatten(
+                    jax.tree_util.tree_structure(job.batch),
+                    leaves[len(flat_p):])),
+            *(flat_p + flat_b), scan_unroll_cap=1)
+        act_b = sum(e.size for e in trace.events
+                    if e.kind == "alloc"
+                    and e.block_kind in (BlockKind.ACTIVATION, BlockKind.TEMP))
+        # every tensor assumed simultaneously resident
+        self.last_runtime_s = time.perf_counter() - t0
+        return params_b + opt_b + grads_b + batch_b + act_b

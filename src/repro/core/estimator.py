@@ -1,0 +1,445 @@
+"""xMem estimator — the public API tying the pipeline together.
+
+``XMemEstimator.estimate_training`` reproduces the paper's workflow:
+
+1. trace the job's phases on CPU (jaxpr interpretation — zero accelerator
+   use, milliseconds even for trillion-parameter configs);
+2. reconstruct + classify lifecycles (Analyzer);
+3. compose N iterations on one timeline — optimizer state materializes at
+   the first update and persists (why the paper analyzes >= 2 iterations;
+   we default to 3 like the paper);
+4. orchestrate lifecycles (persistence, grad_release, donation, fusion
+   folding, collective injection, sharding);
+5. replay through the two-level allocator simulation -> peak estimate,
+   usage curve, OOM verdict.
+
+The estimator is a *first-class framework feature*: ``launch/train.py``
+gates job admission on it, and the sharding engine feeds it per-tensor
+shard factors for per-device estimates (the paper's §6.2 extension).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Sequence
+
+import jax
+
+from .allocator import AllocatorPolicy, CUDA_CACHING
+from .analyzer import classify_blocks, phase_peaks, reconstruct_lifecycles
+from .events import BlockKind, BlockLifecycle, Phase, peak_live_bytes
+from .orchestrator import CollectiveSpec, MemoryOrchestrator, OrchestratorPolicy
+from .simulator import MemorySimulator, SimResult
+from .tracer import trace_fn
+
+
+def update_grad_coupling(update_fn: Callable, params, grads,
+                         opt_state) -> str:
+    """Taint analysis: does the optimizer update *couple* gradients?
+
+    Per-leaf updates (SGD/Adam/... via tree.map) let XLA fuse each leaf's
+    update into the backward pass, so gradients die eagerly. Cross-leaf
+    coupling (global-norm clipping, Adafactor's global RMS) forces all
+    gradients to coexist until the update. Also detects whether gradients
+    are upcast to a wider dtype inside the update (f32 working copies —
+    they add transient bytes during the optimizer phase).
+
+    Returns {"coupling": "per_leaf"|"coupled", "upcasts": bool}.
+    """
+    args = (params, grads, opt_state) if opt_state is not None \
+        else (params, grads)
+    fn = update_fn if opt_state is not None \
+        else (lambda p, g: update_fn(p, g, None))
+    closed = jax.make_jaxpr(fn)(*args)
+    jaxpr = closed.jaxpr
+    n_params = len(jax.tree_util.tree_leaves(params))
+    n_grads = len(jax.tree_util.tree_leaves(grads))
+    taint: dict = {}
+    for i, v in enumerate(jaxpr.invars):
+        if n_params <= i < n_params + n_grads:
+            taint[v] = frozenset({i - n_params})
+    from jax.extend import core as jcore
+    coupling = "per_leaf"
+    upcasts = False
+    for eqn in jaxpr.eqns:
+        union: frozenset = frozenset()
+        for v in eqn.invars:
+            if isinstance(v, jcore.Literal):
+                continue
+            union = union | taint.get(v, frozenset())
+        if len(union) > 1:
+            coupling = "coupled"
+        if union:
+            if eqn.primitive.name == "convert_element_type":
+                iv = eqn.invars[0]
+                ov = eqn.outvars[0]
+                try:
+                    if ov.aval.dtype.itemsize > iv.aval.dtype.itemsize:
+                        upcasts = True  # f32 working copies of grads
+                except AttributeError:
+                    pass
+            for ov in eqn.outvars:
+                taint[ov] = union
+    return {"coupling": coupling, "upcasts": upcasts}
+
+
+def flatten_kinds(args_with_kinds: Sequence[tuple]) -> tuple[list, list[BlockKind], list[str]]:
+    """Flatten (pytree, kind, name) triples into tracer-aligned lists."""
+    flat_args, kinds, scopes = [], [], []
+    for tree, kind, name in args_with_kinds:
+        leaves, _ = jax.tree_util.tree_flatten(tree)
+        flat_args.extend(leaves)
+        kinds.extend([kind] * len(leaves))
+        scopes.extend([f"{name}[{i}]" for i in range(len(leaves))])
+    return flat_args, kinds, scopes
+
+
+@dataclasses.dataclass
+class EstimateReport:
+    peak_bytes: int               # reserved segments — THE estimate
+    peak_tensor_bytes: int        # live-tensor peak (naive lower bound)
+    persistent_bytes: int         # params + opt state + consts
+    oom: bool
+    sim: SimResult
+    breakdown: dict               # per-kind / per-phase summary
+    wall_time_s: float
+    num_events: int
+
+    def fits(self, capacity: int) -> bool:
+        return self.peak_bytes <= capacity
+
+
+class XMemEstimator:
+    """Peak-memory estimator. Target-specific presets:
+
+    * ``XMemEstimator.for_tpu()``   — XLA/TPU target: static buffer
+      assignment compacts memory, so the arena policy (reserved ≈ rounded
+      live) plus fusion folding and donation model the runtime; this is
+      the mode the framework's admission gate uses.
+    * ``XMemEstimator.for_torch_gpu()`` — paper-faithful mode: PyTorch
+      CUDACachingAllocator simulation, eager semantics (no fusion
+      folding, no donation, grads till zero_grad). Used by the
+      reproduction benchmarks.
+    """
+
+    def __init__(self,
+                 allocator_policy: AllocatorPolicy = CUDA_CACHING,
+                 orchestrator_policy: OrchestratorPolicy | None = None,
+                 iterations: int = 3,
+                 scan_unroll_cap: int = 3,
+                 capacity: int = 1 << 62):
+        self.allocator_policy = allocator_policy
+        self.orchestrator = MemoryOrchestrator(
+            orchestrator_policy or OrchestratorPolicy())
+        self.iterations = iterations
+        self.scan_unroll_cap = scan_unroll_cap
+        self.capacity = capacity
+
+    @classmethod
+    def for_tpu(cls, **kw) -> "XMemEstimator":
+        from .allocator import TPU_ARENA
+        kw.setdefault("allocator_policy", TPU_ARENA)
+        kw.setdefault("orchestrator_policy", OrchestratorPolicy(
+            grad_release="auto", donate_params=True, donate_opt_state=True,
+            fusion_folding=True))
+        return cls(**kw)
+
+    def calibrate(self, samples: Sequence[tuple],
+                  quantile: float = 0.9) -> float:
+        """Fit the backend transient-scale constant from (job_kwargs,
+        truth_bytes) pairs — the explicit version of the paper's Fig-6
+        calibration loop. Model-independent: one constant per backend.
+
+        ``quantile`` targets one-sided error: a scheduler pays far more
+        for an underestimate (round-2 OOM, the PEF/MCP penalty of
+        Eq. 5-7) than for slight headroom, so the default skews high —
+        the same asymmetry the paper's allocator rounding induces.
+
+        Each sample is ((fwd_bwd, params, batch, update_fn, opt_init_fn),
+        truth). Returns the fitted scale (also applied to self)."""
+        import numpy as _np
+        ratios = []
+        for (fwd_bwd, params, batch, update_fn, opt_init_fn), truth \
+                in samples:
+            rep = self.estimate_training(fwd_bwd, params, batch,
+                                         update_fn=update_fn,
+                                         opt_init_fn=opt_init_fn)
+            t_est = rep.peak_tensor_bytes - rep.persistent_bytes
+            t_true = truth - rep.persistent_bytes
+            if t_est > 0 and t_true > 0:
+                ratios.append(t_true / t_est)
+        scale = float(_np.quantile(ratios, quantile)) if ratios else 1.0
+        self.orchestrator.policy = dataclasses.replace(
+            self.orchestrator.policy, transient_scale=scale)
+        return scale
+
+    @classmethod
+    def for_torch_gpu(cls, grad_release: str = "at_update",
+                      **kw) -> "XMemEstimator":
+        kw.setdefault("allocator_policy", CUDA_CACHING)
+        kw.setdefault("orchestrator_policy", OrchestratorPolicy(
+            grad_release=grad_release, donate_params=False,
+            donate_opt_state=False, fusion_folding=False))
+        return cls(**kw)
+
+    # -- phase tracing helpers -------------------------------------------------
+    def _trace_phase(self, fn, args_with_kinds, phase, out_kinds=None):
+        flat, kinds, scopes = flatten_kinds(args_with_kinds)
+
+        def flat_fn(*leaves):
+            idx, rebuilt = 0, []
+            for tree, _, _ in args_with_kinds:
+                leaves_i, treedef = jax.tree_util.tree_flatten(tree)
+                n = len(leaves_i)
+                rebuilt.append(jax.tree_util.tree_unflatten(
+                    treedef, leaves[idx:idx + n]))
+                idx += n
+            return fn(*rebuilt)
+
+        trace, tr = trace_fn(flat_fn, *flat, arg_kinds=kinds,
+                             arg_scopes=scopes,
+                             scan_unroll_cap=self.scan_unroll_cap,
+                             phase=phase)
+        if out_kinds is not None:
+            for b, k in zip(tr.output_blocks, out_kinds):
+                b.kind = k
+        # push kinds back into the recorded alloc events
+        kind_by_bid = {b.bid: b.kind for b in tr.blocks.values()}
+        for e in trace.events:
+            e.block_kind = kind_by_bid.get(e.block_id, e.block_kind)
+        return trace, tr
+
+    @staticmethod
+    def _expand_out_kinds(example_out, kind_map: Callable) -> list[BlockKind]:
+        leaves = jax.tree_util.tree_leaves(example_out)
+        return [kind_map(i, len(leaves)) for i in range(len(leaves))]
+
+    # -- composition -------------------------------------------------------------
+    def _compose(self, fwd_tr, fwd_tracer, upd_tr, upd_tracer,
+                 init_tr, init_tracer) -> tuple[list[BlockLifecycle], dict]:
+        """Stitch per-phase traces into an N-iteration timeline."""
+        blocks: list[BlockLifecycle] = []
+        cursor = 0
+        iteration_ends: dict[int, int] = {}
+        update_start: dict[int, int] = {}
+        bwd_start: dict[int, int] = {}
+        next_bid = [0]
+
+        def fresh_bid():
+            next_bid[0] += 1
+            return next_bid[0]
+
+        def place(trace, tracer, it, phase, skip_inputs, persist_outputs,
+                  output_kind=None, drop_outputs=False):
+            nonlocal cursor
+            lcs = reconstruct_lifecycles(trace)
+            input_bids = {b.bid for b in tracer.input_blocks}
+            output_bids = {b.bid for b in tracer.output_blocks}
+            placed = []
+            for lc in lcs:
+                if lc.block_id in input_bids and skip_inputs:
+                    continue
+                is_out = lc.block_id in output_bids
+                if is_out and drop_outputs:
+                    continue
+                kind = lc.block_kind
+                if is_out and output_kind is not None:
+                    kind = output_kind
+                # persistent blocks (free_t None) stay persistent here; the
+                # orchestrator decides their real release (grads, outputs)
+                free_t = lc.free_t + cursor if lc.free_t is not None else None
+                placed.append(dataclasses.replace(
+                    lc, block_id=fresh_bid(), alloc_t=lc.alloc_t + cursor,
+                    free_t=free_t, iteration=it, phase=phase,
+                    block_kind=kind))
+            cursor += len(trace.events) + 1
+            return placed
+
+        # t=0: persistent parameter blocks (one per leaf, from fwd inputs)
+        for b in fwd_tracer.input_blocks:
+            if b.kind is BlockKind.PARAM and b.size > 0:
+                blocks.append(BlockLifecycle(
+                    fresh_bid(), b.size, 0, None, 0, Phase.INIT,
+                    "init", "params", BlockKind.PARAM))
+        cursor += 1
+
+        for it in range(self.iterations):
+            # batch data arrives
+            for b in fwd_tracer.input_blocks:
+                if b.kind is BlockKind.INPUT and b.size > 0:
+                    blocks.append(BlockLifecycle(
+                        fresh_bid(), b.size, cursor, None, it, Phase.DATA,
+                        "host_to_device", "batch", BlockKind.INPUT))
+            cursor += 1
+            bwd_start[it] = cursor
+            blocks.extend(place(fwd_tr, fwd_tracer, it,
+                                Phase.FORWARD_BACKWARD, skip_inputs=True,
+                                persist_outputs=True))
+            update_start[it] = cursor
+            if it == 0 and init_tr is not None:
+                # optimizer state materializes at the first update
+                blocks.extend(place(init_tr, init_tracer, it, Phase.OPTIMIZER,
+                                    skip_inputs=True, persist_outputs=True,
+                                    output_kind=BlockKind.OPT_STATE))
+            if upd_tr is not None:
+                blocks.extend(place(upd_tr, upd_tracer, it, Phase.OPTIMIZER,
+                                    skip_inputs=True, persist_outputs=True,
+                                    output_kind=BlockKind.OUTPUT))
+            iteration_ends[it] = cursor
+        bwd_start[self.iterations] = cursor + 1  # sentinel for last grads
+        meta = dict(iteration_ends=iteration_ends, update_start=update_start,
+                    bwd_start=bwd_start, horizon=cursor + 2)
+        return blocks, meta
+
+    # -- public API ------------------------------------------------------------------
+    def estimate_training(self,
+                          fwd_bwd_fn: Callable,     # (params, batch) -> (loss, grads)
+                          params, batch,
+                          update_fn: Callable | None = None,  # (params, grads, opt_state) -> (params, opt_state)
+                          opt_init_fn: Callable | None = None,  # params -> opt_state
+                          shard_factor_fn=None,
+                          collective_specs: Sequence[CollectiveSpec] = (),
+                          capacity: int | None = None) -> EstimateReport:
+        t0 = time.perf_counter()
+        _policy_before = self.orchestrator.policy  # restored at the end
+        try:
+            return self._estimate_training(
+                fwd_bwd_fn, params, batch, update_fn, opt_init_fn,
+                shard_factor_fn, collective_specs, capacity, t0)
+        finally:
+            self.orchestrator.policy = _policy_before
+
+    def _estimate_training(self, fwd_bwd_fn, params, batch, update_fn,
+                           opt_init_fn, shard_factor_fn, collective_specs,
+                           capacity, t0) -> EstimateReport:
+        # --- stage 1: CPU traces (paper: profile first iterations) ---
+        fwd_out_shape = jax.eval_shape(fwd_bwd_fn, params, batch)
+        n_out = len(jax.tree_util.tree_leaves(fwd_out_shape))
+        n_loss = len(jax.tree_util.tree_leaves(fwd_out_shape[0])) \
+            if isinstance(fwd_out_shape, tuple) else 1
+        fwd_out_kinds = [BlockKind.OUTPUT] * n_loss + \
+                        [BlockKind.GRAD] * (n_out - n_loss)
+        fwd_tr, fwd_tracer = self._trace_phase(
+            fwd_bwd_fn,
+            [(params, BlockKind.PARAM, "params"),
+             (batch, BlockKind.INPUT, "batch")],
+            Phase.FORWARD_BACKWARD, out_kinds=fwd_out_kinds)
+
+        init_tr = init_tracer = upd_tr = upd_tracer = None
+        opt_state = None
+        if opt_init_fn is not None:
+            opt_state = jax.eval_shape(opt_init_fn, params)
+            init_tr, init_tracer = self._trace_phase(
+                opt_init_fn, [(params, BlockKind.PARAM, "params")],
+                Phase.OPTIMIZER,
+                out_kinds=[BlockKind.OPT_STATE] * len(
+                    jax.tree_util.tree_leaves(opt_state)))
+        if update_fn is not None:
+            grads = fwd_out_shape[1] if isinstance(fwd_out_shape, tuple) \
+                else fwd_out_shape
+            upd_args = [(params, BlockKind.PARAM, "params"),
+                        (grads, BlockKind.GRAD, "grads")]
+            if opt_state is not None:
+                upd_args.append((opt_state, BlockKind.OPT_STATE, "opt_state"))
+            upd_tr, upd_tracer = self._trace_phase(
+                update_fn, upd_args, Phase.OPTIMIZER)
+
+        # --- stage 2+3: analyze & compose iterations ---
+        blocks, meta = self._compose(fwd_tr, fwd_tracer, upd_tr, upd_tracer,
+                                     init_tr, init_tracer)
+        param_sizes = frozenset(
+            b.size for b in fwd_tracer.input_blocks
+            if b.kind is BlockKind.PARAM)
+        blocks = classify_blocks(blocks, param_sizes)
+
+        # --- stage 4: orchestrate ---
+        phase_bounds = {}
+        for it, end in meta["iteration_ends"].items():
+            phase_bounds[(it, Phase.FORWARD_BACKWARD.value)] = (
+                meta["bwd_start"][it], meta["update_start"][it])
+            phase_bounds[(it, Phase.OPTIMIZER.value)] = (
+                meta["update_start"][it], end)
+        # Resolve "auto" grad release: per-leaf updates fuse into the
+        # backward under XLA (eager grad death); coupled updates (global
+        # clipping etc.) keep every grad alive until the optimizer phase.
+        if self.orchestrator.policy.grad_release == "auto":
+            mode = "eager_fused"
+            upcasts = False
+            if update_fn is not None:
+                grads_shape = fwd_out_shape[1] \
+                    if isinstance(fwd_out_shape, tuple) else fwd_out_shape
+                info = update_grad_coupling(
+                    update_fn, params, grads_shape, opt_state)
+                mode = "eager_fused" if info["coupling"] == "per_leaf" \
+                    else "at_update"
+                upcasts = info["upcasts"]
+            self.orchestrator.policy = dataclasses.replace(
+                self.orchestrator.policy, grad_release=mode,
+                optimizer_upcast_coexist=(
+                    self.orchestrator.policy.optimizer_upcast_coexist
+                    and upcasts))
+
+        # grad_release="at_next_iter" frees iteration i's gradients only
+        # when iteration i+1's update completes new ones — the
+        # grad-accumulation / zero_grad-at-start idiom (paper Fig 1 POS1);
+        # hence update_start is passed as the next-iteration release point.
+        blocks = self.orchestrator.run(
+            blocks,
+            iteration_ends=meta["iteration_ends"],
+            update_start=meta["update_start"],
+            next_bwd_start=meta["update_start"],
+            collective_specs=collective_specs,
+            phase_bounds=phase_bounds,
+            num_iterations=self.iterations,
+            shard_factor_fn=shard_factor_fn,
+        )
+
+        # --- stage 5: simulate ---
+        sim = MemorySimulator(self.allocator_policy,
+                              capacity or self.capacity).replay(blocks)
+        persistent = sum(b.sharded_size for b in blocks if b.free_t is None
+                         and b.block_kind in (BlockKind.PARAM,
+                                              BlockKind.OPT_STATE))
+        report = EstimateReport(
+            peak_bytes=sim.peak_reserved,
+            peak_tensor_bytes=sim.peak_allocated,
+            persistent_bytes=persistent,
+            oom=sim.oom,
+            sim=sim,
+            breakdown={
+                "phase_peaks": phase_peaks(blocks),
+                "num_blocks": len(blocks),
+                "liveness_peak": peak_live_bytes(blocks),
+            },
+            wall_time_s=time.perf_counter() - t0,
+            num_events=len(fwd_tr.events) + len(upd_tr.events if upd_tr else []),
+        )
+        return report
+
+    def estimate_serving(self, decode_fn: Callable, params, cache, batch,
+                         shard_factor_fn=None,
+                         collective_specs: Sequence[CollectiveSpec] = (),
+                         capacity: int | None = None) -> EstimateReport:
+        """Single-phase estimate for a decode step with a persistent cache."""
+        t0 = time.perf_counter()
+        tr, tracer = self._trace_phase(
+            decode_fn,
+            [(params, BlockKind.PARAM, "params"),
+             (cache, BlockKind.CACHE, "cache"),
+             (batch, BlockKind.INPUT, "batch")],
+            Phase.DECODE)
+        blocks = reconstruct_lifecycles(tr)
+        blocks = self.orchestrator.mark_persistent(
+            blocks, kinds=(BlockKind.PARAM, BlockKind.CACHE))
+        blocks = self.orchestrator.fold_fused(blocks)
+        if shard_factor_fn is not None:
+            blocks = self.orchestrator.apply_sharding(blocks, shard_factor_fn)
+        sim = MemorySimulator(self.allocator_policy,
+                              capacity or self.capacity).replay(blocks)
+        return EstimateReport(
+            peak_bytes=sim.peak_reserved, peak_tensor_bytes=sim.peak_allocated,
+            persistent_bytes=sum(b.sharded_size for b in blocks
+                                 if b.free_t is None),
+            oom=sim.oom, sim=sim,
+            breakdown={"num_blocks": len(blocks)},
+            wall_time_s=time.perf_counter() - t0, num_events=len(tr.events))

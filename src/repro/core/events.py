@@ -1,0 +1,198 @@
+"""Memory-event and lifecycle data structures for the xMem pipeline.
+
+These mirror the entities in the paper (§2.2, §3.2):
+
+* ``MemoryEvent`` — one allocation or deallocation, in *execution order*.
+  The paper reconstructs these from PyTorch-profiler ``cpu_instant_event``
+  rows; we emit them directly from the jaxpr interpreter (``tracer.py``)
+  or reconstruct them from an external JSON trace (``analyzer.py``).
+* ``BlockLifecycle`` — a reconstructed memory block: size + alloc/free
+  position + attribution to the operator / layer scope that produced it.
+  "Memory block" throughout this codebase refers to these entities,
+  exactly as in the paper.
+* ``Trace`` — an ordered event stream plus metadata (iteration boundaries,
+  phases), the unit of data handed between pipeline stages.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import json
+from typing import Iterable, Sequence
+
+
+class BlockKind(enum.Enum):
+    """Semantic class of a memory block (drives Orchestrator policy)."""
+
+    PARAM = "param"
+    GRAD = "grad"
+    OPT_STATE = "opt_state"
+    ACTIVATION = "activation"
+    INPUT = "input"           # batch data
+    OUTPUT = "output"         # step outputs (loss, metrics, new params)
+    TEMP = "temp"             # operator-internal scratch
+    COLLECTIVE = "collective"  # injected communication buffers (distributed)
+    CACHE = "cache"           # KV / recurrent state (serving)
+
+
+class Phase(enum.Enum):
+    """Training-loop phase an event belongs to (paper: user_annotation)."""
+
+    INIT = "init"                 # model/optimizer materialization
+    FORWARD_BACKWARD = "fwd_bwd"  # loss + gradient computation
+    OPTIMIZER = "optimizer"       # parameter/optimizer-state update
+    DECODE = "decode"             # serving decode step
+    DATA = "data"                 # host->device batch transfer
+
+
+@dataclasses.dataclass
+class MemoryEvent:
+    """One alloc/free in execution order.
+
+    ``t`` is the event's position in the stream (a logical clock — the
+    paper uses wall-clock CPU timestamps; execution order is what matters
+    for the Simulator, so a logical clock loses nothing).
+    """
+
+    kind: str              # "alloc" | "free"
+    block_id: int
+    size: int              # bytes (pre-rounding; the allocator sim rounds)
+    t: int
+    iteration: int = 0
+    phase: Phase = Phase.FORWARD_BACKWARD
+    op: str = ""           # primitive name, e.g. "dot_general"
+    scope: str = ""        # layer scope, e.g. "decoder/layers/attn/q_proj"
+    block_kind: BlockKind = BlockKind.TEMP
+
+    def to_json(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["phase"] = self.phase.value
+        d["block_kind"] = self.block_kind.value
+        return d
+
+    @staticmethod
+    def from_json(d: dict) -> "MemoryEvent":
+        d = dict(d)
+        d["phase"] = Phase(d["phase"])
+        d["block_kind"] = BlockKind(d["block_kind"])
+        return MemoryEvent(**d)
+
+
+@dataclasses.dataclass
+class BlockLifecycle:
+    """A reconstructed memory block (paper §3.2).
+
+    ``free_t is None`` → persistent for the rest of the trace (paper:
+    "blocks lacking a deallocation event are considered persistent").
+    ``shard_factor`` divides the size for per-device estimation in the
+    distributed extension (paper §6.2); 1 on a single device.
+    """
+
+    block_id: int
+    size: int
+    alloc_t: int
+    free_t: int | None
+    iteration: int = 0
+    phase: Phase = Phase.FORWARD_BACKWARD
+    op: str = ""
+    scope: str = ""
+    block_kind: BlockKind = BlockKind.TEMP
+    shard_factor: float = 1.0
+
+    @property
+    def persistent(self) -> bool:
+        return self.free_t is None
+
+    @property
+    def sharded_size(self) -> int:
+        return max(int(self.size / self.shard_factor), 1) if self.size else 0
+
+    def overlaps(self, t: int) -> bool:
+        end = self.free_t if self.free_t is not None else float("inf")
+        return self.alloc_t <= t < end
+
+
+@dataclasses.dataclass
+class Trace:
+    """Ordered event stream + metadata — the inter-stage currency."""
+
+    events: list[MemoryEvent]
+    num_iterations: int = 1
+    meta: dict = dataclasses.field(default_factory=dict)
+
+    def __len__(self) -> int:
+        return len(self.events)
+
+    def iteration_slice(self, it: int) -> list[MemoryEvent]:
+        return [e for e in self.events if e.iteration == it]
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            json.dump(
+                {
+                    "num_iterations": self.num_iterations,
+                    "meta": self.meta,
+                    "events": [e.to_json() for e in self.events],
+                },
+                f,
+            )
+
+    @staticmethod
+    def load(path: str) -> "Trace":
+        with open(path) as f:
+            d = json.load(f)
+        return Trace(
+            events=[MemoryEvent.from_json(e) for e in d["events"]],
+            num_iterations=d["num_iterations"],
+            meta=d.get("meta", {}),
+        )
+
+
+def lifecycles_to_events(blocks: Sequence[BlockLifecycle]) -> list[MemoryEvent]:
+    """Expand lifecycles back into an ordered alloc/free event stream.
+
+    Free events at the same logical time sort *before* alloc events — a
+    block freed at t must be reusable by a block allocated at t (this is
+    the paper's Fig-3 sensitivity: dealloc/alloc interleaving decides the
+    peak; ties resolve in favor of reuse, matching allocator behavior
+    where the framework frees an input before allocating the output of
+    the next op at the same trace position).
+    """
+    evs: list[tuple[int, int, MemoryEvent]] = []
+    horizon = 0
+    for b in blocks:
+        horizon = max(horizon, b.alloc_t + 1, (b.free_t or 0) + 1)
+    for b in blocks:
+        evs.append(
+            (b.alloc_t, 1, MemoryEvent(
+                "alloc", b.block_id, b.sharded_size, b.alloc_t, b.iteration,
+                b.phase, b.op, b.scope, b.block_kind))
+        )
+        if b.free_t is not None:
+            evs.append(
+                (b.free_t, 0, MemoryEvent(
+                    "free", b.block_id, b.sharded_size, b.free_t, b.iteration,
+                    b.phase, b.op, b.scope, b.block_kind))
+            )
+    evs.sort(key=lambda x: (x[0], x[1]))
+    return [e for _, _, e in evs]
+
+
+def liveness_curve(blocks: Iterable[BlockLifecycle]) -> list[tuple[int, int]]:
+    """(t, live_bytes) curve from lifecycles — the 'Tensor memory' series
+    of the paper's Fig 1/6 (segment series comes from the Simulator)."""
+    deltas: dict[int, int] = {}
+    for b in blocks:
+        deltas[b.alloc_t] = deltas.get(b.alloc_t, 0) + b.sharded_size
+        if b.free_t is not None:
+            deltas[b.free_t] = deltas.get(b.free_t, 0) - b.sharded_size
+    curve, live = [], 0
+    for t in sorted(deltas):
+        live += deltas[t]
+        curve.append((t, live))
+    return curve
+
+
+def peak_live_bytes(blocks: Iterable[BlockLifecycle]) -> int:
+    curve = liveness_curve(blocks)
+    return max((v for _, v in curve), default=0)

@@ -1,0 +1,304 @@
+"""Memory Orchestrator — stage 3 of the xMem pipeline (paper §3.3).
+
+Rewrites CPU-derived block lifecycles so they reflect the lifecycles the
+blocks will have on the *target device*. The paper's five policies map to
+JAX as follows (DESIGN.md §2):
+
+1. Model parameters  -> persistent across the analyzed iterations.
+2. Batch data        -> lives exactly one iteration.
+3. Activations       -> keep tracer-derived lifetimes (the CPU-derived
+                        interleaving approximates the device's).
+4. Gradients         -> freed per ``grad_release``: ``at_update`` frees
+                        them when the optimizer consumes them (the JAX
+                        donation idiom; paper POS0) vs ``at_next_iter``
+                        which keeps them alive until the next backward
+                        pass rewrites them (grad-accumulation buffers /
+                        ``zero_grad`` at iteration start; paper POS1 —
+                        Fig. 1's memory-doubling case).
+5. Optimizer state   -> persistent from iteration 1 onward (why the
+                        paper — and we — analyze >= 2 iterations).
+
+XLA-specific passes the original (eager PyTorch) pipeline does not need:
+
+6. donation          -> outputs aliased onto donated inputs (new params /
+                        opt state reuse the old buffers; no double count).
+7. fusion folding    -> short-lived outputs of fusible elementwise ops
+                        never materialize in HBM (XLA fuses them); they
+                        are dropped below a size threshold.
+8. collective inject -> distributed estimation (paper §6.2/6.4's
+                        "inject simulated allreduce buffers"): adds
+                        COLLECTIVE blocks for gradient reduction buckets
+                        and TP gather temporaries.
+9. sharding          -> per-device sizes via shard factors from the
+                        sharding engine.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+from .events import BlockKind, BlockLifecycle, Phase
+
+# Elementwise/layout primitives XLA reliably fuses into consumers —
+# their outputs typically never hit HBM as standalone buffers.
+FUSIBLE_OPS = frozenset({
+    "add", "sub", "mul", "div", "neg", "exp", "log", "tanh", "logistic",
+    "max", "min", "pow", "integer_pow", "sqrt", "rsqrt", "abs", "sign",
+    "convert_element_type", "select_n", "broadcast_in_dim", "reshape",
+    "transpose", "squeeze", "expand_dims", "stop_gradient", "and", "or",
+    "not", "xor", "eq", "ne", "ge", "gt", "le", "lt", "clamp", "erf",
+    "floor", "ceil", "round", "is_finite", "copy", "real", "imag",
+    "slice", "rev", "iota", "cos", "sin", "cumsum", "cumlogsumexp",
+})
+
+
+@dataclasses.dataclass
+class OrchestratorPolicy:
+    """Knobs for lifecycle rewriting."""
+
+    # "at_update"    - grads live until the optimizer phase consumes them
+    #                  (PyTorch-eager semantics; paper POS0-ish)
+    # "at_next_iter" - grads survive into the next iteration (accumulation
+    #                  buffers / zero_grad at iteration start; paper POS1)
+    # "eager_fused"  - XLA fuses per-leaf updates into the backward pass,
+    #                  so each grad dies ~immediately after production.
+    #                  Selected automatically when the update is per-leaf
+    #                  (no cross-gradient coupling such as global-norm
+    #                  clipping) — see estimator.update_grad_coupling.
+    # "auto"         - estimator picks eager_fused vs at_update by taint
+    #                  analysis of the update jaxpr.
+    grad_release: str = "auto"
+    eager_fuse_window: int = 6           # events a fused grad survives
+    donate_params: bool = True
+    donate_opt_state: bool = True
+    fusion_folding: bool = True
+    fusion_max_lifetime: int = 8          # events a fusible temp may span
+    fusion_min_bytes: int = 0             # fold regardless of size by default
+    keep_unattributed: bool = True
+    # Mixed-precision optimizers upcast each gradient to f32; observed
+    # XLA schedules materialize these working copies together across
+    # leaves during the update phase. Modeled as synthetic blocks of
+    # grad_size * upcast_factor spanning the optimizer phase (ablation
+    # benchmark quantifies the contribution).
+    optimizer_upcast_coexist: bool = True
+    upcast_factor: float = 2.0            # bf16 grads -> f32 copies
+    # Backend scheduling-slack calibration (paper's Fig-6 loop made
+    # explicit): one constant multiplying *transient* block sizes,
+    # fitted once per target backend/runtime from a small calibration
+    # set (XMemEstimator.calibrate). 1.0 = uncalibrated. Unlike
+    # data-driven estimators this is model-independent — it captures
+    # the runtime's buffering behavior, not the workload.
+    transient_scale: float = 1.0
+
+
+@dataclasses.dataclass
+class CollectiveSpec:
+    """One injected communication buffer (distributed estimation)."""
+
+    name: str
+    size: int              # bytes per device
+    phase: Phase
+    at: str = "phase_start"  # or "phase_end"
+    persistent: bool = False
+
+
+class MemoryOrchestrator:
+    def __init__(self, policy: OrchestratorPolicy | None = None):
+        self.policy = policy or OrchestratorPolicy()
+
+    # -- individual passes ---------------------------------------------------
+    def mark_persistent(self, blocks: list[BlockLifecycle],
+                        kinds=(BlockKind.PARAM, BlockKind.OPT_STATE)
+                        ) -> list[BlockLifecycle]:
+        return [dataclasses.replace(b, free_t=None)
+                if b.block_kind in kinds else b for b in blocks]
+
+    def batch_per_iteration(self, blocks: list[BlockLifecycle],
+                            iteration_ends: dict[int, int]
+                            ) -> list[BlockLifecycle]:
+        """INPUT blocks die at their iteration's boundary marker."""
+        out = []
+        for b in blocks:
+            if b.block_kind is BlockKind.INPUT:
+                end = iteration_ends.get(b.iteration)
+                if end is not None:
+                    b = dataclasses.replace(b, free_t=end)
+            out.append(b)
+        return out
+
+    def release_gradients(self, blocks: list[BlockLifecycle],
+                          update_start: dict[int, int],
+                          next_bwd_start: dict[int, int]
+                          ) -> list[BlockLifecycle]:
+        """Apply grad_release (the paper's zero_grad-placement semantics)."""
+        out = []
+        for b in blocks:
+            # Only *persistent* GRAD blocks are true gradient outputs whose
+            # release the framework controls; GRAD-classified backward
+            # intermediates keep their tracer-derived lifetimes.
+            if b.block_kind is BlockKind.GRAD and b.free_t is None:
+                mode = self.policy.grad_release
+                if mode in ("auto",):  # estimator resolves auto; fall back
+                    mode = "at_update"
+                if mode == "eager_fused":
+                    us = update_start.get(b.iteration)
+                    if b.op == "scan_ys":
+                        # stacked-layer grads are backward-scan output
+                        # buffers accumulated across the whole loop —
+                        # they cannot die before the update consumes them
+                        t = us
+                    else:
+                        t = b.alloc_t + self.policy.eager_fuse_window
+                        if us is not None:
+                            t = min(t, us)
+                elif mode == "at_update":
+                    t = update_start.get(b.iteration)
+                else:  # at_next_iter: grads survive into the next iteration
+                    t = next_bwd_start.get(b.iteration + 1)
+                b = dataclasses.replace(b, free_t=t)  # None -> persistent
+            out.append(b)
+        return out
+
+    def apply_donation(self, blocks: list[BlockLifecycle]
+                       ) -> list[BlockLifecycle]:
+        """Drop OUTPUT blocks that alias donated persistent inputs.
+
+        With ``donate_argnums`` the updated params/opt-state are written
+        into the old buffers; a simulator that allocates both
+        double-counts — the classic over-estimation DNNMem-style static
+        analysis exhibits (evaluated in benchmarks/ablation).
+        """
+        if not (self.policy.donate_params or self.policy.donate_opt_state):
+            return blocks
+        persistent_sizes: dict[int, int] = {}
+        for b in blocks:
+            if b.block_kind in (BlockKind.PARAM, BlockKind.OPT_STATE) \
+                    and b.free_t is None:
+                persistent_sizes[b.size] = persistent_sizes.get(b.size, 0) + 1
+        # every iteration's update writes into the same donated buffers, so
+        # the aliasing budget applies per iteration, not once for the trace
+        budgets: dict[int, dict[int, int]] = {}
+        out = []
+        for b in blocks:
+            if b.block_kind is BlockKind.OUTPUT:
+                budget = budgets.setdefault(b.iteration,
+                                            dict(persistent_sizes))
+                if budget.get(b.size, 0) > 0:
+                    budget[b.size] -= 1
+                    continue  # aliased: no new allocation
+            out.append(b)
+        return out
+
+    def fold_fused(self, blocks: list[BlockLifecycle]) -> list[BlockLifecycle]:
+        """Drop blocks XLA fusion would never materialize."""
+        if not self.policy.fusion_folding:
+            return blocks
+        p = self.policy
+        out = []
+        for b in blocks:
+            if (b.op in FUSIBLE_OPS
+                    and b.free_t is not None
+                    and (b.free_t - b.alloc_t) <= p.fusion_max_lifetime
+                    and b.size >= p.fusion_min_bytes
+                    and b.block_kind in (BlockKind.ACTIVATION, BlockKind.TEMP)):
+                continue
+            out.append(b)
+        return out
+
+    def inject_optimizer_upcasts(self, blocks: list[BlockLifecycle],
+                                 update_start: dict[int, int],
+                                 iteration_ends: dict[int, int]
+                                 ) -> list[BlockLifecycle]:
+        """Synthetic f32 working copies of gradients during the update."""
+        if not self.policy.optimizer_upcast_coexist:
+            return blocks
+        out = list(blocks)
+        bid = -100_000
+        for b in blocks:
+            if b.block_kind is not BlockKind.GRAD:
+                continue
+            us = update_start.get(b.iteration)
+            end = iteration_ends.get(b.iteration)
+            if us is None or end is None or us >= end:
+                continue
+            # only true gradient outputs (freed at/after update start)
+            if b.free_t is not None and b.free_t < us:
+                continue
+            out.append(BlockLifecycle(
+                bid, int(b.size * self.policy.upcast_factor), us, end,
+                b.iteration, Phase.OPTIMIZER, "grad_upcast", b.scope,
+                BlockKind.TEMP, b.shard_factor))
+            bid -= 1
+        return out
+
+    def inject_collectives(self, blocks: list[BlockLifecycle],
+                           specs: Sequence[CollectiveSpec],
+                           phase_bounds: dict[tuple[int, str], tuple[int, int]],
+                           num_iterations: int) -> list[BlockLifecycle]:
+        """Add COLLECTIVE buffers at phase starts/ends per iteration."""
+        if not specs:
+            return blocks
+        out = list(blocks)
+        bid = -1  # negative ids: synthetic blocks
+        for it in range(num_iterations):
+            for s in specs:
+                key = (it, s.phase.value)
+                if key not in phase_bounds:
+                    continue
+                start, end = phase_bounds[key]
+                t0 = start if s.at == "phase_start" else end
+                out.append(BlockLifecycle(
+                    bid, s.size, t0, None if s.persistent else end,
+                    it, s.phase, "collective", s.name, BlockKind.COLLECTIVE))
+                bid -= 1
+        return out
+
+    def apply_transient_scale(self, blocks: list[BlockLifecycle]
+                              ) -> list[BlockLifecycle]:
+        """Scale transient (non-persistent, non-input) blocks by the
+        backend calibration constant."""
+        s = self.policy.transient_scale
+        if s == 1.0:
+            return blocks
+        out = []
+        for b in blocks:
+            if b.free_t is not None and b.block_kind in (
+                    BlockKind.ACTIVATION, BlockKind.TEMP, BlockKind.GRAD):
+                b = dataclasses.replace(b, size=int(b.size * s))
+            out.append(b)
+        return out
+
+    def apply_sharding(self, blocks: list[BlockLifecycle],
+                       factor_fn: Callable[[BlockLifecycle], float]
+                       ) -> list[BlockLifecycle]:
+        return [dataclasses.replace(b, shard_factor=max(factor_fn(b), 1.0))
+                for b in blocks]
+
+    # -- composite ------------------------------------------------------------
+    def run(self, blocks: list[BlockLifecycle], *,
+            iteration_ends: dict[int, int] | None = None,
+            update_start: dict[int, int] | None = None,
+            next_bwd_start: dict[int, int] | None = None,
+            collective_specs: Sequence[CollectiveSpec] = (),
+            phase_bounds: dict | None = None,
+            num_iterations: int = 1,
+            shard_factor_fn: Callable[[BlockLifecycle], float] | None = None,
+            ) -> list[BlockLifecycle]:
+        blocks = self.mark_persistent(blocks)
+        if iteration_ends:
+            blocks = self.batch_per_iteration(blocks, iteration_ends)
+        if update_start is not None:
+            blocks = self.release_gradients(blocks, update_start,
+                                            next_bwd_start or {})
+            if iteration_ends:
+                blocks = self.inject_optimizer_upcasts(
+                    blocks, update_start, iteration_ends)
+        blocks = self.apply_donation(blocks)
+        blocks = self.fold_fused(blocks)
+        blocks = self.apply_transient_scale(blocks)
+        if collective_specs and phase_bounds:
+            blocks = self.inject_collectives(blocks, collective_specs,
+                                             phase_bounds, num_iterations)
+        if shard_factor_fn is not None:
+            blocks = self.apply_sharding(blocks, shard_factor_fn)
+        return blocks

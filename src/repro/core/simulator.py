@@ -1,0 +1,79 @@
+"""Memory Simulator — final stage of the xMem pipeline (paper §3.4).
+
+Replays the orchestrated block lifecycles chronologically through the
+two-level allocator simulation and reports:
+
+* estimated peak memory (reserved *segments* — the quantity a scheduler
+  must budget, paper §2.2.2),
+* peak allocated (tensor) bytes — the naive lower bound,
+* the full usage curve over time (paper's optional output, used for the
+  Fig.-6-style fidelity benchmark),
+* OOM verdict for a given capacity — OOM fires only when both simulated
+  levels fail after cache reclaim, mirroring the real chain.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+from .allocator import (AllocatorPolicy, CachingAllocatorSim, CUDA_CACHING,
+                        DeviceAllocatorSim, SimOOMError)
+from .events import BlockLifecycle, lifecycles_to_events
+
+
+@dataclasses.dataclass
+class SimResult:
+    peak_reserved: int            # the estimate a scheduler budgets
+    peak_allocated: int           # sum-of-live-tensors peak (naive bound)
+    oom: bool
+    oom_at: int | None            # event index of OOM, if any
+    curve: list[tuple[int, int, int]]   # (t, allocated, reserved)
+    stats: dict
+    segments: list[dict]          # final segment map (fidelity plots)
+
+    @property
+    def fragmentation_overhead(self) -> float:
+        if not self.peak_allocated:
+            return 0.0
+        return self.peak_reserved / self.peak_allocated - 1.0
+
+
+class MemorySimulator:
+    def __init__(self, policy: AllocatorPolicy = CUDA_CACHING,
+                 capacity: int = 1 << 62):
+        self.policy = policy
+        self.capacity = capacity
+
+    def replay(self, blocks: Sequence[BlockLifecycle]) -> SimResult:
+        events = lifecycles_to_events(blocks)
+        device = DeviceAllocatorSim(self.capacity, self.policy.device_page)
+        sim = CachingAllocatorSim(self.policy, device)
+        handles: dict[int, int] = {}
+        oom, oom_at = False, None
+        for i, e in enumerate(events):
+            try:
+                if e.kind == "alloc":
+                    if e.size <= 0:
+                        continue
+                    handles[e.block_id] = sim.malloc(e.size, t=e.t)
+                else:
+                    h = handles.pop(e.block_id, None)
+                    if h is not None:
+                        sim.free(h, t=e.t)
+            except SimOOMError:
+                oom, oom_at = True, i
+                break
+        return SimResult(
+            peak_reserved=sim.peak_reserved,
+            peak_allocated=sim.peak_allocated,
+            oom=oom,
+            oom_at=oom_at,
+            curve=sim.timeline,
+            stats=sim.stats(),
+            segments=sim.segments_snapshot(),
+        )
+
+    def would_oom(self, blocks: Sequence[BlockLifecycle],
+                  capacity: int) -> bool:
+        """Two-level OOM verdict at a specific capacity (PEF round 2)."""
+        return MemorySimulator(self.policy, capacity).replay(blocks).oom

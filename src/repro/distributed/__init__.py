@@ -1,0 +1,8 @@
+"""Distribution: sharding rule engine + collective sizing."""
+from .sharding import (ShardingPolicy, batch_shardings, cache_shardings,
+                       opt_state_shardings, param_shardings, shard_factor_fn,
+                       spec_for_path)
+
+__all__ = ["ShardingPolicy", "batch_shardings", "cache_shardings",
+           "opt_state_shardings", "param_shardings", "shard_factor_fn",
+           "spec_for_path"]

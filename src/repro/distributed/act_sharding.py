@@ -1,0 +1,77 @@
+"""Activation sharding constraints via logical axis names.
+
+GSPMD propagates weight shardings to most activations, but a few tensors
+need explicit anchors — above all the [B, S, V] logits: without a
+constraint the loss computation can pull a replicated copy (52 GiB/device
+at 200k vocab). Model code calls ``constrain(x, ("batch", None,
+"vocab"))`` with *logical* names; the launcher binds them to mesh axes
+for the duration of tracing (contextvar — no-op outside a bound scope,
+so smoke tests and single-device runs are untouched).
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_BINDING: contextvars.ContextVar = contextvars.ContextVar(
+    "logical_axis_binding", default=None)
+
+
+@contextlib.contextmanager
+def logical_axis_rules(mesh: Mesh, rules: dict[str, tuple[str, ...] | str]):
+    """Bind logical names ('batch', 'vocab', 'model', 'seq') to mesh axes.
+
+    Rules values may name axes absent from the mesh — they're filtered,
+    so the same rule set serves single-pod and multi-pod meshes.
+    """
+    filtered = {}
+    for name, axes in rules.items():
+        if isinstance(axes, str):
+            axes = (axes,)
+        axes = tuple(a for a in axes if a in mesh.axis_names)
+        filtered[name] = axes if len(axes) != 1 else axes[0]
+    token = _BINDING.set((mesh, filtered))
+    try:
+        yield
+    finally:
+        _BINDING.reset(token)
+
+
+DEFAULT_RULES = {
+    "batch": ("pod", "data"),
+    "vocab": ("model",),
+    "model": ("model",),
+    "heads": ("model",),
+    "seq": (),
+}
+
+
+def constrain(x, logical_dims: tuple):
+    """Apply a sharding constraint by logical dim names (None = any)."""
+    bound = _BINDING.get()
+    if bound is None:
+        return x
+    mesh, rules = bound
+    spec = []
+    for i, d in enumerate(logical_dims):
+        if d is None:
+            spec.append(None)
+            continue
+        axes = rules.get(d, ())
+        if not axes:
+            spec.append(None)
+            continue
+        # divisibility guard
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        total = 1
+        for a in (axes if isinstance(axes, tuple) else (axes,)):
+            total *= sizes[a]
+        if x.shape[i] % total:
+            spec.append(None)
+        else:
+            spec.append(axes)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*spec)))

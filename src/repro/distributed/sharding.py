@@ -1,0 +1,286 @@
+"""Sharding rule engine: per-tensor PartitionSpecs with divisibility-aware
+fallback (DESIGN.md §5).
+
+Layout strategy (Megatron-style TP + DP/FSDP + EP):
+* attention qkv: column-parallel on ``model``; output proj row-parallel;
+* MLP gate/up column-parallel, down row-parallel;
+* MoE expert stacks sharded on the expert dim over ``model`` (EP);
+* embedding sharded on vocab over ``model`` (falls back to d_model when
+  vocab isn't divisible — e.g. internvl2's 151655); LM head sharded on
+  vocab (keeps the [B,S,V] logits tensor vocab-sharded — materializing
+  unsharded 32k x 152k logits would be terabytes);
+* Mamba/xLSTM inner dims column/row-parallel like MLPs;
+* batch dims of activations/inputs sharded over ``(pod, data)``;
+* FSDP (``fsdp=True``): the largest remaining unsharded weight dim is
+  additionally sharded over the fsdp axes — ZeRO-3-style parameter
+  sharding, required to fit the 398B/1T configs;
+* every rule checks divisibility: if a dim doesn't divide the axis size
+  the axis is dropped for that dim (replicated) rather than failing.
+
+The same rules produce the xMem estimator's per-block ``shard_factor``
+(paper §6.2 distributed extension).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingPolicy:
+    fsdp: bool = False                  # ZeRO-3 param sharding over data
+    fsdp_axes: tuple[str, ...] = ("data",)
+    batch_axes: tuple[str, ...] = ("pod", "data")
+    model_axis: str = "model"
+
+
+# (path regex, spec template for the LAST n dims of the tensor)
+# "M" = model axis, "F" = fsdp candidate preference marker, None = replicated
+_RULES: list[tuple[str, tuple]] = [
+    # templates bind to TRAILING dims, so ("M", None) covers both the
+    # [V, D] text embedding and the [K, V, D] audio codebook stack
+    (r"\['embed'\]$", ("M", None)),        # vocab-sharded embedding
+    (r"\['head'\]$", (None, "M")),         # [D, V] vocab-sharded logits
+    (r"\['attn'\]\['wq'\]", (None, "M")),
+    (r"\['attn'\]\['wk'\]", (None, "M")),
+    (r"\['attn'\]\['wv'\]", (None, "M")),
+    (r"\['attn'\]\['wo'\]", ("M", None)),
+    (r"\['mlp'\]\['w_gate'\]", (None, "M")),
+    (r"\['mlp'\]\['w_up'\]", (None, "M")),
+    (r"\['mlp'\]\['w_down'\]", ("M", None)),
+    (r"\['moe'\]\['router'\]", (None, None)),        # replicated router
+    (r"\['moe'\]\['we_gate'\]", ("M", None, None)),  # EP on expert dim
+    (r"\['moe'\]\['we_up'\]", ("M", None, None)),
+    (r"\['moe'\]\['we_down'\]", ("M", None, None)),
+    (r"\['mamba'\]\['in_proj'\]", (None, "M")),
+    (r"\['mamba'\]\['out_proj'\]", ("M", None)),
+    (r"\['mamba'\]\['conv_w'\]", (None, "M")),
+    (r"\['mamba'\]\['conv_b'\]", ("M",)),
+    (r"\['mamba'\]\['x_proj'\]", ("M", None)),
+    (r"\['mamba'\]\['dt_proj'\]", (None, "M")),
+    (r"\['mamba'\]\['dt_bias'\]", ("M",)),
+    (r"\['mamba'\]\['A_log'\]", ("M", None)),
+    (r"\['mamba'\]\['D'\]", ("M",)),
+    (r"\['(wq|wk)'\]", (None, "M")),       # xlstm mLSTM projections
+    (r"\['wv'\]", (None, "M")),
+    (r"\['w_gate'\]", (None, "M")),
+    (r"\['w_out'\]", ("M", None)),
+    (r"\['w_(z|i|f|o)'\]", (None, "M")),   # sLSTM input mats
+    (r"\['r_(z|i|f|o)'\]", (None, None, None)),  # block-diag recurrent
+]
+
+
+def _axis_size(mesh, name: str) -> int:
+    if isinstance(mesh, dict):     # {axis: size} — estimator-side use
+        return mesh.get(name, 1)
+    return dict(zip(mesh.axis_names, mesh.devices.shape)).get(name, 1)
+
+
+def _fits(dim: int, mesh: Mesh, axes) -> bool:
+    total = 1
+    for a in (axes if isinstance(axes, tuple) else (axes,)):
+        total *= _axis_size(mesh, a)
+    return dim % total == 0 and dim >= total
+
+
+def spec_for_path(path: str, shape: tuple, mesh: Mesh,
+                  policy: ShardingPolicy) -> P:
+    """Resolve the PartitionSpec for one parameter leaf."""
+    template = None
+    for pat, tmpl in _RULES:
+        if re.search(pat, path):
+            template = tmpl
+            break
+    nd = len(shape)
+    spec: list = [None] * nd
+    if template is not None:
+        # template binds to the trailing dims (stacked scan dims lead)
+        k = min(len(template), nd)
+        for i in range(k):
+            t = template[len(template) - k + i]
+            dim_idx = nd - k + i
+            if t == "M" and policy.model_axis in mesh.axis_names \
+                    and _fits(shape[dim_idx], mesh, policy.model_axis):
+                spec[dim_idx] = policy.model_axis
+        # vocab-shard fallback: embed [V, D] with V not divisible by the
+        # model axis (internvl2's 151655) -> shard d_model instead
+        if re.search(r"\['embed'\]$", path) and nd >= 2 \
+                and spec[nd - 2] is None and template[-2] == "M" \
+                and _fits(shape[nd - 1], mesh, policy.model_axis):
+            spec[nd - 1] = policy.model_axis
+    if policy.fsdp:
+        axes = tuple(a for a in policy.fsdp_axes if a in mesh.axis_names)
+        if axes:
+            # shard the largest remaining unsharded dim over fsdp axes
+            cands = [(shape[i], i) for i in range(nd)
+                     if spec[i] is None and _fits(shape[i], mesh, axes)]
+            if cands:
+                _, idx = max(cands)
+                spec[idx] = axes if len(axes) > 1 else axes[0]
+    return P(*spec)
+
+
+def param_shardings(abstract_params, cfg: ModelConfig, mesh: Mesh,
+                    policy: ShardingPolicy | None = None):
+    """Pytree of NamedShardings aligned with the abstract param tree."""
+    policy = policy or ShardingPolicy()
+    flat, treedef = jax.tree_util.tree_flatten_with_path(abstract_params)
+    out = []
+    for key_path, leaf in flat:
+        path = jax.tree_util.keystr(key_path)
+        spec = spec_for_path(path, leaf.shape, mesh, policy)
+        out.append(NamedSharding(mesh, spec))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def batch_shardings(batch_specs, mesh: Mesh,
+                    policy: ShardingPolicy | None = None):
+    """Inputs: batch dim sharded over (pod, data)."""
+    policy = policy or ShardingPolicy()
+    axes = tuple(a for a in policy.batch_axes if a in mesh.axis_names)
+
+    def spec(leaf):
+        nd = len(leaf.shape)
+        if nd == 0 or not axes or not _fits(leaf.shape[0], mesh, axes):
+            return NamedSharding(mesh, P())
+        s = [axes if len(axes) > 1 else axes[0]] + [None] * (nd - 1)
+        return NamedSharding(mesh, P(*s))
+
+    return jax.tree_util.tree_map(spec, batch_specs)
+
+
+def opt_state_shardings(abstract_opt_state, mesh: Mesh,
+                        policy: ShardingPolicy | None = None):
+    """Optimizer state sharding: the largest divisible dim goes on the
+    model axis and (with fsdp, or ZeRO-1 style regardless for 2D+ states)
+    the next largest on the data axes — m/v mirror their parameter's
+    dominant-dim layout; factored Adafactor rows/cols and scalar counters
+    degrade gracefully to replication."""
+    policy = policy or ShardingPolicy()
+    fsdp_axes = tuple(a for a in policy.fsdp_axes if a in mesh.axis_names)
+
+    def spec(leaf):
+        shape = getattr(leaf, "shape", ())
+        nd = len(shape)
+        if nd == 0:
+            return NamedSharding(mesh, P())
+        s: list = [None] * nd
+        order = sorted(range(nd), key=lambda i: -shape[i])
+        for i in order:
+            if policy.model_axis in mesh.axis_names \
+                    and _fits(shape[i], mesh, policy.model_axis):
+                s[i] = policy.model_axis
+                break
+        if fsdp_axes:
+            for i in order:
+                if s[i] is None and _fits(shape[i], mesh, fsdp_axes):
+                    s[i] = fsdp_axes if len(fsdp_axes) > 1 else fsdp_axes[0]
+                    break
+        return NamedSharding(mesh, P(*s))
+
+    return jax.tree_util.tree_map(spec, abstract_opt_state)
+
+
+# decode-state layouts by cache key: (batch_dim, model_dim_candidates)
+# model_dim_candidates are tried in order with divisibility checks;
+# for k/v the sequence dim (context parallelism) is the fallback when
+# GQA kv-head counts (2-24) don't divide the 16-way model axis.
+_CACHE_LAYOUTS = {
+    "k": (1, (3, 2)),            # [L, B, S, Hkv, hd]: B; Hkv else S
+    "v": (1, (3, 2)),
+    "mamba_h": (2, (3,)),        # [P, n, B, d_inner, N]: B; d_inner
+    "mamba_conv": (2, (4,)),     # [P, n, B, K, d_inner]: B; d_inner
+    "mlstm_C": (2, (5, 4)),      # [P, n, B, H, dk, dv]: B; dv else dk
+    "mlstm_n": (2, (4,)),        # [P, n, B, H, dk]: B; dk
+    "mlstm_m": (2, ()),          # [P, n, B, H]: B
+    "slstm": (2, (3,)),          # [P, 4, B, D]: B; D
+}
+
+
+def cache_spec_for(path: str, shape: tuple, mesh,
+                   policy: ShardingPolicy | None = None) -> P:
+    """PartitionSpec for one decode-state leaf (layouts above): batch
+    over (pod, data); the widest feature dim over model; KV caches fall
+    back to sequence (context-parallel) sharding when kv-heads don't
+    divide — an unsharded 32k-512k cache would be tens of GB/device."""
+    policy = policy or ShardingPolicy()
+    axis_names = mesh.keys() if isinstance(mesh, dict) else mesh.axis_names
+    baxes = tuple(a for a in policy.batch_axes if a in axis_names)
+    bspec = baxes if len(baxes) > 1 else (baxes[0] if baxes else None)
+    nd = len(shape)
+    s: list = [None] * nd
+    layout = None
+    for name, lay in _CACHE_LAYOUTS.items():
+        if f"'{name}'" in path:
+            layout = lay
+            break
+    if layout is not None:
+        bdim, mdims = layout
+        if bdim < nd and bspec is not None \
+                and _fits(shape[bdim], mesh, baxes):
+            s[bdim] = bspec
+        if policy.model_axis in axis_names:
+            for md in mdims:
+                if md < nd and s[md] is None \
+                        and _fits(shape[md], mesh, policy.model_axis):
+                    s[md] = policy.model_axis
+                    break
+    return P(*s)
+
+
+def cache_shardings(abstract_cache, mesh: Mesh,
+                    policy: ShardingPolicy | None = None):
+    """NamedShardings for a decode-state pytree (see cache_spec_for)."""
+    policy = policy or ShardingPolicy()
+    flat, treedef = jax.tree_util.tree_flatten_with_path(abstract_cache)
+    out = [NamedSharding(mesh, cache_spec_for(
+        jax.tree_util.keystr(kp), leaf.shape, mesh, policy))
+        for kp, leaf in flat]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+# ---------------------------------------------------------------------------
+def shard_factor_fn(cfg: ModelConfig, mesh: Mesh,
+                    policy: ShardingPolicy | None = None):
+    """xMem hook: BlockLifecycle -> division factor for per-device sizes.
+
+    Params/grads/opt-state: actual sharding factor from the rules
+    (model x fsdp). Activations/inputs: batch axes. Collectives:
+    unsharded (already per-device)."""
+    from ..core.events import BlockKind
+    policy = policy or ShardingPolicy()
+    model = _axis_size(mesh, policy.model_axis)
+    data = 1
+    for a in policy.batch_axes:
+        data *= _axis_size(mesh, a)
+    fsdp = 1
+    if policy.fsdp:
+        for a in policy.fsdp_axes:
+            fsdp *= _axis_size(mesh, a)
+
+    # Large intermediates (FFN/expert projections, logits) inherit the
+    # model-axis sharding of the weights that produce them via GSPMD
+    # propagation; small ones (norms, gates) typically stay data-sharded
+    # only. 64 MiB global is the empirical crossover on these configs.
+    big_activation = 64 * 2**20
+
+    def factor(block) -> float:
+        k = block.block_kind
+        if k in (BlockKind.PARAM, BlockKind.GRAD, BlockKind.OPT_STATE,
+                 BlockKind.OUTPUT):
+            return float(model * fsdp)
+        if k in (BlockKind.ACTIVATION, BlockKind.TEMP, BlockKind.CACHE):
+            if block.size >= big_activation:
+                return float(data * model)
+            return float(data)
+        if k is BlockKind.INPUT:
+            return float(data)
+        return 1.0
+
+    return factor

@@ -1,0 +1,5 @@
+"""Pallas TPU kernels (validated in interpret mode on CPU)."""
+from . import ops, ref
+from .flash_attention import flash_attention_bhsd
+
+__all__ = ["ops", "ref", "flash_attention_bhsd"]

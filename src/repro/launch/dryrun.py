@@ -1,0 +1,332 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST run before any other import (jax locks the
+device count at first init) — this is why the docstring sits below them.
+
+Per cell this script:
+  1. builds the production mesh (16x16 single-pod / 2x16x16 multi-pod);
+  2. materializes abstract params / optimizer state / batch as sharded
+     ShapeDtypeStructs (zero allocation);
+  3. ``jax.jit(step).lower(...).compile()`` — success proves the
+     sharding config is coherent end-to-end;
+  4. prints ``memory_analysis()`` (does it fit?) and ``cost_analysis()``
+     (FLOPs/bytes for the roofline);
+  5. parses the optimized HLO for collective operand bytes;
+  6. writes a JSON artifact consumed by benchmarks/roofline.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-32b \
+      --shape train_4k [--multi-pod] [--out artifacts/dryrun]
+  PYTHONPATH=src python -m repro.launch.dryrun --all
+"""
+import argparse     # noqa: E402
+import dataclasses  # noqa: E402
+import json         # noqa: E402
+import re           # noqa: E402
+import time         # noqa: E402
+import traceback    # noqa: E402
+
+import jax          # noqa: E402
+
+from ..configs import get_config                          # noqa: E402
+from ..configs.base import (SHAPES_BY_NAME, ShapeSpec,    # noqa: E402
+                            supports_long_context)
+from ..configs.registry import (abstract_cache,           # noqa: E402
+                                decode_input_specs, input_specs)
+from ..distributed.act_sharding import (DEFAULT_RULES,    # noqa: E402
+                                        logical_axis_rules)
+from ..distributed.sharding import (ShardingPolicy,       # noqa: E402
+                                    batch_shardings, cache_shardings,
+                                    opt_state_shardings, param_shardings)
+from ..models import model as M                           # noqa: E402
+from ..train.train_step import (TrainPolicy,              # noqa: E402
+                                make_serve_step, make_train_step)
+from .analytic import analytic_bytes, analytic_flops     # noqa: E402
+from .hlo_analysis import collective_bytes as hlo_collective_bytes  # noqa: E402
+from .mesh import make_production_mesh, mesh_axis_sizes   # noqa: E402
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+# ---------------------------------------------------------------------------
+def arch_train_policy(arch: str, cfg) -> TrainPolicy:
+    """Per-arch training policy a real team would pick at this scale."""
+    n = cfg.param_count()
+    if n > 80e9:
+        return TrainPolicy(optimizer="adafactor", microbatches=8,
+                           clip_norm=1.0)
+    if n > 8e9:
+        return TrainPolicy(optimizer="adamw", microbatches=4, clip_norm=1.0)
+    return TrainPolicy(optimizer="adamw", microbatches=1, clip_norm=1.0)
+
+
+def arch_sharding_policy(cfg, mesh) -> ShardingPolicy:
+    axes = ("data", "pod") if "pod" in mesh.axis_names else ("data",)
+    fsdp = cfg.param_count() > 8e9     # ZeRO-3 for everything sizable
+    return ShardingPolicy(fsdp=fsdp, fsdp_axes=axes,
+                          batch_axes=tuple(a for a in ("pod", "data")
+                                           if a in mesh.axis_names))
+
+
+def _with_moe_groups(cfg, mesh):
+    if cfg.moe is None:
+        return cfg
+    sizes = mesh_axis_sizes(mesh)
+    groups = sizes.get("data", 1) * sizes.get("pod", 1)
+    return dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, num_groups=groups))
+
+
+def _sds(tree, shardings):
+    """Attach shardings to ShapeDtypeStructs."""
+    return jax.tree_util.tree_map(
+        lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=s),
+        tree, shardings)
+
+
+# ---------------------------------------------------------------------------
+def collective_bytes_from_hlo(hlo_text: str) -> dict:
+    """Sum operand bytes of collective ops in optimized HLO.
+
+    Builds a name->result-bytes table in one pass, then resolves each
+    collective's operand names; falls back to the collective's own result
+    shape when an operand is unresolvable.
+    """
+    dtype_bytes = {
+        "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1,
+        "f8e5m2": 1, "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8,
+        "u32": 4, "u16": 2, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+    }
+
+    def shape_bytes(ty: str, dims: str) -> int:
+        n = 1
+        for d in dims.split(","):
+            d = d.strip()
+            if d:
+                n *= int(d)
+        return n * dtype_bytes.get(ty, 4)
+
+    name_bytes: dict[str, int] = {}
+    result_re = re.compile(
+        r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(?:\()?([a-z0-9]+)\[([\d,\s]*)\]")
+    tuple_re = re.compile(r"([a-z0-9]+)\[([\d,\s]*)\]")
+    for line in hlo_text.splitlines():
+        m = result_re.match(line)
+        if m:
+            name = m.group(1)
+            if line.split("=", 1)[1].lstrip().startswith("("):
+                # tuple result: sum element sizes
+                rhs = line.split("=", 1)[1]
+                paren = rhs[:rhs.find(")") + 1]
+                total = sum(shape_bytes(t, d)
+                            for t, d in tuple_re.findall(paren))
+                name_bytes[name] = total
+            else:
+                name_bytes[name] = shape_bytes(m.group(2), m.group(3))
+
+    out = {c: 0 for c in COLLECTIVES}
+    count = {c: 0 for c in COLLECTIVES}
+    op_re = re.compile(r"(" + "|".join(COLLECTIVES) + r")(?:-start|-done)?\(")
+    for line in hlo_text.splitlines():
+        m = op_re.search(line)
+        if not m or "-done(" in line:
+            continue  # count each start/fused op once
+        kind = m.group(1)
+        args = line[m.end():]
+        depth, j = 1, 0
+        while j < len(args) and depth:
+            if args[j] == "(":
+                depth += 1
+            elif args[j] == ")":
+                depth -= 1
+            j += 1
+        operand_names = re.findall(r"%?([\w.\-]+)", args[:j - 1])
+        total = sum(name_bytes.get(n, 0) for n in operand_names)
+        if total == 0:
+            rm = result_re.match(line)
+            if rm:
+                total = name_bytes.get(rm.group(1), 0)
+        out[kind] += total
+        count[kind] += 1
+    return {"bytes": out, "count": count,
+            "total_bytes": sum(out.values())}
+
+
+# ---------------------------------------------------------------------------
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             out_dir: str = "artifacts/dryrun",
+             skip_existing: bool = True) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    mesh_tag = "pod2x16x16" if multi_pod else "pod16x16"
+    path = os.path.join(out_dir, f"{arch}__{shape_name}__{mesh_tag}.json")
+    if skip_existing and os.path.exists(path):
+        with open(path) as f:
+            return json.load(f)
+
+    cfg = get_config(arch)
+    shape = SHAPES_BY_NAME[shape_name]
+    record = {"arch": arch, "shape": shape_name, "mesh": mesh_tag,
+              "ok": False}
+    if shape.name == "long_500k" and not supports_long_context(cfg):
+        record.update(skipped=True, reason="full-attention arch: "
+                      "long_500k requires sub-quadratic family "
+                      "(DESIGN.md §4)")
+        _write(path, record)
+        return record
+
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        cfg = _with_moe_groups(cfg, mesh)
+        spolicy = arch_sharding_policy(cfg, mesh)
+        record["sharding"] = {"fsdp": spolicy.fsdp}
+        aparams = M.abstract_params(cfg)
+        pshard = param_shardings(aparams, cfg, mesh, spolicy)
+        params_s = _sds(aparams, pshard)
+
+        if shape.kind == "train":
+            tpolicy = arch_train_policy(arch, cfg)
+            record["train_policy"] = {
+                "optimizer": tpolicy.optimizer,
+                "microbatches": tpolicy.microbatches}
+            step, opt = make_train_step(cfg, tpolicy)
+            aopt = jax.eval_shape(opt.init, aparams)
+            oshard = opt_state_shardings(aopt, mesh, spolicy)
+            opt_s = _sds(aopt, oshard)
+            bspecs = input_specs(cfg, shape)
+            bshard = batch_shardings(bspecs, mesh, spolicy)
+            batch_s = _sds(bspecs, bshard)
+            with mesh, logical_axis_rules(mesh, DEFAULT_RULES):
+                lowered = jax.jit(step, donate_argnums=(0, 1)).lower(
+                    params_s, opt_s, batch_s)
+                compiled = lowered.compile()
+        elif shape.kind == "prefill":
+            from ..train.train_step import make_prefill_step
+            step = make_prefill_step(cfg)
+            bspecs = input_specs(cfg, shape)
+            bshard = batch_shardings(bspecs, mesh, spolicy)
+            batch_s = _sds(bspecs, bshard)
+            with mesh, logical_axis_rules(mesh, DEFAULT_RULES):
+                lowered = jax.jit(step).lower(params_s, batch_s)
+                compiled = lowered.compile()
+        else:  # decode
+            step = make_serve_step(cfg, cache_len=shape.seq_len - 1)
+            acache = abstract_cache(cfg, shape)
+            cshard = cache_shardings(acache, mesh, spolicy)
+            cache_s = _sds(acache, cshard)
+            bspecs = decode_input_specs(cfg, shape)
+            bshard = batch_shardings(bspecs, mesh, spolicy)
+            batch_s = _sds(bspecs, bshard)
+            with mesh, logical_axis_rules(mesh, DEFAULT_RULES):
+                lowered = jax.jit(step, donate_argnums=(1,)).lower(
+                    params_s, cache_s, batch_s)
+                compiled = lowered.compile()
+
+        ma = compiled.memory_analysis()
+        print(ma)
+        ca = compiled.cost_analysis() or {}
+        print({k: ca.get(k) for k in ("flops", "bytes accessed")})
+        hlo = compiled.as_text()
+        coll = hlo_collective_bytes(hlo)
+        n_dev = mesh.devices.size
+        sizes = mesh_axis_sizes(mesh)
+        micro = record.get("train_policy", {}).get("microbatches", 1)
+        fsdp_shards = (sizes.get("data", 1) * sizes.get("pod", 1)
+                       if spolicy.fsdp else 1)
+        a_flops = analytic_flops(cfg, shape) / n_dev
+        a_bytes = analytic_bytes(
+            cfg, shape, n_devices=n_dev,
+            model_shards=sizes.get("model", 1), fsdp_shards=fsdp_shards,
+            microbatches=micro)
+        record.update(
+            ok=True,
+            compile_s=time.time() - t0,
+            devices=int(n_dev),
+            memory={
+                "argument_bytes": int(ma.argument_size_in_bytes),
+                "output_bytes": int(ma.output_size_in_bytes),
+                "temp_bytes": int(ma.temp_size_in_bytes),
+                "alias_bytes": int(ma.alias_size_in_bytes),
+                "generated_code_bytes": int(
+                    ma.generated_code_size_in_bytes),
+                "per_device_bytes": int(
+                    ma.argument_size_in_bytes + ma.output_size_in_bytes
+                    + ma.temp_size_in_bytes - ma.alias_size_in_bytes),
+            },
+            cost={
+                "flops": float(ca.get("flops", 0.0)),
+                "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+                # cost_analysis counts while bodies once; analytic terms
+                # are the corrected roofline inputs (launch/analytic.py)
+                "analytic_flops_per_device": float(a_flops),
+                "analytic_bytes_per_device": float(a_bytes),
+            },
+            collectives=coll,
+            hlo_ops=len(hlo.splitlines()),
+        )
+    except Exception as e:  # noqa: BLE001 — record the failure, move on
+        record.update(ok=False, error=f"{type(e).__name__}: {e}",
+                      traceback=traceback.format_exc()[-2000:],
+                      compile_s=time.time() - t0)
+    _write(path, record)
+    return record
+
+
+def _write(path: str, record: dict) -> None:
+    with open(path + ".tmp", "w") as f:
+        json.dump(record, f, indent=1)
+    os.replace(path + ".tmp", path)
+
+
+def iter_cells():
+    from ..configs import ARCH_IDS
+    for arch in ARCH_IDS:
+        for shape_name in ("train_4k", "prefill_32k", "decode_32k",
+                           "long_500k"):
+            yield arch, shape_name
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    meshes = (False, True) if (args.both_meshes or args.all) \
+        else (args.multi_pod,)
+    cells = list(iter_cells()) if args.all else [(args.arch, args.shape)]
+    results = []
+    for arch, shape_name in cells:
+        for mp in meshes:
+            r = run_cell(arch, shape_name, mp, args.out,
+                         skip_existing=not args.force)
+            tag = "OK " if r.get("ok") else ("SKIP" if r.get("skipped")
+                                             else "FAIL")
+            extra = ""
+            if r.get("ok"):
+                extra = (f" mem/dev={r['memory']['per_device_bytes']/2**30:.2f}GiB"
+                         f" flops={r['cost']['flops']:.3g}"
+                         f" coll={r['collectives']['total_bytes']/2**30:.2f}GiB"
+                         f" t={r['compile_s']:.0f}s")
+            elif r.get("error"):
+                extra = " " + r["error"][:120]
+            print(f"[{tag}] {arch} {shape_name} "
+                  f"{'2x16x16' if mp else '16x16'}{extra}", flush=True)
+            results.append(r)
+    n_ok = sum(1 for r in results if r.get("ok"))
+    n_skip = sum(1 for r in results if r.get("skipped"))
+    print(f"== {n_ok} ok, {n_skip} skipped, "
+          f"{len(results) - n_ok - n_skip} failed ==")
+
+
+if __name__ == "__main__":
+    main()

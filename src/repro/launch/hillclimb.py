@@ -1,0 +1,212 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""§Perf hillclimbing: hypothesis -> change -> re-lower -> measure.
+
+Three cells (selection rationale in EXPERIMENTS.md §Perf):
+  A qwen3-32b / prefill_32k     — most collective-bound cell family
+  B internvl2-1b / train_4k     — worst memory cell (unshardable vocab)
+  C kimi-k2-1t-a32b / train_4k  — most representative of the paper's
+                                  technique (the memory-gate workload)
+
+Each variant re-lowers the cell with one change and records the roofline
+terms; results land in artifacts/hillclimb/*.json and EXPERIMENTS.md.
+
+  PYTHONPATH=src python -m repro.launch.hillclimb [--cell A|B|C|all]
+"""
+import argparse     # noqa: E402
+import dataclasses  # noqa: E402
+import json         # noqa: E402
+import time         # noqa: E402
+
+import jax          # noqa: E402
+
+from ..configs import get_config                          # noqa: E402
+from ..configs.base import SHAPES_BY_NAME                 # noqa: E402
+from ..configs.registry import input_specs                # noqa: E402
+from ..distributed.act_sharding import (DEFAULT_RULES,    # noqa: E402
+                                        logical_axis_rules)
+from ..distributed.sharding import (ShardingPolicy,       # noqa: E402
+                                    batch_shardings, opt_state_shardings,
+                                    param_shardings)
+from ..models import model as M                           # noqa: E402
+from ..train.train_step import (TrainPolicy,              # noqa: E402
+                                make_prefill_step, make_train_step)
+from .analytic import analytic_bytes, analytic_flops      # noqa: E402
+from .hlo_analysis import collective_bytes                # noqa: E402
+from .mesh import make_production_mesh, mesh_axis_sizes   # noqa: E402
+
+PEAK_FLOPS, HBM_BW, ICI_BW = 197e12, 819e9, 50e9
+
+
+def _sds(tree, shardings):
+    return jax.tree_util.tree_map(
+        lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=s),
+        tree, shardings)
+
+
+def lower_cell(cfg, shape_name: str, *, multi_pod=False,
+               tpolicy: TrainPolicy | None = None,
+               fsdp: bool | None = None) -> dict:
+    shape = SHAPES_BY_NAME[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    sizes = mesh_axis_sizes(mesh)
+    if cfg.moe is not None:
+        groups = sizes.get("data", 1) * sizes.get("pod", 1)
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, num_groups=groups))
+    if fsdp is None:
+        fsdp = cfg.param_count() > 8e9
+    axes = ("data", "pod") if "pod" in mesh.axis_names else ("data",)
+    spolicy = ShardingPolicy(
+        fsdp=fsdp, fsdp_axes=axes,
+        batch_axes=tuple(a for a in ("pod", "data")
+                         if a in mesh.axis_names))
+    aparams = M.abstract_params(cfg)
+    params_s = _sds(aparams, param_shardings(aparams, cfg, mesh, spolicy))
+    t0 = time.time()
+    if shape.kind == "train":
+        tpolicy = tpolicy or TrainPolicy(optimizer="adamw", microbatches=1)
+        step, opt = make_train_step(cfg, tpolicy)
+        aopt = jax.eval_shape(opt.init, aparams)
+        opt_s = _sds(aopt, opt_state_shardings(aopt, mesh, spolicy))
+        bs = input_specs(cfg, shape)
+        batch_s = _sds(bs, batch_shardings(bs, mesh, spolicy))
+        with mesh, logical_axis_rules(mesh, DEFAULT_RULES):
+            compiled = jax.jit(step, donate_argnums=(0, 1)).lower(
+                params_s, opt_s, batch_s).compile()
+        micro = tpolicy.microbatches
+    else:
+        step = make_prefill_step(cfg)
+        bs = input_specs(cfg, shape)
+        batch_s = _sds(bs, batch_shardings(bs, mesh, spolicy))
+        with mesh, logical_axis_rules(mesh, DEFAULT_RULES):
+            compiled = jax.jit(step).lower(params_s, batch_s).compile()
+        micro = 1
+    ma = compiled.memory_analysis()
+    coll = collective_bytes(compiled.as_text())
+    n_dev = mesh.devices.size
+    fsdp_shards = (sizes.get("data", 1) * sizes.get("pod", 1)
+                   if spolicy.fsdp else 1)
+    a_flops = analytic_flops(cfg, shape) / n_dev
+    a_bytes = analytic_bytes(cfg, shape, n_devices=n_dev,
+                             model_shards=sizes.get("model", 1),
+                             fsdp_shards=fsdp_shards, microbatches=micro)
+    t_comp = a_flops / PEAK_FLOPS
+    t_mem = a_bytes / HBM_BW
+    t_coll = coll["corrected_total_bytes"] / ICI_BW
+    return {
+        "compile_s": time.time() - t0,
+        "mem_per_dev_gib": (ma.argument_size_in_bytes
+                            + ma.output_size_in_bytes
+                            + ma.temp_size_in_bytes
+                            - ma.alias_size_in_bytes) / 2**30,
+        "t_compute_s": t_comp, "t_memory_s": t_mem,
+        "t_collective_s": t_coll,
+        "dominant": max(("compute", t_comp), ("memory", t_mem),
+                        ("collective", t_coll), key=lambda x: x[1])[0],
+        "coll_corrected_gib": coll["corrected_total_bytes"] / 2**30,
+        "coll_raw_gib": coll["total_bytes"] / 2**30,
+        "roofline_frac": (a_flops / PEAK_FLOPS)
+        / max(t_comp, t_mem, t_coll),
+    }
+
+
+# ---------------------------------------------------------------------------
+def cell_A():
+    """qwen3-32b prefill_32k — collective-bound."""
+    base = get_config("qwen3-32b")
+    variants = {
+        "baseline": base,
+        "repeat_kv": dataclasses.replace(
+            base, attention=dataclasses.replace(
+                base.attention, repeat_kv_for_tp=True)),
+        "repeat_kv+ckv4096": dataclasses.replace(
+            base, attention=dataclasses.replace(
+                base.attention, repeat_kv_for_tp=True, chunk_kv=4096)),
+        # H3: inference needs no gradient/optimizer sharding — FSDP's
+        # per-layer param all-gathers are pure overhead for prefill;
+        # TP-only weights (params fit: 64 GB bf16 / 16 = 4 GB/dev).
+        "no_fsdp": base,
+    }
+    return "qwen3-32b", "prefill_32k", variants, {}
+
+
+def cell_B():
+    """internvl2-1b train_4k — worst memory (vocab 151655 % 16 != 0)."""
+    base = get_config("internvl2-1b")
+    variants = {
+        "baseline": base,
+        "pad_vocab16": dataclasses.replace(base, pad_vocab_multiple=16),
+        "pad_vocab16+mb4": dataclasses.replace(base,
+                                               pad_vocab_multiple=16),
+    }
+    policies = {"pad_vocab16+mb4": TrainPolicy(optimizer="adamw",
+                                               microbatches=4)}
+    return "internvl2-1b", "train_4k", variants, policies
+
+
+def cell_C():
+    """kimi-k2 train_4k — the admission-gate workload (69.8 GiB > HBM)."""
+    base = get_config("kimi-k2-1t-a32b")
+    variants = {
+        "baseline": base,
+        "mb16": base,
+        "mb32": base,
+        "mb32+repeat_kv": dataclasses.replace(
+            base, attention=dataclasses.replace(
+                base.attention, repeat_kv_for_tp=True)),
+    }
+    policies = {
+        "baseline": TrainPolicy(optimizer="adafactor", microbatches=8),
+        "mb16": TrainPolicy(optimizer="adafactor", microbatches=16),
+        "mb32": TrainPolicy(optimizer="adafactor", microbatches=32),
+        "mb32+repeat_kv": TrainPolicy(optimizer="adafactor",
+                                      microbatches=32),
+    }
+    return "kimi-k2-1t-a32b", "train_4k", variants, policies
+
+
+CELLS = {"A": cell_A, "B": cell_B, "C": cell_C}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", default="all")
+    ap.add_argument("--out", default="artifacts/hillclimb")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    names = list(CELLS) if args.cell == "all" else [args.cell]
+    for name in names:
+        arch, shape, variants, policies = CELLS[name]()
+        for vname, cfg in variants.items():
+            path = os.path.join(args.out, f"{name}__{vname}.json")
+            if os.path.exists(path):
+                r = json.load(open(path))
+            else:
+                try:
+                    r = lower_cell(cfg, shape,
+                                   tpolicy=policies.get(vname),
+                                   fsdp=(False if "no_fsdp" in vname
+                                         else None))
+                except Exception as e:  # noqa: BLE001
+                    r = {"error": f"{type(e).__name__}: {e}"}
+                r.update(cell=name, arch=arch, shape=shape,
+                         variant=vname)
+                with open(path, "w") as f:
+                    json.dump(r, f, indent=1)
+            if "error" in r:
+                print(f"[{name}/{vname}] ERROR {r['error'][:100]}",
+                      flush=True)
+            else:
+                print(f"[{name}/{vname}] mem={r['mem_per_dev_gib']:.2f}GiB "
+                      f"comp={r['t_compute_s']:.4f}s "
+                      f"mem_t={r['t_memory_s']:.4f}s "
+                      f"coll={r['t_collective_s']:.4f}s "
+                      f"dom={r['dominant']} "
+                      f"roofline={r['roofline_frac']*100:.1f}%",
+                      flush=True)
+
+
+if __name__ == "__main__":
+    main()

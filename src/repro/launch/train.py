@@ -1,0 +1,156 @@
+"""Training driver with the xMem admission gate (first-class feature).
+
+Flow:
+  1. resolve --arch config + shapes + mesh;
+  2. **admission gate**: run the xMem estimator on the exact
+     (fwd_bwd, update, opt_init) triple of this job; if the per-device
+     estimate exceeds HBM, reject (or auto-replan: more microbatches)
+     BEFORE touching devices — the paper's scheduler integration;
+  3. init or restore from the newest valid checkpoint (fault tolerance);
+  4. step loop with periodic checkpoints, straggler monitoring, and an
+     emergency checkpoint on any exception.
+
+On this CPU box, use smoke-scale flags:
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-32b --smoke \
+      --steps 20 --ckpt-dir /tmp/ckpt
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import get_config, get_smoke
+from ..configs.base import ShapeSpec, smoke_shape, TRAIN_4K
+from ..core.estimator import XMemEstimator
+from ..models import model as M
+from ..train import (CheckpointManager, StragglerMonitor, SyntheticDataset,
+                     TrainPolicy, make_estimator_hooks, make_train_step)
+
+HBM_BYTES = 16 * 2**30     # v5e
+
+
+def admission_check(cfg, policy: TrainPolicy, shape: ShapeSpec,
+                    hbm_bytes: int = HBM_BYTES, shard_factor_fn=None,
+                    verbose: bool = True):
+    """xMem gate: estimate peak device memory a priori (CPU-only)."""
+    fwd_bwd, update, opt_init = make_estimator_hooks(cfg, policy)
+    from ..configs.registry import input_specs
+    params = M.abstract_params(cfg)
+    batch = input_specs(cfg, shape)
+    est = XMemEstimator.for_tpu()
+    rep = est.estimate_training(fwd_bwd, params, batch, update_fn=update,
+                                opt_init_fn=opt_init,
+                                shard_factor_fn=shard_factor_fn)
+    ok = rep.peak_bytes <= hbm_bytes
+    if verbose:
+        print(f"[xmem] estimated peak {rep.peak_bytes/2**30:.2f} GiB "
+              f"(persistent {rep.persistent_bytes/2**30:.2f}) vs HBM "
+              f"{hbm_bytes/2**30:.0f} GiB -> "
+              f"{'ADMIT' if ok else 'REJECT'} "
+              f"({rep.wall_time_s:.2f}s estimation)")
+    return ok, rep
+
+
+def replan_if_needed(cfg, policy: TrainPolicy, shape, hbm_bytes,
+                     shard_factor_fn=None):
+    """Auto-replan: double microbatches until the estimate fits."""
+    p = policy
+    for _ in range(4):
+        ok, rep = admission_check(cfg, p, shape, hbm_bytes,
+                                  shard_factor_fn)
+        if ok:
+            return p, rep
+        if shape.global_batch // (p.microbatches * 2) < 1:
+            break
+        p = dataclasses.replace(p, microbatches=p.microbatches * 2)
+        print(f"[xmem] replanning: microbatches -> {p.microbatches}")
+    return p, rep
+
+
+def train_loop(cfg, shape, policy: TrainPolicy, *, steps: int,
+               ckpt_dir: str, ckpt_every: int = 20,
+               hbm_bytes: int = HBM_BYTES, skip_gate: bool = False) -> float:
+    """The reusable training loop (admission gate -> resume -> steps ->
+    checkpoints -> emergency save). Returns the final loss."""
+    import time as _time
+    if not skip_gate:
+        policy, rep = replan_if_needed(cfg, policy, shape, hbm_bytes)
+        if rep.peak_bytes > hbm_bytes:
+            raise MemoryError("xmem gate: job will not fit — rejected")
+    train_step, opt = make_train_step(cfg, policy)
+    step_fn = jax.jit(train_step, donate_argnums=(0, 1))
+    ckpt = CheckpointManager(ckpt_dir)
+    ds = SyntheticDataset(cfg, shape)
+    monitor = StragglerMonitor(n_workers=1)
+    params = M.init_params(cfg, jax.random.key(0))
+    opt_state = opt.init(params)
+    start_step = 0
+    restored = ckpt.restore_latest({"params": params,
+                                    "opt_state": opt_state})
+    if restored is not None:
+        start_step, state = restored
+        params, opt_state = state["params"], state["opt_state"]
+        print(f"[ckpt] resumed from step {start_step}")
+    loss = float("nan")
+    step = start_step
+    try:
+        for step in range(start_step, steps):
+            t0 = _time.perf_counter()
+            batch = jax.tree_util.tree_map(jnp.asarray, ds.batch(step))
+            loss, params, opt_state = step_fn(params, opt_state, batch)
+            dt = _time.perf_counter() - t0
+            monitor.record(0, dt)
+            if step % 10 == 0 or step == steps - 1:
+                print(f"step {step:5d} loss {float(loss):.4f} "
+                      f"({dt*1000:.0f} ms)")
+            if (step + 1) % ckpt_every == 0:
+                ckpt.save(step + 1, {"params": params,
+                                     "opt_state": opt_state})
+    except BaseException:
+        ckpt.emergency(step, {"params": params, "opt_state": opt_state})
+        print(f"[ckpt] emergency checkpoint at step {step}")
+        raise
+    ckpt.save(steps, {"params": params, "opt_state": opt_state})
+    return float(loss)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--optimizer", default="adamw")
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--hbm-gib", type=float, default=16.0)
+    ap.add_argument("--skip-gate", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
+    shape = smoke_shape(args.seq, args.batch) if args.smoke else TRAIN_4K
+    policy = TrainPolicy(optimizer=args.optimizer,
+                         learning_rate=args.lr,
+                         microbatches=args.microbatches)
+    try:
+        loss = train_loop(cfg, shape, policy, steps=args.steps,
+                          ckpt_dir=args.ckpt_dir,
+                          ckpt_every=args.ckpt_every,
+                          hbm_bytes=int(args.hbm_gib * 2**30),
+                          skip_gate=args.skip_gate)
+    except MemoryError as e:
+        print(f"[xmem] {e}")
+        return 2
+    print("[done] final loss", loss)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

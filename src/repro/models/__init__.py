@@ -1,0 +1,8 @@
+"""Model zoo: unified LM over dense/MoE/hybrid/SSM/VLM/audio families."""
+from . import layers, mamba, moe, model, xlstm
+from .model import (abstract_params, backbone, decode_step, init_cache,
+                    init_params, loss_fn, logits_fn)
+
+__all__ = ["layers", "mamba", "moe", "model", "xlstm", "abstract_params",
+           "backbone", "decode_step", "init_cache", "init_params",
+           "loss_fn", "logits_fn"]

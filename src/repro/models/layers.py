@@ -1,0 +1,301 @@
+"""Shared neural-net layers (pure-JAX, shard_map/pjit friendly).
+
+Conventions:
+* activations ``x``: [B, S, D]; attention heads ``q``: [B, S, H, hd];
+  GQA k/v: [B, S, Hkv, hd]. Params are plain dict pytrees.
+* matmuls run in the param dtype (bf16); softmax statistics and norms
+  accumulate in f32.
+* long sequences (>= ``dense_threshold``) use *chunked online-softmax
+  attention* (a pure-JAX flash-attention: O(S) memory instead of the
+  O(S^2) score matrix) — at 32k x 32k a dense score tensor would be
+  terabytes, so this is a correctness requirement for the dry-run, not
+  just an optimization. ``repro.kernels.flash_attention`` is the Pallas
+  TPU version of the same algorithm; ``attention.impl`` selects.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import AttentionConfig
+
+
+# ---------------------------------------------------------------------------
+def rms_norm(x, scale, eps: float = 1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps)).astype(x.dtype) * scale
+
+
+def rope_freqs(hd: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+
+
+def apply_rope(x, positions, theta: float = 10_000.0):
+    """x: [B, S, H, hd]; positions: [S] or [B, S] absolute indices."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # [hd/2]
+    if positions.ndim == 1:
+        ang = positions[:, None].astype(jnp.float32) * freqs[None, :]
+        ang = ang[None, :, None, :]                     # [1, S, 1, hd/2]
+    else:
+        ang = positions[..., None].astype(jnp.float32) * freqs
+        ang = ang[:, :, None, :]                        # [B, S, 1, hd/2]
+    sin, cos = jnp.sin(ang), jnp.cos(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def swiglu(x, w_gate, w_up, w_down):
+    h = jax.nn.silu(x @ w_gate) * (x @ w_up)
+    return h @ w_down
+
+
+# ---------------------------------------------------------------------------
+def _mask_bias(q_pos, kv_pos, *, causal, window, is_global):
+    """Additive f32 bias: 0 where attendable, -inf where masked.
+
+    ``is_global`` may be a traced scalar bool (scan-carried per-layer
+    flag) — sliding-window layers apply ``window``; global layers do not.
+    """
+    d = q_pos[:, None] - kv_pos[None, :]
+    ok = jnp.ones(d.shape, dtype=bool)
+    if causal:
+        ok &= d >= 0
+    if window is not None:
+        local_ok = d < window
+        if is_global is None:
+            ok &= local_ok
+        else:
+            ok &= local_ok | is_global
+    return jnp.where(ok, 0.0, -jnp.inf).astype(jnp.float32)
+
+
+def _grouped_scores(q, k):
+    """q: [B, Sq, Hkv, G, hd], k: [B, Sk, Hkv, hd] -> [B, Hkv, G, Sq, Sk]
+    without materializing repeated KV heads."""
+    return jnp.einsum("bqhgd,bkhd->bhgqk", q.astype(jnp.float32),
+                      k.astype(jnp.float32))
+
+
+def dense_attention(q, k, v, *, causal=True, window=None, is_global=None,
+                    q_offset: int = 0):
+    """Reference O(S^2) attention (short sequences / oracle)."""
+    B, Sq, H, hd = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    scale = 1.0 / math.sqrt(hd)
+    qg = q.reshape(B, Sq, Hkv, G, hd)
+    s = _grouped_scores(qg, k) * scale                 # [B,Hkv,G,Sq,Sk]
+    q_pos = jnp.arange(Sq) + q_offset
+    kv_pos = jnp.arange(k.shape[1])
+    s = s + _mask_bias(q_pos, kv_pos, causal=causal, window=window,
+                       is_global=is_global)[None, None, None]
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return o.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+def chunked_attention(q, k, v, *, causal=True, window=None, is_global=None,
+                      chunk_q: int = 512, chunk_kv: int = 1024):
+    """Online-softmax attention over KV chunks: O(S * chunk) memory.
+
+    Grid: scan over q chunks (rematerialized), inner scan over kv chunks
+    carrying (acc, running max m, denominator l) in f32 — the exact
+    algorithm the Pallas kernel implements on TPU VMEM tiles.
+    """
+    B, S, H, hd = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    scale = 1.0 / math.sqrt(hd)
+    nq = -(-S // chunk_q)
+    nkv = -(-k.shape[1] // chunk_kv)
+    Sp_q, Sp_kv = nq * chunk_q, nkv * chunk_kv
+    qp = jnp.pad(q, ((0, 0), (0, Sp_q - S), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, Sp_kv - k.shape[1]), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, Sp_kv - v.shape[1]), (0, 0), (0, 0)))
+    qb = qp.reshape(B, nq, chunk_q, Hkv, G, hd).transpose(1, 0, 2, 3, 4, 5)
+    kb = kp.reshape(B, nkv, chunk_kv, Hkv, hd).transpose(1, 0, 2, 3, 4)
+    vb = vp.reshape(B, nkv, chunk_kv, Hkv, hd).transpose(1, 0, 2, 3, 4)
+    kv_valid = k.shape[1]
+
+    def q_body(_, q_in):
+        qc, iq = q_in                                   # [B,cq,Hkv,G,hd]
+        q_pos = iq * chunk_q + jnp.arange(chunk_q)
+
+        def kv_body(carry, kv_in):
+            acc, m, l = carry
+            kc, vc, ik = kv_in
+            kv_pos = ik * chunk_kv + jnp.arange(chunk_kv)
+            s = _grouped_scores(qc, kc) * scale          # [B,Hkv,G,cq,ckv]
+            bias = _mask_bias(q_pos, kv_pos, causal=causal, window=window,
+                              is_global=is_global)
+            bias = jnp.where(kv_pos[None, :] < kv_valid, bias, -jnp.inf)
+            s = s + bias[None, None, None]
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            # guard fully-masked rows (exp(-inf - -inf))
+            m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+            p = jnp.exp(s - m_safe[..., None])
+            p = jnp.where(jnp.isfinite(s), p, 0.0)
+            corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+            l_new = l * corr + p.sum(axis=-1)
+            pv = jnp.einsum("bhgqk,bkhd->bhgqd", p, vc.astype(jnp.float32))
+            acc_new = acc * corr[..., None] + pv
+            return (acc_new, m_new, l_new), None
+
+        init = (
+            jnp.zeros((B, Hkv, G, chunk_q, hd), jnp.float32),
+            jnp.full((B, Hkv, G, chunk_q), -jnp.inf, jnp.float32),
+            jnp.zeros((B, Hkv, G, chunk_q), jnp.float32),
+        )
+        (acc, m, l), _ = jax.lax.scan(
+            kv_body, init, (kb, vb, jnp.arange(nkv)))
+        o = acc / jnp.maximum(l[..., None], 1e-30)
+        return None, o.transpose(0, 3, 1, 2, 4)          # [B,cq,Hkv,G,hd]
+
+    _, ob = jax.lax.scan(jax.checkpoint(q_body), None,
+                         (qb, jnp.arange(nq)))
+    o = ob.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sp_q, H, hd)
+    return o[:, :S].astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, cache_len: int, *,
+                     window=None, is_global=None):
+    """One new query token vs a cache of ``cache_len`` valid positions.
+    q: [B, 1, H, hd]; caches: [B, Smax, Hkv, hd]. O(S) — no S x S."""
+    B, _, H, hd = q.shape
+    Hkv = k_cache.shape[2]
+    G = H // Hkv
+    scale = 1.0 / math.sqrt(hd)
+    qg = q.reshape(B, 1, Hkv, G, hd)
+    s = _grouped_scores(qg, k_cache)[..., 0, :] * scale  # [B,Hkv,G,Sk]
+    kv_pos = jnp.arange(k_cache.shape[1])
+    ok = kv_pos < cache_len
+    if window is not None:
+        local_ok = kv_pos >= (cache_len - window)
+        ok &= (local_ok | is_global) if is_global is not None else local_ok
+    s = jnp.where(ok[None, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgk,bkhd->bhgd", p, v_cache.astype(jnp.float32))
+    return o.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+def attention_forward(q, k, v, acfg: AttentionConfig, *, causal=True,
+                      window=None, is_global=None):
+    """Dispatch on sequence length / configured implementation."""
+    from ..distributed.act_sharding import constrain
+    if acfg.repeat_kv_for_tp and k.shape[2] != q.shape[2]:
+        # §Perf: broadcast KV to full H so the head dim shards on TP
+        # (GQA head counts rarely divide a 16-way axis); the grouped
+        # einsum otherwise leaves heads unshardable and GSPMD inserts
+        # per-chunk gathers *inside* the attention scan.
+        G = q.shape[2] // k.shape[2]
+        k = jnp.repeat(k, G, axis=2)
+        v = jnp.repeat(v, G, axis=2)
+    q = constrain(q, ("batch", None, "heads", None))
+    k = constrain(k, ("batch", None, "heads", None))
+    v = constrain(v, ("batch", None, "heads", None))
+    S = q.shape[1]
+    impl = acfg.impl
+    if impl == "pallas":
+        from ..kernels import ops as kops
+        return kops.flash_attention(q, k, v, causal=causal, window=window)
+    if impl == "dense" or (impl == "auto" and S <= acfg.dense_threshold):
+        return dense_attention(q, k, v, causal=causal, window=window,
+                               is_global=is_global)
+    return chunked_attention(q, k, v, causal=causal, window=window,
+                             is_global=is_global, chunk_q=acfg.chunk_q,
+                             chunk_kv=acfg.chunk_kv)
+
+
+# ---------------------------------------------------------------------------
+def attention_block_params(key, d_model, n_heads, n_kv_heads, hd, dtype,
+                           qk_norm=False):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s = 1.0 / math.sqrt(d_model)
+    p = {
+        "wq": (jax.random.normal(k1, (d_model, n_heads * hd)) * s).astype(dtype),
+        "wk": (jax.random.normal(k2, (d_model, n_kv_heads * hd)) * s).astype(dtype),
+        "wv": (jax.random.normal(k3, (d_model, n_kv_heads * hd)) * s).astype(dtype),
+        "wo": (jax.random.normal(k4, (n_heads * hd, d_model)) * s).astype(dtype),
+    }
+    if qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dtype)
+        p["k_norm"] = jnp.ones((hd,), dtype)
+    return p
+
+
+def attention_block(x, params, acfg: AttentionConfig, n_heads, n_kv_heads,
+                    hd, *, positions=None, is_global=None, window=None):
+    B, S, D = x.shape
+    q = (x @ params["wq"]).reshape(B, S, n_heads, hd)
+    k = (x @ params["wk"]).reshape(B, S, n_kv_heads, hd)
+    v = (x @ params["wv"]).reshape(B, S, n_kv_heads, hd)
+    if "q_norm" in params:
+        q = rms_norm(q, params["q_norm"])
+        k = rms_norm(k, params["k_norm"])
+    if positions is None:
+        positions = jnp.arange(S)
+    q = apply_rope(q, positions, acfg.rope_theta)
+    k = apply_rope(k, positions, acfg.rope_theta)
+    o = attention_forward(q, k, v, acfg, causal=True, window=window,
+                          is_global=is_global)
+    return o.reshape(B, S, n_heads * hd) @ params["wo"], (k, v)
+
+
+def attention_decode_block(x, params, acfg: AttentionConfig, n_heads,
+                           n_kv_heads, hd, k_cache, v_cache, cache_len,
+                           *, window=None, is_global=None):
+    """Decode one token; returns output + updated caches."""
+    B, S, D = x.shape  # S == 1
+    q = (x @ params["wq"]).reshape(B, S, n_heads, hd)
+    k = (x @ params["wk"]).reshape(B, S, n_kv_heads, hd)
+    v = (x @ params["wv"]).reshape(B, S, n_kv_heads, hd)
+    if "q_norm" in params:
+        q = rms_norm(q, params["q_norm"])
+        k = rms_norm(k, params["k_norm"])
+    pos = jnp.full((S,), cache_len, dtype=jnp.int32)
+    q = apply_rope(q, pos, acfg.rope_theta)
+    k = apply_rope(k, pos, acfg.rope_theta)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k, cache_len, 1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v, cache_len, 1)
+    o = decode_attention(q, k_cache, v_cache, cache_len + 1, window=window,
+                         is_global=is_global)
+    return (o.reshape(B, S, n_heads * hd) @ params["wo"],
+            k_cache, v_cache)
+
+
+def mlp_params(key, d_model, d_ff, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in = 1.0 / math.sqrt(d_model)
+    s_out = 1.0 / math.sqrt(d_ff)
+    return {
+        "w_gate": (jax.random.normal(k1, (d_model, d_ff)) * s_in).astype(dtype),
+        "w_up": (jax.random.normal(k2, (d_model, d_ff)) * s_in).astype(dtype),
+        "w_down": (jax.random.normal(k3, (d_ff, d_model)) * s_out).astype(dtype),
+    }
+
+
+def cross_entropy_loss(logits, labels, ignore_index: int = -1):
+    """Mean token cross-entropy in f32; labels == ignore_index masked.
+
+    The label term uses a one-hot contraction, NOT take_along_axis: a
+    gather along the vocab axis forces GSPMD to all-gather vocab-sharded
+    logits (tens of GB at 200k vocab), while the one-hot einsum reduces
+    over the sharded axis with a cheap all-reduce.
+    """
+    from ..distributed.act_sharding import constrain
+    ldims = ("batch",) + (None,) * (logits.ndim - 2) + ("vocab",)
+    logits = constrain(logits.astype(jnp.float32), ldims)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    one_hot = jax.nn.one_hot(jnp.maximum(labels, 0), logits.shape[-1],
+                             dtype=jnp.float32)
+    one_hot = constrain(one_hot, ldims)
+    gather = (logits * one_hot).sum(axis=-1)
+    nll = lse - gather
+    mask = (labels != ignore_index).astype(jnp.float32)
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)

@@ -1,0 +1,159 @@
+"""Mamba (S6 selective SSM) block — chunked scan formulation.
+
+TPU adaptation (DESIGN.md §2): the CUDA Mamba kernel is a fused
+shared-memory scan; the TPU-native structure is a *chunked* scan —
+an outer ``lax.scan`` over sequence chunks (rematerialized, so backward
+residuals are per-chunk inputs only) with an inner ``lax.scan`` over
+steps carrying the [B, d_inner, d_state] SSM state. d_inner is sharded
+on the model axis (column-parallel in_proj, row-parallel out_proj), so
+the per-chunk backward transient [chunk, B, d_inner/tp, N] stays within
+HBM at the assigned shapes.
+
+Decode is the O(1) single-step recurrence over a persistent state.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import MambaConfig
+
+
+def mamba_params(key, d_model: int, cfg: MambaConfig, dtype):
+    d_inner = cfg.expand * d_model
+    dt_rank = max(1, math.ceil(d_model / 16))
+    ks = jax.random.split(key, 6)
+    s = 1.0 / math.sqrt(d_model)
+    si = 1.0 / math.sqrt(d_inner)
+    return {
+        "in_proj": (jax.random.normal(ks[0], (d_model, 2 * d_inner))
+                    * s).astype(dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.d_conv, d_inner))
+                   * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((d_inner,), dtype),
+        "x_proj": (jax.random.normal(ks[2], (d_inner,
+                                             dt_rank + 2 * cfg.d_state))
+                   * si).astype(dtype),
+        "dt_proj": (jax.random.normal(ks[3], (dt_rank, d_inner))
+                    * (dt_rank ** -0.5)).astype(dtype),
+        "dt_bias": jnp.full((d_inner,), -4.6, dtype),   # softplus ~ 0.01
+        "A_log": jnp.log(jnp.tile(
+            jnp.arange(1, cfg.d_state + 1, dtype=jnp.float32),
+            (d_inner, 1))),
+        "D": jnp.ones((d_inner,), jnp.float32),
+        "out_proj": (jax.random.normal(ks[4], (d_inner, d_model))
+                     * si).astype(dtype),
+    }
+
+
+def _causal_conv1d(x, w, b):
+    """x: [B, S, C]; depthwise causal conv, kernel [K, C]."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jax.lax.conv_general_dilated(
+        xp.astype(jnp.float32),
+        w[:, None, :].astype(jnp.float32),      # [K, 1, C] HIO-ish
+        window_strides=(1,), padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=w.shape[1])
+    return (out + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def _ssm_inputs(x, p, cfg: MambaConfig):
+    """Shared preamble for scan/step: returns (xa, z, dt, A, Bm, Cm)."""
+    d_inner = p["out_proj"].shape[0]
+    dt_rank = p["dt_proj"].shape[0]
+    xz = x @ p["in_proj"]
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    xc = _causal_conv1d(x_in, p["conv_w"], p["conv_b"])
+    xa = jax.nn.silu(xc)
+    proj = xa @ p["x_proj"]
+    dt_in = proj[..., :dt_rank]
+    Bm = proj[..., dt_rank:dt_rank + cfg.d_state].astype(jnp.float32)
+    Cm = proj[..., dt_rank + cfg.d_state:].astype(jnp.float32)
+    dt = jax.nn.softplus((dt_in @ p["dt_proj"]).astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"])                     # [d_inner, N]
+    return xa, z, dt, A, Bm, Cm
+
+
+def mamba_block(x, p, cfg: MambaConfig):
+    """Training/prefill forward. x: [B, S, D] -> [B, S, D]."""
+    B, S, D = x.shape
+    xa, z, dt, A, Bm, Cm = _ssm_inputs(x, p, cfg)
+    d_inner = xa.shape[-1]
+    ch = min(cfg.chunk, S)
+    n_chunks = -(-S // ch)
+    Sp = n_chunks * ch
+
+    def pad(t):
+        return jnp.pad(t, ((0, 0), (0, Sp - S)) + ((0, 0),) * (t.ndim - 2))
+
+    xa_, dt_, Bm_, Cm_ = map(pad, (xa, dt, Bm, Cm))
+
+    def chunk_body(h, inputs):
+        xc, dtc, Bc, Cc = inputs                 # [B, ch, ...]
+
+        def step(h, inp):
+            xt, dtt, Bt, Ct = inp                # [B, d_inner], [B, N]...
+            dA = jnp.exp(dtt[..., None] * A)     # [B, d_inner, N]
+            h = dA * h + dtt[..., None] * Bt[:, None, :] \
+                * xt.astype(jnp.float32)[..., None]
+            y = (h * Ct[:, None, :]).sum(-1)     # [B, d_inner]
+            return h, y
+
+        h, ys = jax.lax.scan(
+            step, h,
+            (xc.transpose(1, 0, 2), dtc.transpose(1, 0, 2),
+             Bc.transpose(1, 0, 2), Cc.transpose(1, 0, 2)))
+        return h, ys.transpose(1, 0, 2)          # [B, ch, d_inner]
+
+    h0 = jnp.zeros((B, d_inner, cfg.d_state), jnp.float32)
+    xs = (xa_.reshape(B, n_chunks, ch, d_inner).transpose(1, 0, 2, 3),
+          dt_.reshape(B, n_chunks, ch, d_inner).transpose(1, 0, 2, 3),
+          Bm_.reshape(B, n_chunks, ch, -1).transpose(1, 0, 2, 3),
+          Cm_.reshape(B, n_chunks, ch, -1).transpose(1, 0, 2, 3))
+    _, ych = jax.lax.scan(jax.checkpoint(chunk_body), h0, xs)
+    y = ych.transpose(1, 0, 2, 3).reshape(B, Sp, d_inner)[:, :S]
+    y = y + p["D"] * xa.astype(jnp.float32)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    return (y.astype(x.dtype) @ p["out_proj"]), None
+
+
+def mamba_init_state(batch: int, d_model: int, cfg: MambaConfig):
+    d_inner = cfg.expand * d_model
+    return {
+        "h": jnp.zeros((batch, d_inner, cfg.d_state), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.d_conv - 1, d_inner), jnp.float32),
+    }
+
+
+def mamba_decode_step(x, state, p, cfg: MambaConfig):
+    """One-token recurrence. x: [B, 1, D]; O(1) in context length."""
+    B = x.shape[0]
+    d_inner = p["out_proj"].shape[0]
+    dt_rank = p["dt_proj"].shape[0]
+    xz = x[:, 0] @ p["in_proj"]
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    # rolling conv window
+    win = jnp.concatenate(
+        [state["conv"], x_in[:, None, :].astype(jnp.float32)], axis=1)
+    xc = (win * p["conv_w"].astype(jnp.float32)[None]).sum(1) \
+        + p["conv_b"].astype(jnp.float32)
+    xa = jax.nn.silu(xc)
+    proj = xa.astype(x.dtype) @ p["x_proj"]
+    dt = jax.nn.softplus(
+        (proj[..., :dt_rank] @ p["dt_proj"]).astype(jnp.float32)
+        + p["dt_bias"].astype(jnp.float32))
+    Bm = proj[..., dt_rank:dt_rank + cfg.d_state].astype(jnp.float32)
+    Cm = proj[..., dt_rank + cfg.d_state:].astype(jnp.float32)
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dt[..., None] * A)
+    h = dA * state["h"] + dt[..., None] * Bm[:, None, :] * xa[..., None]
+    y = (h * Cm[:, None, :]).sum(-1) + p["D"] * xa
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    out = y.astype(x.dtype) @ p["out_proj"]
+    new_state = {"h": h, "conv": win[:, 1:]}
+    return out[:, None, :], new_state

@@ -1,0 +1,288 @@
+"""xLSTM blocks: mLSTM (matrix memory) and sLSTM (scalar memory).
+
+TPU adaptation (DESIGN.md §2): the xLSTM paper's CUDA kernels stream the
+recurrence through shared memory; the TPU-native formulation is the
+*chunkwise-parallel* form (same family as GLA/flash-linear-attention):
+
+* within a chunk of length ``ch`` the contribution is a masked [ch, ch]
+  quadratic form (MXU-friendly matmuls);
+* across chunks a [B, H, dk, dv] matrix state + [B, H, dk] normalizer +
+  [B, H] stabilizer are carried through an outer ``lax.scan`` with the
+  *exact* exponential-gating stabilization of the paper (running max m,
+  denominator lower-bounded by exp(-m)) — validated against the
+  sequential recurrent reference in tests;
+* decode is the O(1) recurrent step over the persistent (C, n, m) state,
+  which is what makes the 500k-token long-context shape feasible for
+  this family (no KV cache at all).
+
+sLSTM keeps its inherently sequential scalar recurrence, run as an
+outer-chunk (rematerialized) / inner-step scan.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import XLSTMConfig
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+def mlstm_params(key, d_model: int, n_heads: int, cfg: XLSTMConfig, dtype):
+    dv = d_model // n_heads
+    dk = max(int(dv * cfg.qk_dim_factor), 8)
+    ks = jax.random.split(key, 7)
+    s = 1.0 / math.sqrt(d_model)
+    return {
+        "wq": (jax.random.normal(ks[0], (d_model, n_heads * dk)) * s).astype(dtype),
+        "wk": (jax.random.normal(ks[1], (d_model, n_heads * dk)) * s).astype(dtype),
+        "wv": (jax.random.normal(ks[2], (d_model, d_model)) * s).astype(dtype),
+        "w_if": (jax.random.normal(ks[3], (d_model, 2 * n_heads)) * s).astype(dtype),
+        "b_if": jnp.concatenate([jnp.zeros((n_heads,)),
+                                 3.0 * jnp.ones((n_heads,))]).astype(dtype),
+        "w_gate": (jax.random.normal(ks[4], (d_model, d_model)) * s).astype(dtype),
+        "w_out": (jax.random.normal(ks[5], (d_model, d_model)) * s).astype(dtype),
+        "norm": jnp.ones((d_model,), dtype),
+    }
+
+
+def _mlstm_qkvif(x, p, n_heads):
+    B, S, D = x.shape
+    dv = D // n_heads
+    dk = p["wq"].shape[1] // n_heads
+    q = (x @ p["wq"]).reshape(B, S, n_heads, dk).astype(jnp.float32)
+    k = (x @ p["wk"]).reshape(B, S, n_heads, dk).astype(jnp.float32)
+    v = (x @ p["wv"]).reshape(B, S, n_heads, dv).astype(jnp.float32)
+    q = q / math.sqrt(dk)
+    gates = (x @ p["w_if"] + p["b_if"]).astype(jnp.float32)
+    i_pre = gates[..., :n_heads]                      # [B, S, H]
+    f_pre = gates[..., n_heads:]
+    return q, k, v, i_pre, f_pre
+
+
+def mlstm_chunkwise(q, k, v, i_pre, f_pre, state=None, chunk: int = 256):
+    """Chunkwise-parallel stabilized mLSTM cell.
+
+    q,k: [B,S,H,dk]; v: [B,S,H,dv]; gates: [B,S,H].
+    Returns h [B,S,H,dv] and final (C, n, m) state.
+    """
+    B, S, H, dk = q.shape
+    dv = v.shape[-1]
+    ch = min(chunk, S)
+    nc = -(-S // ch)
+    Sp = nc * ch
+
+    def pad(t):
+        return jnp.pad(t, ((0, 0), (0, Sp - S)) + ((0, 0),) * (t.ndim - 2))
+
+    qp, kp, vp = pad(q), pad(k), pad(v)
+    # padded steps must be identity: no input (i -> -inf) and no decay
+    # (f -> +inf so log_sigmoid(f) -> 0), keeping the carried state exact
+    ip = jnp.pad(i_pre, ((0, 0), (0, Sp - S), (0, 0)),
+                 constant_values=-1e30)
+    fp = jnp.pad(f_pre, ((0, 0), (0, Sp - S), (0, 0)),
+                 constant_values=1e30)
+
+    def to_chunks(t):
+        return t.reshape((B, nc, ch) + t.shape[2:]).transpose(
+            (1, 0, 2) + tuple(range(3, t.ndim + 1)))
+
+    if state is None:
+        C0 = jnp.zeros((B, H, dk, dv), jnp.float32)
+        n0 = jnp.zeros((B, H, dk), jnp.float32)
+        m0 = jnp.full((B, H), -1e30, jnp.float32)
+    else:
+        C0, n0, m0 = state
+
+    causal = jnp.tril(jnp.ones((ch, ch), bool))
+
+    def chunk_body(carry, inp):
+        C, n, m = carry                              # stored scaled by e^-m
+        qc, kc, vc, ic, fc = inp                     # [B, ch, ...]
+        logf = jax.nn.log_sigmoid(fc)                # [B, ch, H]
+        F = jnp.cumsum(logf, axis=1)                 # inclusive decay
+        s_j = ic - F                                 # log input / decay
+        a = jax.lax.cummax(s_j, axis=1)              # running max_j<=i
+        Mi = jnp.maximum(a, m[:, None, :])           # [B, ch, H]
+        # intra-chunk quadratic form
+        A = jnp.einsum("bihd,bjhd->bhij", qc, kc)    # [B, H, ch, ch]
+        # W[b,h,i,j] = exp(s_j[b,j,h] - Mi[b,i,h])
+        W = jnp.exp(s_j.transpose(0, 2, 1)[:, :, None, :]
+                    - Mi.transpose(0, 2, 1)[..., None])  # [B,H,i,j]
+        W = jnp.where(causal[None, None], W, 0.0)
+        AW = A * W
+        y_intra = jnp.einsum("bhij,bjhd->bihd", AW, vc)
+        den_intra = AW.sum(-1).transpose(0, 2, 1)    # [B, ch, H]
+        # inter-chunk from carried state
+        coef = jnp.exp(m[:, None, :] - Mi)           # [B, ch, H]
+        y_inter = jnp.einsum("bihd,bhdv->bihv", qc, C) * coef[..., None]
+        den_inter = jnp.einsum("bihd,bhd->bih", qc, n) * coef
+        den = den_intra + den_inter
+        # true stabilizer at position i is m_i = F_i + Mi; num/den are at
+        # scale exp(-m_i), so the xLSTM lower bound max(|den_true|, 1)
+        # becomes exp(-m_i) here
+        h = (y_intra + y_inter) / jnp.maximum(
+            jnp.abs(den), jnp.exp(-(F + Mi)))[..., None]
+        # state update to chunk end
+        Ftot = F[:, -1]                              # [B, H]
+        a_last = a[:, -1]
+        Mc = jnp.maximum(m, a_last)
+        wj = jnp.exp(s_j - Mc[:, None, :])           # [B, ch, H]
+        C_new = C * jnp.exp(m - Mc)[..., None, None] \
+            + jnp.einsum("bjhd,bjhv,bjh->bhdv", kc, vc, wj)
+        n_new = n * jnp.exp(m - Mc)[..., None] \
+            + jnp.einsum("bjhd,bjh->bhd", kc, wj)
+        m_new = Ftot + Mc
+        return (C_new, n_new, m_new), h
+
+    (C, n, m), hs = jax.lax.scan(
+        jax.checkpoint(chunk_body), (C0, n0, m0),
+        tuple(map(to_chunks, (qp, kp, vp, ip, fp))))
+    h = hs.transpose(1, 0, 2, 3, 4).reshape(B, Sp, H, dv)[:, :S]
+    return h, (C, n, m)
+
+
+def mlstm_recurrent_reference(q, k, v, i_pre, f_pre):
+    """Sequential per-step reference (tests; float32, no chunking)."""
+    B, S, H, dk = q.shape
+    dv = v.shape[-1]
+    C = jnp.zeros((B, H, dk, dv), jnp.float32)
+    n = jnp.zeros((B, H, dk), jnp.float32)
+    m = jnp.full((B, H), -1e30, jnp.float32)
+    hs = []
+    for t in range(S):
+        logf = jax.nn.log_sigmoid(f_pre[:, t])
+        i_t = i_pre[:, t]
+        m_new = jnp.maximum(logf + m, i_t)
+        C = C * jnp.exp(logf + m - m_new)[..., None, None] \
+            + jnp.exp(i_t - m_new)[..., None, None] \
+            * jnp.einsum("bhd,bhv->bhdv", k[:, t], v[:, t])
+        n = n * jnp.exp(logf + m - m_new)[..., None] \
+            + jnp.exp(i_t - m_new)[..., None] * k[:, t]
+        m = m_new
+        num = jnp.einsum("bhd,bhdv->bhv", q[:, t], C)
+        den = jnp.einsum("bhd,bhd->bh", q[:, t], n)
+        h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m))[..., None]
+        hs.append(h)
+    return jnp.stack(hs, axis=1), (C, n, m)
+
+
+def mlstm_block(x, p, n_heads: int, cfg: XLSTMConfig):
+    """Full mLSTM residual block: norm -> cell -> gated output."""
+    B, S, D = x.shape
+    from .layers import rms_norm
+    xn = rms_norm(x, p["norm"])
+    q, k, v, i_pre, f_pre = _mlstm_qkvif(xn, p, n_heads)
+    h, _ = mlstm_chunkwise(q, k, v, i_pre, f_pre, chunk=cfg.chunk)
+    h = h.reshape(B, S, D).astype(x.dtype)
+    h = h * jax.nn.silu(xn @ p["w_gate"])
+    return h @ p["w_out"]
+
+
+def mlstm_decode_step(x, state, p, n_heads: int):
+    """O(1) decode: single recurrent step over persistent (C, n, m)."""
+    B, S, D = x.shape  # S == 1
+    from .layers import rms_norm
+    xn = rms_norm(x, p["norm"])
+    q, k, v, i_pre, f_pre = _mlstm_qkvif(xn, p, n_heads)
+    C, n, m = state
+    logf = jax.nn.log_sigmoid(f_pre[:, 0])
+    i_t = i_pre[:, 0]
+    m_new = jnp.maximum(logf + m, i_t)
+    C = C * jnp.exp(logf + m - m_new)[..., None, None] \
+        + jnp.exp(i_t - m_new)[..., None, None] \
+        * jnp.einsum("bhd,bhv->bhdv", k[:, 0], v[:, 0])
+    n = n * jnp.exp(logf + m - m_new)[..., None] \
+        + jnp.exp(i_t - m_new)[..., None] * k[:, 0]
+    num = jnp.einsum("bhd,bhdv->bhv", q[:, 0], C)
+    den = jnp.einsum("bhd,bhd->bh", q[:, 0], n)
+    h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_new))[..., None]
+    h = h.reshape(B, 1, D).astype(x.dtype)
+    h = h * jax.nn.silu(xn @ p["w_gate"])
+    return h @ p["w_out"], (C, n, m_new)
+
+
+def mlstm_init_state(batch: int, d_model: int, n_heads: int,
+                     cfg: XLSTMConfig):
+    dv = d_model // n_heads
+    dk = max(int(dv * cfg.qk_dim_factor), 8)
+    return (jnp.zeros((batch, n_heads, dk, dv), jnp.float32),
+            jnp.zeros((batch, n_heads, dk), jnp.float32),
+            jnp.full((batch, n_heads), -1e30, jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+def slstm_params(key, d_model: int, n_heads: int, dtype):
+    dh = d_model // n_heads
+    ks = jax.random.split(key, 9)
+    s = 1.0 / math.sqrt(d_model)
+    sh = 1.0 / math.sqrt(dh)
+    p = {"norm": jnp.ones((d_model,), dtype)}
+    for idx, g in enumerate(("z", "i", "f", "o")):
+        p[f"w_{g}"] = (jax.random.normal(ks[idx], (d_model, d_model))
+                       * s).astype(dtype)
+        p[f"r_{g}"] = (jax.random.normal(ks[4 + idx], (n_heads, dh, dh))
+                       * sh).astype(dtype)
+    p["b_f"] = (3.0 * jnp.ones((d_model,))).astype(dtype)
+    p["w_out"] = (jax.random.normal(ks[8], (d_model, d_model))
+                  * s).astype(dtype)
+    return p
+
+
+def slstm_block(x, p, n_heads: int, chunk: int = 256, state=None):
+    """Sequential sLSTM: outer rematerialized chunks, inner step scan."""
+    B, S, D = x.shape
+    dh = D // n_heads
+    from .layers import rms_norm
+    xn = rms_norm(x, p["norm"])
+    pre = {g: (xn @ p[f"w_{g}"]).astype(jnp.float32)
+           for g in ("z", "i", "f", "o")}
+    pre["f"] = pre["f"] + p["b_f"].astype(jnp.float32)
+    ch = min(chunk, S)
+    nc = -(-S // ch)
+    Sp = nc * ch
+
+    def pad(t):
+        return jnp.pad(t, ((0, 0), (0, Sp - S), (0, 0)))
+
+    xs = {g: pad(pre[g]).reshape(B, nc, ch, D).transpose(1, 0, 2, 3)
+          for g in pre}
+    R = {g: p[f"r_{g}"].astype(jnp.float32) for g in ("z", "i", "f", "o")}
+
+    if state is None:
+        zeros = jnp.zeros((B, D), jnp.float32)
+        state = (zeros, zeros, zeros + 1e-6, zeros - 1e30)  # h, c, n, m
+
+    def chunk_body(carry, inp):
+        def step(carry, gates_t):
+            h, c, n, m = carry
+            hH = h.reshape(B, n_heads, dh)
+            rec = {g: jnp.einsum("bhd,hde->bhe", hH, R[g]).reshape(B, D)
+                   for g in R}
+            z = jnp.tanh(gates_t["z"] + rec["z"])
+            i_p = gates_t["i"] + rec["i"]
+            f_p = jax.nn.log_sigmoid(gates_t["f"] + rec["f"])
+            o = jax.nn.sigmoid(gates_t["o"] + rec["o"])
+            m_new = jnp.maximum(f_p + m, i_p)
+            c = c * jnp.exp(f_p + m - m_new) + jnp.exp(i_p - m_new) * z
+            n = n * jnp.exp(f_p + m - m_new) + jnp.exp(i_p - m_new)
+            h = o * c / jnp.maximum(n, 1e-6)
+            return (h, c, n, m_new), h
+
+        gates_seq = {g: inp[g].transpose(1, 0, 2) for g in inp}
+        carry, hs = jax.lax.scan(
+            step, carry,
+            jax.tree_util.tree_map(lambda t: t, gates_seq))
+        return carry, hs.transpose(1, 0, 2)
+
+    state, hch = jax.lax.scan(jax.checkpoint(chunk_body), state, xs)
+    h = hch.transpose(1, 0, 2, 3).reshape(B, Sp, D)[:, :S]
+    return (h.astype(x.dtype) @ p["w_out"]), state
+
+
+def slstm_init_state(batch: int, d_model: int):
+    z = jnp.zeros((batch, d_model), jnp.float32)
+    return (z, z, z + 1e-6, z - 1e30)

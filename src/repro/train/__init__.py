@@ -1,0 +1,14 @@
+"""Training substrate: optimizers, step factories, data, checkpointing,
+elasticity."""
+from .checkpoint import CheckpointManager
+from .data import DataConfig, SyntheticDataset
+from .elastic import MeshPlan, StragglerMonitor, replan_mesh
+from .optimizer import OPTIMIZERS, Optimizer, clip_by_global_norm, get_optimizer
+from .train_step import (TrainPolicy, make_estimator_hooks, make_fwd_bwd,
+                         make_prefill_step, make_serve_step, make_train_step)
+
+__all__ = ["CheckpointManager", "DataConfig", "SyntheticDataset", "MeshPlan",
+           "StragglerMonitor", "replan_mesh", "OPTIMIZERS", "Optimizer",
+           "clip_by_global_norm", "get_optimizer", "TrainPolicy",
+           "make_estimator_hooks", "make_fwd_bwd", "make_prefill_step",
+           "make_serve_step", "make_train_step"]

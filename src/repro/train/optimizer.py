@@ -1,0 +1,220 @@
+"""Optimizers (pure init/update pairs, optax-style but dependency-free).
+
+The paper's evaluation sweeps SGD / Adam / AdamW / RMSprop / Adagrad /
+Adafactor (§4.1.2) — the optimizer choice changes persistent state 0x-2x
+parameter bytes, which is exactly what estimators must capture (DNNMem's
+blindness to it is a measured failure mode). All updates are per-leaf
+tree.maps so XLA fuses them into the backward pass (eager grad death —
+see core.orchestrator); global-norm clipping intentionally couples
+gradients and flips the estimator into ``at_update`` mode.
+
+Optimizer state dtype is fp32 regardless of param dtype (master-quality
+statistics for bf16 training). Adafactor stores factored second moments
+(rows+cols) — the realistic choice for the 100B+ configs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    name: str
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], tuple[Any, Any]]
+    state_multiplier: float   # persistent state size / param size (approx)
+
+
+def _treemap(fn, *trees, **kw):
+    return jax.tree_util.tree_map(fn, *trees, **kw)
+
+
+def _f32(p):
+    return p.astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+def sgd(lr: float = 1e-3, momentum: float = 0.0) -> Optimizer:
+    if momentum:
+        def init(params):
+            return _treemap(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+        def update(params, grads, state):
+            new_m = _treemap(lambda m, g: momentum * m + _f32(g), state, grads)
+            new_p = _treemap(lambda p, m: (p - lr * m.astype(p.dtype)),
+                             params, new_m)
+            return new_p, new_m
+        return Optimizer("sgd_momentum", init, update, 1.0)
+
+    def init(params):
+        return ()
+
+    def update(params, grads, state):
+        return _treemap(lambda p, g: p - lr * g.astype(p.dtype),
+                        params, grads), state
+    return Optimizer("sgd", init, update, 0.0)
+
+
+def adam(lr: float = 1e-3, b1: float = 0.9, b2: float = 0.999,
+         eps: float = 1e-8, weight_decay: float = 0.0,
+         name: str = "adam") -> Optimizer:
+    def init(params):
+        z = lambda p: jnp.zeros(p.shape, jnp.float32)  # noqa: E731
+        return {"m": _treemap(z, params), "v": _treemap(z, params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(params, grads, state):
+        count = state["count"] + 1
+        c = count.astype(jnp.float32)
+        bc1 = 1.0 - b1 ** c
+        bc2 = 1.0 - b2 ** c
+
+        def upd(p, g, m, v):
+            g = _f32(g)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            step = lr * (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            if weight_decay:
+                step = step + lr * weight_decay * _f32(p)
+            return (p - step.astype(p.dtype)), m, v
+
+        out = _treemap(upd, params, grads, state["m"], state["v"])
+        new_p = _treemap(lambda t: t[0], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+        new_m = _treemap(lambda t: t[1], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+        new_v = _treemap(lambda t: t[2], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+        return new_p, {"m": new_m, "v": new_v, "count": count}
+
+    return Optimizer(name, init, update, 2.0)
+
+
+def adamw(lr: float = 1e-3, weight_decay: float = 0.01, **kw) -> Optimizer:
+    return adam(lr=lr, weight_decay=weight_decay, name="adamw", **kw)
+
+
+def rmsprop(lr: float = 1e-3, decay: float = 0.9,
+            eps: float = 1e-8) -> Optimizer:
+    def init(params):
+        return _treemap(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+    def update(params, grads, state):
+        def upd(p, g, v):
+            g = _f32(g)
+            v = decay * v + (1 - decay) * g * g
+            return (p - (lr * g / (jnp.sqrt(v) + eps)).astype(p.dtype)), v
+        out = _treemap(upd, params, grads, state)
+        new_p = _treemap(lambda t: t[0], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+        new_v = _treemap(lambda t: t[1], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+        return new_p, new_v
+    return Optimizer("rmsprop", init, update, 1.0)
+
+
+def adagrad(lr: float = 1e-2, eps: float = 1e-10) -> Optimizer:
+    def init(params):
+        return _treemap(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+    def update(params, grads, state):
+        def upd(p, g, a):
+            g = _f32(g)
+            a = a + g * g
+            return (p - (lr * g / (jnp.sqrt(a) + eps)).astype(p.dtype)), a
+        out = _treemap(upd, params, grads, state)
+        new_p = _treemap(lambda t: t[0], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+        new_a = _treemap(lambda t: t[1], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+        return new_p, new_a
+    return Optimizer("adagrad", init, update, 1.0)
+
+
+def adafactor(lr: float = 1e-3, decay: float = 0.8,
+              eps: float = 1e-30) -> Optimizer:
+    """Factored second moments: O(rows+cols) state for matrices — the
+    memory-frugal choice the paper uses for its largest models (RQ5)."""
+
+    def _factored(p):
+        return p.ndim >= 2
+
+    def init(params):
+        def st(p):
+            if _factored(p):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                        jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"f": _treemap(st, params), "count": jnp.zeros((), jnp.int32)}
+
+    def update(params, grads, state):
+        count = state["count"] + 1
+        beta = 1.0 - (count.astype(jnp.float32) + 1.0) ** (-decay)
+
+        def upd(p, g, s):
+            g = _f32(g)
+            g2 = g * g + eps
+            if _factored(p):
+                vr = beta * s["vr"] + (1 - beta) * g2.mean(axis=-1)
+                vc = beta * s["vc"] + (1 - beta) * g2.mean(axis=-2)
+                denom = (vr[..., None] * vc[..., None, :]
+                         / jnp.maximum(vr.mean(axis=-1)[..., None, None],
+                                       eps))
+                step = g * jax.lax.rsqrt(denom + eps)
+                new_s = {"vr": vr, "vc": vc}
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                step = g * jax.lax.rsqrt(v + eps)
+                new_s = {"v": v}
+            # update clipping (RMS <= 1) as in the paper's implementation
+            rms = jnp.sqrt(jnp.mean(step * step) + eps)
+            step = step / jnp.maximum(1.0, rms)
+            return (p - (lr * step).astype(p.dtype)), new_s
+
+        out = _treemap(upd, params, grads, state["f"],
+                       is_leaf=lambda x: isinstance(x, dict)
+                       and ("v" in x or "vr" in x))
+        new_p = _treemap(lambda t: t[0], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+        new_f = _treemap(lambda t: t[1], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+        return new_p, {"f": new_f, "count": count}
+
+    return Optimizer("adafactor", init, update, 0.05)
+
+
+OPTIMIZERS: dict[str, Callable[..., Optimizer]] = {
+    "sgd": sgd,
+    "sgd_momentum": partial(sgd, momentum=0.9),
+    "adam": adam,
+    "adamw": adamw,
+    "rmsprop": rmsprop,
+    "adagrad": adagrad,
+    "adafactor": adafactor,
+}
+
+
+def get_optimizer(name: str, **kw) -> Optimizer:
+    return OPTIMIZERS[name](**kw)
+
+
+def clip_by_global_norm(update_fn, max_norm: float = 1.0):
+    """Wrap an optimizer update with global-norm clipping.
+
+    NOTE: this *couples* gradients (all must coexist at the update) —
+    the estimator's taint analysis detects it and switches grad_release
+    to at_update, raising the (correct) estimate.
+    """
+    def wrapped(params, grads, state):
+        gn = jnp.sqrt(sum(jnp.sum(_f32(g) ** 2)
+                          for g in jax.tree_util.tree_leaves(grads)))
+        scale = jnp.minimum(1.0, max_norm / (gn + 1e-9))
+        grads = _treemap(lambda g: (_f32(g) * scale).astype(g.dtype), grads)
+        return update_fn(params, grads, state)
+    return wrapped

@@ -1,0 +1,205 @@
+"""Unit + property tests for the two-level allocator simulation."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.allocator import (
+    CUDA_CACHING, XLA_BFC, TPU_ARENA, MiB, KiB,
+    AllocatorPolicy, CachingAllocatorSim, DeviceAllocatorSim, SimOOMError,
+)
+
+
+def make(policy=CUDA_CACHING, capacity=64 * 1024 * MiB):
+    dev = DeviceAllocatorSim(capacity, policy.device_page)
+    return CachingAllocatorSim(policy, dev)
+
+
+def check_consistency(sim: CachingAllocatorSim):
+    """Structural invariants of the BFC state."""
+    in_use_total = 0
+    for seg in sim.segments_snapshot():
+        off = 0
+        prev_free = False
+        for b in seg["blocks"]:
+            assert b["offset"] == off, "blocks must tile the segment"
+            off += b["size"]
+            if b["free"]:
+                assert not prev_free, "adjacent free blocks must be coalesced"
+            else:
+                in_use_total += b["size"]
+            prev_free = b["free"]
+        assert off == seg["size"], "block sizes must sum to segment size"
+    # in-use block sizes include internal slack when a block wasn't split,
+    # so they bound `allocated` (sum of rounded *requests*) from above.
+    assert sim.allocated <= in_use_total
+    assert sim.allocated <= sim.reserved
+    assert sim.peak_allocated >= sim.allocated
+    assert sim.peak_reserved >= sim.reserved
+
+
+class TestRounding:
+    def test_min_block_rounding(self):
+        sim = make()
+        sim.malloc(1)
+        assert sim.allocated == 512
+        sim2 = make()
+        sim2.malloc(513)
+        assert sim2.allocated == 1024
+
+    def test_small_request_gets_2mib_segment(self):
+        sim = make()
+        sim.malloc(1 * KiB)
+        assert sim.reserved == 2 * MiB
+
+    def test_mid_request_gets_20mib_segment(self):
+        sim = make()
+        sim.malloc(5 * MiB)
+        assert sim.reserved == 20 * MiB
+
+    def test_huge_request_gets_rounded_own_segment(self):
+        sim = make()
+        sim.malloc(31 * MiB)
+        assert sim.reserved == 32 * MiB  # rounded to 2 MiB multiple
+
+
+class TestCachingAndReuse:
+    def test_free_then_malloc_reuses_cached_block(self):
+        sim = make()
+        h = sim.malloc(1 * MiB)
+        assert sim.reserved == 2 * MiB
+        sim.free(h)
+        assert sim.reserved == 2 * MiB, "segment is cached, not returned"
+        sim.malloc(1 * MiB)
+        assert sim.reserved == 2 * MiB, "reuse must not grow reservation"
+        assert sim.n_cache_hits >= 1
+
+    def test_splitting_in_small_pool(self):
+        sim = make()
+        sim.malloc(512)     # 2 MiB segment, split off 512
+        sim.malloc(512)     # fits in the remainder — no new segment
+        assert sim.reserved == 2 * MiB
+        assert sim.n_splits >= 2
+
+    def test_large_pool_no_split_below_threshold(self):
+        # 19.5 MiB request in a 20 MiB segment: remainder 0.5 MiB <= 1 MiB
+        # so the block is NOT split (PyTorch split_remainder rule).
+        sim = make()
+        sim.malloc(int(19.5 * MiB))
+        snap = sim.segments_snapshot()
+        assert len(snap[0]["blocks"]) == 1
+
+    def test_coalescing(self):
+        sim = make()
+        h1 = sim.malloc(512)
+        h2 = sim.malloc(512)
+        h3 = sim.malloc(512)
+        sim.free(h2)
+        sim.free(h1)
+        sim.free(h3)
+        snap = sim.segments_snapshot()
+        assert len(snap[0]["blocks"]) == 1 and snap[0]["blocks"][0]["free"]
+        assert sim.n_merges >= 2
+        check_consistency(sim)
+
+
+class TestTwoLevelOOM:
+    def test_reclaim_before_oom(self):
+        # capacity 40 MiB: cache a 20 MiB segment, then a 22 MiB request
+        # must trigger reclaim of the cached segment and succeed.
+        sim = make(capacity=40 * MiB)
+        h = sim.malloc(5 * MiB)    # mid-size -> 20 MiB segment
+        sim.free(h)                # cached
+        assert sim.reserved == 20 * MiB
+        sim.malloc(22 * MiB)       # needs 22 MiB segment; 20+22 > 40
+        assert sim.reserved == 22 * MiB
+        assert sim.device.n_returns == 1
+
+    def test_oom_when_reclaim_insufficient(self):
+        sim = make(capacity=10 * MiB)
+        with pytest.raises(SimOOMError):
+            sim.malloc(11 * MiB)
+
+    def test_oom_respects_live_blocks(self):
+        sim = make(capacity=42 * MiB)
+        sim.malloc(15 * MiB)       # live, cannot be reclaimed
+        with pytest.raises(SimOOMError):
+            sim.malloc(30 * MiB)
+
+
+class TestArenaPolicy:
+    def test_arena_reserved_tracks_rounded_live(self):
+        sim = make(policy=TPU_ARENA)
+        h = sim.malloc(10 * MiB)
+        assert sim.reserved == 10 * MiB  # page 4 KiB, already aligned
+        sim.free(h)
+        sim.malloc(1 * MiB)
+        assert sim.reserved == 10 * MiB, "arena keeps high-water reservation"
+        assert sim.allocated == 1 * MiB
+
+    def test_arena_oom_only_when_live_exceeds(self):
+        sim = make(policy=TPU_ARENA, capacity=10 * MiB)
+        h = sim.malloc(8 * MiB)
+        sim.free(h)
+        # unlike BFC fragmentation, compaction lets this succeed
+        sim.malloc(9 * MiB)
+        with pytest.raises(SimOOMError):
+            sim.malloc(8 * MiB)
+
+
+class TestXlaBfc:
+    def test_growth_doubling(self):
+        sim = make(policy=XLA_BFC)
+        sim.malloc(100)
+        first = sim.reserved
+        for _ in range(8):
+            sim.malloc(first)  # force new regions
+        assert sim.reserved > first * 2, "regions should grow"
+        check_consistency(sim)
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.lists(
+    st.tuples(st.sampled_from(["a", "f"]),
+              st.integers(min_value=1, max_value=64 * MiB)),
+    min_size=1, max_size=120,
+))
+def test_property_random_sequences_cuda(ops):
+    """Random alloc/free streams preserve all structural invariants."""
+    sim = make()
+    live = []
+    for kind, size in ops:
+        if kind == "a" or not live:
+            live.append(sim.malloc(size))
+        else:
+            sim.free(live.pop(size % len(live)))
+    check_consistency(sim)
+    for h in live:
+        sim.free(h)
+    check_consistency(sim)
+    assert sim.allocated == 0
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.lists(st.integers(min_value=1, max_value=8 * MiB),
+                min_size=1, max_size=60),
+       st.sampled_from([CUDA_CACHING, XLA_BFC, TPU_ARENA]))
+def test_property_reserved_geq_live_all_policies(sizes, policy):
+    sim = make(policy=policy)
+    hs = [sim.malloc(s) for s in sizes]
+    rounded = sum(sim.round_size(s) for s in sizes)
+    assert sim.allocated == rounded
+    assert sim.reserved >= sim.allocated
+    for h in hs:
+        sim.free(h)
+    assert sim.allocated == 0
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.integers(min_value=256, max_value=4 * MiB),
+                min_size=2, max_size=40))
+def test_property_peak_reserved_bounded_by_sum_of_segments(sizes):
+    """Peak reserved never exceeds what per-alloc segments would cost."""
+    sim = make()
+    for s in sizes:
+        sim.malloc(s)
+    upper = sum(sim.allocation_size(sim.round_size(s)) for s in sizes)
+    assert sim.peak_reserved <= upper

@@ -1,0 +1,314 @@
+"""Integration + unit tests for the xMem pipeline (tracer -> estimate)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (
+    BlockKind, MemorySimulator, OrchestratorPolicy, Phase, Trace,
+    XMemEstimator, liveness_curve, peak_live_bytes, reconstruct_lifecycles,
+    reconstruct_from_address_events, trace_fn, update_grad_coupling,
+)
+from repro.core.analyzer import OpWindow, attribute_by_time_window
+from repro.core.baselines import (DNNMemEstimator, JobSpec,
+                                  SchedTuneEstimator, TensorSumEstimator)
+from repro.core.baselines.directprobe import DirectProbeEstimator, measured_peak
+from repro.core.metrics import (RunRecord, anova_oneway, mcp, mre, pef,
+                                quadrant, summarize)
+
+
+# ---------------------------------------------------------------------------
+# shared tiny workload
+D, H, B = 128, 256, 32
+
+
+def _loss(params, batch):
+    h = jnp.tanh(batch["x"] @ params["w1"])
+    y = h @ params["w2"]
+    return jnp.mean((y - batch["y"]) ** 2)
+
+
+def _fwd_bwd(p, b):
+    return jax.value_and_grad(_loss)(p, b)
+
+
+def _adam_init(p):
+    return jax.tree.map(lambda x: (jnp.zeros_like(x), jnp.zeros_like(x)), p)
+
+
+def _adam(p, g, s):
+    def upd(pp, gg, ss):
+        m, v = ss
+        m = 0.9 * m + 0.1 * gg
+        v = 0.999 * v + 0.001 * gg * gg
+        return pp - 1e-3 * m / (jnp.sqrt(v) + 1e-8), (m, v)
+    out = jax.tree.map(upd, p, g, s, is_leaf=lambda x: isinstance(x, tuple))
+    return {k: out[k][0] for k in out}, {k: out[k][1] for k in out}
+
+
+def _sgd(p, g, s):
+    return jax.tree.map(lambda a, b: a - 0.01 * b, p, g), s
+
+
+@pytest.fixture
+def shapes():
+    params = {"w1": jax.ShapeDtypeStruct((D, H), jnp.float32),
+              "w2": jax.ShapeDtypeStruct((H, D), jnp.float32)}
+    batch = {"x": jax.ShapeDtypeStruct((B, D), jnp.float32),
+             "y": jax.ShapeDtypeStruct((B, D), jnp.float32)}
+    return params, batch
+
+
+# ---------------------------------------------------------------------------
+class TestTracer:
+    def test_no_leaks_and_balanced(self, shapes):
+        params, batch = shapes
+        flat = list(params.values()) + list(batch.values())
+        trace, tr = trace_fn(
+            lambda w1, w2, x, y: _fwd_bwd({"w1": w1, "w2": w2},
+                                          {"x": x, "y": y}), *flat,
+            arg_kinds=[BlockKind.PARAM] * 2 + [BlockKind.INPUT] * 2)
+        leaks = [b for b in tr.blocks.values()
+                 if not b.freed and not b.pinned and b.size > 0]
+        assert not leaks
+        live = 0
+        for e in trace.events:
+            live += e.size if e.kind == "alloc" else -e.size
+            assert live >= 0
+        # final live = pinned inputs + outputs only
+        pinned = sum(b.size for b in tr.blocks.values()
+                     if b.pinned and not b.freed)
+        assert live == pinned
+
+    def test_scan_unroll_bounded(self):
+        def f(ws, x):
+            def body(c, w):
+                return jnp.tanh(c @ w), ()
+            c, _ = jax.lax.scan(body, x, ws)
+            return jnp.sum(c)
+        ws = jax.ShapeDtypeStruct((100, 16, 16), jnp.float32)
+        x = jax.ShapeDtypeStruct((4, 16), jnp.float32)
+        t3, _ = trace_fn(f, ws, x, scan_unroll_cap=3)
+        t5, _ = trace_fn(f, ws, x, scan_unroll_cap=5)
+        # event count grows with cap but stays far below full unroll
+        assert len(t3.events) < len(t5.events) < 100 * 10
+
+    def test_grad_outputs_marked(self, shapes):
+        params, batch = shapes
+        est = XMemEstimator.for_tpu()
+        rep = est.estimate_training(_fwd_bwd, params, batch,
+                                    update_fn=_sgd, opt_init_fn=lambda p: ())
+        assert rep.peak_bytes > rep.persistent_bytes > 0
+
+    def test_while_loop(self):
+        def f(x):
+            def cond(c):
+                return c[1] < 5
+            def body(c):
+                return (jnp.tanh(c[0] * 1.1), c[1] + 1)
+            y, _ = jax.lax.while_loop(cond, body, (x, 0))
+            return jnp.sum(y)
+        x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+        trace, tr = trace_fn(f, x)
+        assert len(trace.events) > 4
+        leaks = [b for b in tr.blocks.values()
+                 if not b.freed and not b.pinned and b.size > 0]
+        assert not leaks
+
+    def test_cond_picks_bigger_branch(self):
+        def f(x, flag):
+            return jax.lax.cond(flag,
+                                lambda v: jnp.tanh(v @ v.T) @ v,   # big
+                                lambda v: v * 1.0,                 # small
+                                x)
+        x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+        flag = jax.ShapeDtypeStruct((), jnp.bool_)
+        trace, _ = trace_fn(f, x, flag)
+        big = 64 * 64 * 4
+        n_big = sum(1 for e in trace.events
+                    if e.kind == "alloc" and e.size >= big)
+        assert n_big >= 2  # traced the expensive branch
+
+
+# ---------------------------------------------------------------------------
+class TestAnalyzer:
+    def test_lifecycle_reconstruction_roundtrip(self, shapes):
+        params, batch = shapes
+        flat = list(params.values()) + list(batch.values())
+        trace, _ = trace_fn(
+            lambda w1, w2, x, y: _fwd_bwd({"w1": w1, "w2": w2},
+                                          {"x": x, "y": y}), *flat)
+        blocks = reconstruct_lifecycles(trace)
+        assert peak_live_bytes(blocks) > 0
+        n_alloc = sum(1 for e in trace.events if e.kind == "alloc")
+        assert len(blocks) == n_alloc
+
+    def test_address_reuse_reconstruction(self):
+        events = [
+            {"kind": "alloc", "addr": 100, "size": 10, "t": 0},
+            {"kind": "free", "addr": 100, "size": 10, "t": 1},
+            {"kind": "alloc", "addr": 100, "size": 20, "t": 2},  # reuse!
+            {"kind": "free", "addr": 100, "size": 20, "t": 3},
+        ]
+        blocks = reconstruct_from_address_events(events)
+        assert len(blocks) == 2
+        assert {b.size for b in blocks} == {10, 20}
+
+    def test_time_window_attribution(self):
+        from repro.core import BlockLifecycle
+        blocks = [BlockLifecycle(0, 100, 5, 8),        # inside op window
+                  BlockLifecycle(1, 100, 5, 50),       # persists past comp.
+                  BlockLifecycle(2, 100, 2, 30)]       # script temp -> drop
+        windows = [OpWindow("layer0/linear", 4, 10, component_end=12)]
+        att = attribute_by_time_window(blocks, windows)
+        names = {b.block_id: b.scope for b in att}
+        assert names.get(0) == "layer0/linear"
+        assert names.get(1) == "layer0/linear"
+        assert 2 not in names
+
+
+# ---------------------------------------------------------------------------
+class TestEstimatorAccuracy:
+    def test_tpu_estimate_close_to_xla(self, shapes):
+        params, batch = shapes
+        est = XMemEstimator.for_tpu()
+        rep = est.estimate_training(_fwd_bwd, params, batch,
+                                    update_fn=_adam, opt_init_fn=_adam_init)
+        job = JobSpec("t", _fwd_bwd, params, batch, _adam, _adam_init)
+        truth = measured_peak(job)
+        err = abs(rep.peak_bytes - truth) / truth
+        assert err < 0.45, f"estimate {rep.peak_bytes} vs truth {truth}"
+
+    def test_pos1_raises_peak(self, shapes):
+        """zero_grad-placement sensitivity (paper Fig. 1)."""
+        params, batch = shapes
+        r0 = XMemEstimator(orchestrator_policy=OrchestratorPolicy(
+            grad_release="at_update")).estimate_training(
+            _fwd_bwd, params, batch, update_fn=_adam, opt_init_fn=_adam_init)
+        r1 = XMemEstimator(orchestrator_policy=OrchestratorPolicy(
+            grad_release="at_next_iter")).estimate_training(
+            _fwd_bwd, params, batch, update_fn=_adam, opt_init_fn=_adam_init)
+        # at this tiny scale 2 MiB segment quantization can flatten the
+        # reserved peaks; the retained-gradient effect shows in tensor peaks
+        assert r1.peak_tensor_bytes > r0.peak_tensor_bytes
+        assert r1.peak_bytes >= r0.peak_bytes
+
+    def test_coupling_detection(self, shapes):
+        params, batch = shapes
+        grads = jax.eval_shape(lambda p, b: jax.grad(_loss)(p, b),
+                               params, batch)
+        assert update_grad_coupling(_sgd, params, grads, ())["coupling"] == "per_leaf"
+
+        def clip(p, g, s):
+            n = jnp.sqrt(sum(jnp.sum(x * x) for x in jax.tree.leaves(g)))
+            return jax.tree.map(lambda a, b: a - b / (n + 1), p, g), s
+        assert update_grad_coupling(clip, params, grads, ())["coupling"] == "coupled"
+
+    def test_serving_estimate(self, shapes):
+        params, _ = shapes
+        cache = {"kv": jax.ShapeDtypeStruct((2, 1024, D), jnp.float32)}
+        tok = {"x": jax.ShapeDtypeStruct((2, D), jnp.float32)}
+
+        def decode(params, cache, batch):
+            h = jnp.tanh(batch["x"] @ params["w1"]) @ params["w2"]
+            new_kv = jnp.concatenate(
+                [cache["kv"][:, 1:], h[:, None, :]], axis=1)
+            return h, {"kv": new_kv}
+        rep = XMemEstimator.for_tpu().estimate_serving(
+            decode, params, cache, tok)
+        cache_b = 2 * 1024 * D * 4
+        assert rep.peak_bytes >= cache_b  # cache dominates and persists
+
+    def test_oom_verdict(self, shapes):
+        params, batch = shapes
+        est = XMemEstimator.for_tpu(capacity=100_000)  # ~100 KB: must OOM
+        rep = est.estimate_training(_fwd_bwd, params, batch,
+                                    update_fn=_adam, opt_init_fn=_adam_init)
+        assert rep.oom
+
+
+# ---------------------------------------------------------------------------
+class TestBaselines:
+    def test_tensorsum_overestimates(self, shapes):
+        params, batch = shapes
+        job = JobSpec("t", _fwd_bwd, params, batch, _adam, _adam_init)
+        naive = TensorSumEstimator().estimate(job)
+        truth = measured_peak(job)
+        assert naive > truth  # no liveness -> systematic overestimate
+
+    def test_dnnmem_blind_to_optimizer(self, shapes):
+        """DNNMem analyzes the static fwd/bwd graph only — it produces the
+        SAME estimate for SGD and Adam jobs, while the truth differs by the
+        optimizer state (the paper's 'more accurate for SGD' observation)."""
+        params, batch = shapes
+        job_adam = JobSpec("a", _fwd_bwd, params, batch, _adam, _adam_init)
+        job_sgd = JobSpec("s", _fwd_bwd, params, batch, _sgd, lambda p: ())
+        est = DNNMemEstimator()
+        assert est.estimate(job_adam) == est.estimate(job_sgd)
+        assert measured_peak(job_adam) > measured_peak(job_sgd)
+
+    def test_schedtune_fits_and_predicts(self, shapes):
+        params, batch = shapes
+        jobs, truths = [], []
+        for b in (8, 16, 32):
+            bt = {"x": jax.ShapeDtypeStruct((b, D), jnp.float32),
+                  "y": jax.ShapeDtypeStruct((b, D), jnp.float32)}
+            j = JobSpec(f"b{b}", _fwd_bwd, params, bt, _adam, _adam_init,
+                        meta={"batch_size": b, "d_model": D, "n_layers": 2,
+                              "optimizer_states": 2})
+            jobs.append(j)
+            truths.append(measured_peak(j))
+        st = SchedTuneEstimator()
+        st.fit(jobs, truths)
+        pred = st.estimate(jobs[-1])
+        assert abs(pred - truths[-1]) / truths[-1] < 0.5
+
+    def test_directprobe_extrapolates(self, shapes):
+        params, batch = shapes
+        job = JobSpec("t", _fwd_bwd, params, batch, _adam, _adam_init)
+        est = DirectProbeEstimator().estimate(job)
+        truth = measured_peak(job)
+        assert abs(est - truth) / truth < 0.25
+
+
+# ---------------------------------------------------------------------------
+class TestMetrics:
+    def _rec(self, est, truth, cap=10_000):
+        return RunRecord("c", "f", "e", "d0", cap, est, truth)
+
+    def test_two_round_validation(self):
+        good = self._rec(1100, 1000)          # slight overestimate: safe
+        assert good.c1 and good.c2 and not good.oom_round2
+        under = self._rec(900, 1000)          # underestimate: round-2 OOM
+        assert under.c1 and not under.c2
+        oom_caught = self._rec(11_000, 10_500)  # correctly predicted OOM
+        assert oom_caught.c1 and oom_caught.c2
+        oom_missed = self._rec(9_000, 10_500)   # missed a real OOM
+        assert not oom_missed.c1 and not oom_missed.c2
+
+    def test_mcp_penalty(self):
+        recs = [self._rec(1100, 1000), self._rec(900, 1000)]
+        # (10000-1100) + (-10000) averaged
+        assert mcp(recs) == pytest.approx((8900 - 10000) / 2)
+
+    def test_mre_excludes_real_oom(self):
+        recs = [self._rec(1100, 1000), self._rec(5000, 20_000)]
+        assert mre(recs) == pytest.approx(0.1)
+
+    def test_quadrants(self):
+        optimal = [self._rec(1020, 1000) for _ in range(5)]
+        assert quadrant(optimal) == "optimal"
+        worst = [self._rec(400, 1000) for _ in range(5)]
+        assert quadrant(worst) == "worst"
+
+    def test_anova(self):
+        g1 = [1.0, 1.1, 0.9, 1.0]
+        g2 = [5.0, 5.1, 4.9, 5.0]
+        r = anova_oneway([g1, g2])
+        assert r["F"] > 100
+        assert r["eta_sq"] > 0.9
+
+    def test_summarize(self):
+        recs = [RunRecord("c", "f", "xmem", "d", 10_000, 1050, 1000),
+                RunRecord("c", "f", "dnnmem", "d", 10_000, 2000, 1000)]
+        s = summarize(recs)
+        assert s["xmem"]["mre"] < s["dnnmem"]["mre"]

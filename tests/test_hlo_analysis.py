@@ -1,0 +1,56 @@
+"""HLO-analysis tests incl. the empirical cost_analysis loop caveat."""
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.launch.hlo_analysis import (collective_bytes, loop_multipliers,
+                                       split_computations, trip_count_of)
+
+
+@pytest.fixture(scope="module")
+def scanned_hlo():
+    def f(ws, x):
+        def body(c, w):
+            return jnp.tanh(c @ w), ()
+        c, _ = jax.lax.scan(body, x, ws)
+        return c.sum()
+    ws = jax.ShapeDtypeStruct((16, 64, 64), jnp.float32)
+    x = jax.ShapeDtypeStruct((8, 64), jnp.float32)
+    comp = jax.jit(f).lower(ws, x).compile()
+    return comp.as_text(), comp.cost_analysis()
+
+
+def test_cost_analysis_counts_loop_body_once():
+    """The documented caveat this module exists to correct."""
+    def make(L):
+        def f(ws, x):
+            def body(c, w):
+                return jnp.tanh(c @ w), ()
+            c, _ = jax.lax.scan(body, x, ws)
+            return c.sum()
+        return f
+    x = jax.ShapeDtypeStruct((8, 64), jnp.float32)
+    flops = []
+    for L in (2, 16):
+        ws = jax.ShapeDtypeStruct((L, 64, 64), jnp.float32)
+        flops.append(jax.jit(make(L)).lower(ws, x).compile()
+                     .cost_analysis()["flops"])
+    assert flops[0] == pytest.approx(flops[1], rel=0.05)
+
+
+def test_split_and_trip_count(scanned_hlo):
+    hlo, _ = scanned_hlo
+    comps = split_computations(hlo)
+    assert any("main" in n for n in comps)
+    mults = loop_multipliers(hlo)
+    # the scan body must be charged 16x
+    assert max(mults.values()) == 16
+
+
+def test_collective_parse_smoke(scanned_hlo):
+    hlo, _ = scanned_hlo
+    out = collective_bytes(hlo)   # no collectives in single-device HLO
+    assert out["total_bytes"] == 0
+    assert out["corrected_total_bytes"] == 0
