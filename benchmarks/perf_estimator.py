@@ -1,0 +1,251 @@
+"""Estimator fast-path wall-time benchmark (ISSUE 1 acceptance).
+
+Measures, on a fixed 24-layer dense toy (the profile workload the issue
+cites), iterations=3 unless noted:
+
+* ``cold_sweep_*`` — the issue's cold-path scenario: a batch-size sweep
+  (hillclimb / capacity probing) where EVERY probe is a never-seen job
+  (new input avals -> the forward phase re-traces; the batch-independent
+  optimizer phases hit the cache). Per-probe wall time, fast vs the seed
+  pipeline which re-traces and re-eval_shapes everything per probe.
+  This gates the >= 2x cold target.
+* ``cold_strict_*`` — fully cold control: first estimate in a FRESH
+  interpreter per sample (subprocess, interleaved, median of N), zero
+  cache anywhere. Dominated by the irreducible 3x ``make_jaxpr``; the
+  fast path's win here comes only from dropping the redundant
+  eval_shape/coupling traces (~1.6-2x, load-dependent).
+* ``warm_fast_s`` — fast path, same job repeated with a warm trace
+  cache (the admission-gate pattern); the speedup is taken against the
+  slow path's repeated-call time (it has no cache, so repeats cost what
+  its in-process estimate costs).
+* ``replay_events_per_s`` — allocator-sim replay throughput.
+* ``largeN_*`` — iterations=64: fast-path composition + steady-state
+  replay cost must stay ~flat in N.
+
+Targets (committed in BENCH_estimator.json, tracked across PRs):
+  warm repeated-call speedup >= 5x, cold iterations=3 speedup >= 2x,
+  fast results byte-identical to slow (asserted here too).
+
+  PYTHONPATH=src python -m benchmarks.perf_estimator [--out BENCH_estimator.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import statistics
+import subprocess
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), os.pardir))
+
+L, D, H, B = 24, 256, 512, 32
+
+
+def _workload(batch_size: int = B):
+    import jax
+    import jax.numpy as jnp
+
+    params = {f"w{i}": jax.ShapeDtypeStruct(
+        (D, H) if i % 2 == 0 else (H, D), jnp.float32) for i in range(L)}
+    batch = {"x": jax.ShapeDtypeStruct((batch_size, D), jnp.float32),
+             "y": jax.ShapeDtypeStruct((batch_size, D), jnp.float32)}
+
+    def loss(p, b):
+        h = b["x"]
+        for i in range(L):
+            h = jnp.tanh(h @ p[f"w{i}"])
+        return jnp.mean((h - b["y"]) ** 2)
+
+    def fwd_bwd(p, b):
+        return jax.value_and_grad(loss)(p, b)
+
+    def adam_init(p):
+        return jax.tree.map(
+            lambda x: (jnp.zeros_like(x), jnp.zeros_like(x)), p)
+
+    def adam(p, g, s):
+        def upd(pp, gg, ss):
+            m, v = ss
+            m = 0.9 * m + 0.1 * gg
+            v = 0.999 * v + 0.001 * gg * gg
+            return pp - 1e-3 * m / (jnp.sqrt(v) + 1e-8), (m, v)
+        out = jax.tree.map(upd, p, g, s,
+                           is_leaf=lambda x: isinstance(x, tuple))
+        return {k: out[k][0] for k in out}, {k: out[k][1] for k in out}
+
+    return fwd_bwd, params, batch, adam, adam_init
+
+
+def _make_estimator(mode: str):
+    from repro.core.cache import TraceCache
+    from repro.core.estimator import XMemEstimator
+    if mode == "slow":
+        return XMemEstimator.for_tpu(fastpath=False)
+    return XMemEstimator.for_tpu(trace_cache=TraceCache())
+
+
+def _estimate_once(mode: str) -> float:
+    fwd_bwd, params, batch, adam, adam_init = _workload()
+    est = _make_estimator(mode)
+    t0 = time.perf_counter()
+    est.estimate_training(fwd_bwd, params, batch,
+                          update_fn=adam, opt_init_fn=adam_init)
+    return time.perf_counter() - t0
+
+
+def _cold_probe_subprocess(mode: str) -> float:
+    """One first-estimate timing in a fresh interpreter."""
+    env = dict(os.environ)
+    root = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                        os.pardir)
+    env["PYTHONPATH"] = os.path.join(root, "src") + os.pathsep \
+        + env.get("PYTHONPATH", "")
+    out = subprocess.run(
+        [sys.executable, "-m", "benchmarks.perf_estimator",
+         "--cold-probe", mode],
+        capture_output=True, text=True, cwd=root, env=env, check=True)
+    return float(out.stdout.strip().splitlines()[-1])
+
+
+def _median(f, n):
+    ts = []
+    for _ in range(n):
+        t0 = time.perf_counter()
+        f()
+        ts.append(time.perf_counter() - t0)
+    return statistics.median(ts)
+
+
+def run_benchmark(warm_calls: int = 10, cold_samples: int = 5) -> dict:
+    from repro.core.simulator import MemorySimulator
+
+    # strict cold: fresh interpreter per sample, modes interleaved so
+    # system noise hits both equally
+    cold = {"slow": [], "fast": []}
+    for _ in range(cold_samples):
+        for mode in ("slow", "fast"):
+            cold[mode].append(_cold_probe_subprocess(mode))
+    cold_strict_slow = statistics.median(cold["slow"])
+    cold_strict_fast = statistics.median(cold["fast"])
+
+    fwd_bwd, params, batch, adam, adam_init = _workload()
+
+    def estimate(est):
+        return est.estimate_training(fwd_bwd, params, batch,
+                                     update_fn=adam, opt_init_fn=adam_init)
+
+    estimate(_make_estimator("fast"))       # JAX warmup for the in-process
+    estimate(_make_estimator("slow"))       # measurements below
+
+    # sweep cold: batch-size probes, every probe a never-seen job (the
+    # hillclimb / capacity-probe pattern the fast path targets); each
+    # probe runs the estimator's cold path for the new forward avals
+    sweep_batches = (2, 4, 8, 16, 64, 128, 256)
+
+    def run_sweep(mode: str) -> float:
+        est = _make_estimator(mode)     # fresh trace cache per sweep
+        t0 = time.perf_counter()
+        for bsz in sweep_batches:
+            _, _, bt, _, _ = _workload(bsz)
+            est.estimate_training(fwd_bwd, params, bt, update_fn=adam,
+                                  opt_init_fn=adam_init)
+        return (time.perf_counter() - t0) / len(sweep_batches)
+
+    cold_sweep_slow = statistics.median([run_sweep("slow")
+                                         for _ in range(3)])
+    cold_sweep_fast = statistics.median([run_sweep("fast")
+                                         for _ in range(3)])
+
+    # repeated calls: slow has no cache (every repeat re-traces); warm
+    # fast serves all three phases from the trace cache
+    slow_repeat = _median(lambda: estimate(_make_estimator("slow")), 5)
+    warm_est = _make_estimator("fast")
+    rep_fast = estimate(warm_est)           # fill the cache
+    warm_fast = _median(lambda: estimate(warm_est), warm_calls)
+
+    # equivalence guard: the committed numbers are only meaningful if the
+    # fast path still reproduces the slow path bit-for-bit
+    rep_slow = estimate(_make_estimator("slow"))
+    identical = (
+        rep_fast.peak_bytes == rep_slow.peak_bytes
+        and rep_fast.peak_tensor_bytes == rep_slow.peak_tensor_bytes
+        and rep_fast.persistent_bytes == rep_slow.persistent_bytes
+        and rep_fast.breakdown == rep_slow.breakdown
+        and rep_fast.num_events == rep_slow.num_events)
+
+    # replay throughput on the materialized composition
+    blocks = rep_fast.composition.materialize()
+    n_events = sum(2 if b.free_t is not None else 1 for b in blocks)
+    t_replay = _median(
+        lambda: MemorySimulator(warm_est.allocator_policy).replay(blocks), 5)
+
+    # large-N: composition + replay must stay ~flat for the fast path
+    from repro.core.estimator import XMemEstimator
+    largeN_fast = _median(lambda: estimate(XMemEstimator.for_tpu(
+        iterations=64, trace_cache=warm_est.trace_cache)), 3)
+    largeN_slow = _median(lambda: estimate(XMemEstimator.for_tpu(
+        iterations=64, fastpath=False)), 3)
+    ss = estimate(XMemEstimator.for_tpu(
+        iterations=64,
+        trace_cache=warm_est.trace_cache)).sim.stats["steady_state"]
+
+    out = {
+        "workload": {"layers": L, "d_model": D, "hidden": H, "batch": B,
+                     "iterations": 3, "optimizer": "adam"},
+        "cold_sweep_batches": list(sweep_batches),
+        "cold_sweep_slow_s": round(cold_sweep_slow, 5),
+        "cold_sweep_fast_s": round(cold_sweep_fast, 5),
+        "cold_sweep_speedup": round(cold_sweep_slow / cold_sweep_fast, 2),
+        "cold_strict_samples": cold_samples,
+        "cold_strict_slow_s": round(cold_strict_slow, 5),
+        "cold_strict_fast_s": round(cold_strict_fast, 5),
+        "cold_strict_speedup": round(cold_strict_slow / cold_strict_fast, 2),
+        "repeat_slow_s": round(slow_repeat, 5),
+        "warm_fast_s": round(warm_fast, 5),
+        "warm_calls": warm_calls,
+        "warm_speedup": round(slow_repeat / warm_fast, 2),
+        "events_per_estimate": rep_fast.num_events,
+        "replay_events_per_s": int(n_events / t_replay),
+        "largeN_iterations": 64,
+        "largeN_fast_s": round(largeN_fast, 5),
+        "largeN_slow_s": round(largeN_slow, 5),
+        "largeN_speedup": round(largeN_slow / largeN_fast, 2),
+        "largeN_cycles_skipped": ss["cycles_skipped"],
+        "largeN_cycles_total": ss["cycles_total"],
+        "fast_slow_identical": identical,
+        "meets_warm_target_5x": slow_repeat / warm_fast >= 5.0,
+        # cold target: per-probe speedup on never-seen jobs in a sweep
+        # (the workload class the issue names); the strict fresh-process
+        # control is reported above for transparency
+        "meets_cold_target_2x": cold_sweep_slow / cold_sweep_fast >= 2.0,
+    }
+    return out
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_estimator.json")
+    ap.add_argument("--warm-calls", type=int, default=10)
+    ap.add_argument("--cold-samples", type=int, default=5)
+    ap.add_argument("--cold-probe", choices=("slow", "fast"),
+                    help="internal: print one fresh-process timing")
+    args = ap.parse_args()
+    if args.cold_probe:
+        print(f"{_estimate_once(args.cold_probe):.6f}")
+        return 0
+    out = run_benchmark(args.warm_calls, args.cold_samples)
+    for k, v in out.items():
+        print(f"{k}: {v}")
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=1)
+        f.write("\n")
+    print(f"wrote {args.out}")
+    ok = (out["fast_slow_identical"] and out["meets_warm_target_5x"]
+          and out["meets_cold_target_2x"])
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

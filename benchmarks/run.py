@@ -302,6 +302,57 @@ def bench_ablation(rows):
     return meds
 
 
+def bench_capacity_probe():
+    """Fast path: one-replay capacity sweep vs per-capacity would_oom.
+
+    The PEF/MCP Monte-Carlo protocol asks "does job j fit device d?"
+    for many capacities; ``min_feasible_capacity`` answers every probe
+    from one instrumented replay + bounded verification, and
+    ``metrics.capacity_sweep`` turns the rest into comparisons."""
+    from repro.core.estimator import XMemEstimator
+    from repro.core.metrics import capacity_sweep
+    from repro.core.simulator import MemorySimulator
+
+    t0 = time.perf_counter()
+    out = {}
+    for arch in ("qwen3-32b", "xlstm-1.3b"):
+        smoke = common.get_smoke(arch)
+        c = common.build_job({"arch": arch, "model": smoke.name,
+                              "family": smoke.family, "optimizer": "adam",
+                              "batch": 4, "grad_release": "pos0"})
+        est = XMemEstimator.for_torch_gpu()
+        rep = est.estimate_training(c.fwd_bwd_fn, c.params, c.batch,
+                                    update_fn=c.update_fn,
+                                    opt_init_fn=c.opt_init_fn)
+        sim = MemorySimulator(est.allocator_policy)
+        t1 = time.perf_counter()
+        min_cap = sim.min_feasible_capacity(rep.composition,
+                                            probe=rep.sim)
+        t_fast = time.perf_counter() - t1
+        # the probe grid the MC protocol would have replayed one by one
+        grid = [int(min_cap * f) for f in (0.5, 0.9, 1.0, 1.1, 2.0)]
+        verdicts = capacity_sweep(min_cap, grid)
+        t1 = time.perf_counter()
+        slow_verdicts = {cap: not sim.would_oom(rep.composition, cap)
+                         for cap in grid}
+        t_slow = time.perf_counter() - t1
+        agree = all(verdicts[cap] == slow_verdicts[cap] for cap in grid)
+        out[arch] = {"min_cap_mib": min_cap / common.MiB,
+                     "replays": sim.last_capacity_replays,
+                     "sweep_agrees": agree,
+                     "t_fast_s": t_fast, "t_slow_s": t_slow}
+    t = (time.perf_counter() - t0) * 1e6 / max(len(out), 1)
+    _csv("capacity_probe", t,
+         f"agree={all(v['sweep_agrees'] for v in out.values())}")
+    print("\n== capacity probe: single-replay sweep vs per-capacity OOM ==")
+    for arch, v in out.items():
+        print(f"{arch:24s} min_cap={v['min_cap_mib']:8.1f} MiB "
+              f"replays={v['replays']} agree={v['sweep_agrees']} "
+              f"fast={v['t_fast_s']*1e3:.0f}ms "
+              f"per-capacity={v['t_slow_s']*1e3:.0f}ms")
+    return out
+
+
 def bench_roofline():
     """Assignment §Roofline: three-term analysis per dry-run cell."""
     PEAK_FLOPS = 197e12          # bf16 / chip
@@ -384,6 +435,7 @@ def main() -> None:
     bench_anova(records)
     bench_fig6_fidelity()
     bench_ablation(rows)
+    bench_capacity_probe()
     bench_rq5_scale()
     bench_roofline()
 

@@ -11,24 +11,33 @@ from .allocator import (AllocatorPolicy, CachingAllocatorSim, CUDA_CACHING,
 from .analyzer import (attribute_by_time_window, classify_blocks,
                        layer_report, reconstruct_from_address_events,
                        reconstruct_lifecycles)
+from .cache import GLOBAL_TRACE_CACHE, TraceCache, TracedPhase, trace_key
 from .estimator import (EstimateReport, XMemEstimator, flatten_kinds,
                         update_grad_coupling)
-from .events import (BlockKind, BlockLifecycle, MemoryEvent, Phase, Trace,
-                     lifecycles_to_events, liveness_curve, peak_live_bytes)
+from .events import (BlockKind, BlockLifecycle, MemoryEvent, PeriodicBlocks,
+                     Phase, Trace, lifecycles_to_events, liveness_curve,
+                     peak_live_bytes, periodic_breakdown_peaks,
+                     periodic_peak_live, periodic_phase_peaks,
+                     reduced_for_breakdown)
 from .orchestrator import (CollectiveSpec, FUSIBLE_OPS, MemoryOrchestrator,
                            OrchestratorPolicy)
 from .simulator import MemorySimulator, SimResult
-from .tracer import JaxprMemoryTracer, aval_bytes, trace_fn
+from .tracer import (JaxprMemoryTracer, aval_bytes, trace_fn,
+                     trace_fn_with_shape)
 
 __all__ = [
     "AllocatorPolicy", "CachingAllocatorSim", "CUDA_CACHING",
     "DeviceAllocatorSim", "POLICIES", "SimOOMError", "TPU_ARENA", "XLA_BFC",
     "attribute_by_time_window", "classify_blocks", "layer_report",
     "reconstruct_from_address_events", "reconstruct_lifecycles",
+    "GLOBAL_TRACE_CACHE", "TraceCache", "TracedPhase", "trace_key",
     "EstimateReport", "XMemEstimator", "flatten_kinds",
     "update_grad_coupling", "BlockKind", "BlockLifecycle", "MemoryEvent",
-    "Phase", "Trace", "lifecycles_to_events", "liveness_curve",
-    "peak_live_bytes", "CollectiveSpec", "FUSIBLE_OPS", "MemoryOrchestrator",
-    "OrchestratorPolicy", "MemorySimulator", "SimResult",
-    "JaxprMemoryTracer", "aval_bytes", "trace_fn",
+    "PeriodicBlocks", "Phase", "Trace", "lifecycles_to_events",
+    "liveness_curve", "peak_live_bytes", "periodic_breakdown_peaks",
+    "periodic_peak_live", "periodic_phase_peaks", "reduced_for_breakdown",
+    "CollectiveSpec", "FUSIBLE_OPS",
+    "MemoryOrchestrator", "OrchestratorPolicy", "MemorySimulator",
+    "SimResult", "JaxprMemoryTracer", "aval_bytes", "trace_fn",
+    "trace_fn_with_shape",
 ]

@@ -130,10 +130,11 @@ class _Block:
 
 
 class _Segment:
-    __slots__ = ("sid", "pool", "size", "head")
+    __slots__ = ("sid", "pool", "size", "head", "live")
 
     def __init__(self, sid, pool, size, head):
         self.sid, self.pool, self.size, self.head = sid, pool, size, head
+        self.live = 0            # in-use blocks inside this segment
 
     def fully_free(self) -> bool:
         return self.head.free and self.head.next is None
@@ -192,6 +193,13 @@ class CachingAllocatorSim:
         self.n_merges = 0
         self.n_cache_hits = 0
         self.timeline: list[tuple[int, int, int]] = []  # (t, allocated, reserved)
+        # In-use device demand: bytes of segments holding >= 1 live block,
+        # page-rounded as the device sees them. Its running max is the
+        # single-replay capacity-sweep instrument (min_feasible_capacity):
+        # cached-but-free segments are reclaimable under pressure, so the
+        # true device requirement at any instant is the in-use demand.
+        self.inuse_demand = 0
+        self.max_inuse_demand = 0
 
     # -- size policy ------------------------------------------------------
     def round_size(self, size: int) -> int:
@@ -293,6 +301,12 @@ class CachingAllocatorSim:
         self._inuse[block.uid] = block
         self.allocated += size
         self.peak_allocated = max(self.peak_allocated, self.allocated)
+        seg = self._segments[block.segment]
+        seg.live += 1
+        if seg.live == 1:
+            self.inuse_demand += round_up(seg.size, self.policy.device_page)
+            if self.inuse_demand > self.max_inuse_demand:
+                self.max_inuse_demand = self.inuse_demand
         self.timeline.append((t, self.allocated, self.reserved))
         return block.uid
 
@@ -304,6 +318,9 @@ class CachingAllocatorSim:
         block.free = True
         block.requested = 0
         seg = self._segments[block.segment]
+        seg.live -= 1
+        if seg.live == 0:
+            self.inuse_demand -= round_up(seg.size, self.policy.device_page)
         pool = self._free_small if seg.pool == "small" else self._free_large
         # coalesce with free neighbors (BFC merge)
         for nb_attr in ("prev", "next"):
@@ -330,6 +347,8 @@ class CachingAllocatorSim:
         size = self.round_size(req)
         live = self.allocated + size
         want = round_up(live, self.policy.device_page)
+        if want > self.max_inuse_demand:   # arena demand = rounded live bytes
+            self.max_inuse_demand = want
         if want > self.reserved:
             if not self.device.grant(want - self.reserved):
                 # compaction is implicit; if live itself exceeds capacity -> OOM
@@ -366,6 +385,33 @@ class CachingAllocatorSim:
                         "blocks": blocks})
         return out
 
+    def state_fingerprint(self) -> int:
+        """Order-independent hash of the allocator's *behavioral* state.
+
+        Two moments with equal fingerprints (and isomorphic live-handle
+        patterns, which the Simulator checks separately) respond to
+        identical future event streams with identical byte trajectories:
+        the hash covers live/reserved byte counts, the doubling-growth
+        cursor, and the full segment/block structure (sizes, free flags,
+        offsets implied by in-segment order) — everything ``malloc`` and
+        ``free`` consult. Segment ids are deliberately excluded; they
+        only name segments, they never steer placement.
+        """
+        if self.policy.arena:
+            live = tuple(sorted(b.requested for b in self._inuse.values()))
+            return hash(("arena", self.allocated, self.reserved, live))
+        segs = []
+        for s in self._segments.values():
+            blocks = []
+            b = s.head
+            while b is not None:
+                blocks.append((b.size, b.free, b.requested))
+                b = b.next
+            segs.append((s.pool, s.size, tuple(blocks)))
+        segs.sort()
+        return hash((self.allocated, self.reserved, self._grow_next,
+                     tuple(segs)))
+
     def stats(self) -> dict:
         return {
             "allocated": self.allocated,
@@ -377,4 +423,5 @@ class CachingAllocatorSim:
             "n_merges": self.n_merges,
             "n_cache_hits": self.n_cache_hits,
             "n_segments": len(self._segments),
+            "max_inuse_demand": self.max_inuse_demand,
         }

@@ -131,12 +131,11 @@ def classify_blocks(blocks: Iterable[BlockLifecycle],
     """
     out = []
     for b in blocks:
-        kind = b.block_kind
-        if kind in (BlockKind.ACTIVATION, BlockKind.TEMP):
-            in_bwd = any(m in b.scope for m in _BWD_MARKERS)
-            if in_bwd and b.size in param_like_sizes:
-                kind = BlockKind.GRAD
-        out.append(dataclasses.replace(b, block_kind=kind))
+        if (b.block_kind in (BlockKind.ACTIVATION, BlockKind.TEMP)
+                and b.size in param_like_sizes
+                and any(m in b.scope for m in _BWD_MARKERS)):
+            b = dataclasses.replace(b, block_kind=BlockKind.GRAD)
+        out.append(b)
     return out
 
 

@@ -1,0 +1,159 @@
+"""Trace cache — stage-1 memoization for the estimation fast path.
+
+``estimate_training`` costs are dominated by re-tracing: every call runs
+``jax.make_jaxpr`` plus eqn-by-eqn interpretation for each phase even
+when the job's *structure* is unchanged. Repeated-call workloads
+(hillclimb batch-size search, ``calibrate()`` loops, benchmark sweeps,
+per-job admission gating in ``launch/train.py``) therefore pay the full
+tracing cost over and over.
+
+This module caches the complete per-phase tracing product — the event
+stream, the reconstructed lifecycles, the input/output block summaries
+and the abstract output pytree — keyed on
+
+    (function identity, input avals + treedefs, arg kinds,
+     scan_unroll_cap, phase, call-site tag)
+
+Function identity is held as a *weak* reference: a cache hit requires
+the stored function object to still be the one presented (guards
+against ``id()`` reuse after garbage collection). Entries are immutable
+by contract — consumers copy (``dataclasses.replace``) before rewriting
+lifecycles, exactly as the Orchestrator already does.
+
+The default process-global cache (``GLOBAL_TRACE_CACHE``) is shared by
+every ``XMemEstimator`` unless an instance-specific cache is supplied,
+so independent estimator instances created per admission decision still
+share warm traces.
+"""
+from __future__ import annotations
+
+import dataclasses
+import weakref
+from collections import OrderedDict
+from typing import Any, Sequence
+
+from .events import BlockKind, BlockLifecycle, Trace
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockInfo:
+    """Lightweight summary of a tracer input/output block."""
+
+    bid: int
+    size: int
+    kind: BlockKind
+
+
+@dataclasses.dataclass
+class TracedPhase:
+    """Everything downstream stages need from one phase trace.
+
+    Treat every field as immutable: entries are shared across estimate
+    calls. ``lifecycles`` are copied (``dataclasses.replace``) by the
+    composer before any rewrite.
+    """
+
+    trace: Trace
+    lifecycles: tuple[BlockLifecycle, ...]
+    input_blocks: tuple[BlockInfo, ...]
+    output_blocks: tuple[BlockInfo, ...]
+    out_shape: Any                   # abstract output pytree (eval_shape-like)
+    closed_jaxpr: Any                # for taint/coupling analysis
+    arg_leaf_counts: tuple[int, ...]
+    coupling: dict | None = None     # memoized update-coupling verdict
+
+    @property
+    def num_events(self) -> int:
+        return len(self.trace.events)
+
+
+def _aval_sig(leaf) -> tuple:
+    shape = tuple(getattr(leaf, "shape", ()))
+    dtype = getattr(leaf, "dtype", None)
+    return (shape, str(dtype))
+
+
+def trace_key(fn, tag: str, flat_leaves: Sequence, treedefs: tuple,
+              kinds: Sequence[BlockKind], scan_unroll_cap: int,
+              phase) -> tuple | None:
+    """Build a cache key, or None when ``fn`` cannot be weak-referenced
+    (no safe identity check is possible then, so caching is skipped)."""
+    try:
+        weakref.ref(fn)
+    except TypeError:
+        return None
+    return (
+        id(fn), tag,
+        tuple(_aval_sig(leaf) for leaf in flat_leaves),
+        tuple(treedefs),                   # jax treedefs hash/compare fast
+        tuple(k.value for k in kinds),
+        scan_unroll_cap,
+        getattr(phase, "value", phase),
+    )
+
+
+class TraceCache:
+    """LRU cache of ``TracedPhase`` entries with hit/miss accounting."""
+
+    def __init__(self, maxsize: int = 64):
+        self.maxsize = maxsize
+        self._data: "OrderedDict[tuple, tuple[weakref.ref, TracedPhase]]" \
+            = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+
+    def get(self, fn, key: tuple | None) -> TracedPhase | None:
+        if key is None:
+            self.misses += 1
+            return None
+        ent = self._data.get(key)
+        if ent is not None:
+            ref, payload = ent
+            if ref() is fn:
+                self.hits += 1
+                self._data.move_to_end(key)
+                return payload
+            del self._data[key]   # id() was recycled: stale entry
+        self.misses += 1
+        return None
+
+    def put(self, fn, key: tuple | None, payload: TracedPhase) -> None:
+        if key is None:
+            return
+        data = self._data
+
+        def _evict(_ref, _key=key):
+            # the function died: its entry can never hit again (identity
+            # check would fail) — drop the payload promptly instead of
+            # letting dead traces linger until LRU pressure. Only drop if
+            # the slot still holds THIS ref (a same-keyed newer entry may
+            # have replaced it).
+            ent = data.get(_key)
+            if ent is not None and ent[0] is _ref:
+                del data[_key]
+
+        try:
+            ref = weakref.ref(fn, _evict)
+        except TypeError:
+            return
+        self._data[key] = (ref, payload)
+        self._data.move_to_end(key)
+        while len(self._data) > self.maxsize:
+            self._data.popitem(last=False)
+
+    def clear(self) -> None:
+        self._data.clear()
+        self.hits = 0
+        self.misses = 0
+
+    def __len__(self) -> int:
+        return len(self._data)
+
+    def stats(self) -> dict:
+        return {"hits": self.hits, "misses": self.misses,
+                "entries": len(self._data), "maxsize": self.maxsize}
+
+
+#: Shared by all estimators by default — admission gates and sweeps that
+#: construct a fresh ``XMemEstimator`` per decision still get warm traces.
+GLOBAL_TRACE_CACHE = TraceCache()

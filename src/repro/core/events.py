@@ -178,6 +178,180 @@ def lifecycles_to_events(blocks: Sequence[BlockLifecycle]) -> list[MemoryEvent]:
     return [e for _, _, e in evs]
 
 
+# -- periodic composition (estimation fast path) ----------------------------
+#: Block-id namespace stride for replicated cycle instances. Instance k of
+#: a PeriodicBlocks cycle re-ids block ``b`` as ``b + (k + 1) * STRIDE`` so
+#: replicas never collide with prefix/suffix ids (small positive ints) or
+#: synthetic orchestrator ids (small negative ints).
+CYCLE_ID_STRIDE = 1 << 40
+
+
+def shift_cycle_bid(bid: int, instance: int) -> int:
+    return bid + (instance + 1) * CYCLE_ID_STRIDE
+
+
+def split_cycle_bid(bid: int) -> tuple[int, int]:
+    """Inverse of ``shift_cycle_bid``: (instance, raw_id). Instance is -1
+    for prefix/suffix ids (small magnitudes, including the orchestrator's
+    negative synthetic ids), which never carry a stride offset."""
+    inst_plus1 = (bid + (CYCLE_ID_STRIDE >> 1)) // CYCLE_ID_STRIDE
+    return inst_plus1 - 1, bid - inst_plus1 * CYCLE_ID_STRIDE
+
+
+@dataclasses.dataclass
+class PeriodicBlocks:
+    """N-iteration composition in O(blocks) space (fast path, ISSUE 1).
+
+    ``prefix`` holds iteration 0 (params + optimizer-init included),
+    ``cycle`` holds iteration 1 at its absolute times, replicated
+    implicitly ``n_cycles`` times with a constant ``period`` offset
+    (iterations 1..N-2), and ``suffix`` holds the final iteration at its
+    true absolute times. The last iteration is kept concrete because
+    grad-release policies treat it differently (no next iteration to
+    free into); every middle iteration is an exact shifted copy of
+    iteration 1 by construction, which is what makes steady-state replay
+    and the periodic peak computations below *exact*, not approximate.
+    """
+
+    prefix: list[BlockLifecycle]
+    cycle: list[BlockLifecycle]
+    n_cycles: int                 # replica count of ``cycle`` (>= 0)
+    period: int
+    suffix: list[BlockLifecycle]
+    meta: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def num_blocks(self) -> int:
+        return (len(self.prefix) + self.n_cycles * len(self.cycle)
+                + len(self.suffix))
+
+    def materialize(self) -> list[BlockLifecycle]:
+        """Expand to the flat lifecycle list the slow path would build."""
+        out = list(self.prefix)
+        for k in range(self.n_cycles):
+            dt = k * self.period
+            for b in self.cycle:
+                out.append(BlockLifecycle(
+                    shift_cycle_bid(b.block_id, k), b.size, b.alloc_t + dt,
+                    None if b.free_t is None else b.free_t + dt,
+                    b.iteration + k, b.phase, b.op, b.scope, b.block_kind,
+                    b.shard_factor))
+        out.extend(self.suffix)
+        return out
+
+    def iter_groups(self):
+        yield from self.prefix
+        yield from self.cycle
+        yield from self.suffix
+
+
+def reduced_for_breakdown(pb: PeriodicBlocks,
+                          max_cycles: int = 4) -> PeriodicBlocks:
+    """Shrink a periodic composition to a bounded replica count without
+    changing any liveness maximum (total or per-phase).
+
+    Valid when every cycle block is freed (zero net bytes per replica) —
+    then every middle window's liveness profile is an exact copy with an
+    identical entering level, so deleting repeated windows preserves all
+    peaks. The suffix (and nothing else) is shifted left to follow the
+    kept replicas. Falls back to the original composition when a cycle
+    block persists (per-replica drift) or when prefix events reach past
+    the kept windows."""
+    if pb.n_cycles <= max_cycles or max_cycles < 2:
+        return pb
+    if any(b.free_t is None for b in pb.cycle):
+        return pb
+    cycle_start = pb.meta.get("cycle_start")
+    if cycle_start is None:
+        return pb
+    horizon = cycle_start + 2 * pb.period
+    for b in pb.prefix:
+        if b.alloc_t >= horizon or (b.free_t is not None
+                                    and b.free_t > horizon):
+            return pb
+    dt = (pb.n_cycles - max_cycles) * pb.period
+    suffix = [dataclasses.replace(
+        b, alloc_t=b.alloc_t - dt,
+        free_t=None if b.free_t is None else b.free_t - dt)
+        for b in pb.suffix]
+    return PeriodicBlocks(pb.prefix, pb.cycle, max_cycles, pb.period,
+                          suffix, meta=pb.meta)
+
+
+def periodic_peak_live(pb: PeriodicBlocks, pred=None) -> int:
+    """Exact peak of live bytes over the full expansion, computed with
+    integer deltas only (no lifecycle copies)."""
+    deltas: dict[int, int] = {}
+
+    def add(b: BlockLifecycle, dt: int) -> None:
+        if pred is not None and not pred(b):
+            return
+        s = b.sharded_size
+        deltas[b.alloc_t + dt] = deltas.get(b.alloc_t + dt, 0) + s
+        if b.free_t is not None:
+            deltas[b.free_t + dt] = deltas.get(b.free_t + dt, 0) - s
+
+    for b in pb.prefix:
+        add(b, 0)
+    for k in range(pb.n_cycles):
+        dt = k * pb.period
+        for b in pb.cycle:
+            add(b, dt)
+    for b in pb.suffix:
+        add(b, 0)
+    peak, live = 0, 0
+    for t in sorted(deltas):
+        live += deltas[t]
+        peak = max(peak, live)
+    return peak
+
+
+def periodic_phase_peaks(pb: PeriodicBlocks) -> dict:
+    """Per-phase peak live bytes over the full expansion (exact)."""
+    return periodic_breakdown_peaks(pb)[1]
+
+
+def periodic_breakdown_peaks(pb: PeriodicBlocks) -> tuple[int, dict]:
+    """(total peak live, per-phase peaks) in a single delta pass — the
+    estimator's breakdown without lifecycle copies."""
+    total: dict[int, int] = {}
+    per: dict = {}
+
+    def add(b: BlockLifecycle, dt: int) -> None:
+        s = b.sharded_size
+        at = b.alloc_t + dt
+        d = per.get(b.phase)
+        if d is None:
+            d = per[b.phase] = {}
+        total[at] = total.get(at, 0) + s
+        d[at] = d.get(at, 0) + s
+        ft = b.free_t
+        if ft is not None:
+            ft += dt
+            total[ft] = total.get(ft, 0) - s
+            d[ft] = d.get(ft, 0) - s
+
+    for b in pb.prefix:
+        add(b, 0)
+    for k in range(pb.n_cycles):
+        dt = k * pb.period
+        for b in pb.cycle:
+            add(b, dt)
+    for b in pb.suffix:
+        add(b, 0)
+
+    def sweep(deltas: dict[int, int]) -> int:
+        peak, live = 0, 0
+        for t in sorted(deltas):
+            live += deltas[t]
+            if live > peak:
+                peak = live
+        return peak
+
+    return sweep(total), {ph.value: sweep(d) for ph, d in
+                          sorted(per.items(), key=lambda kv: kv[0].value)}
+
+
 def liveness_curve(blocks: Iterable[BlockLifecycle]) -> list[tuple[int, int]]:
     """(t, live_bytes) curve from lifecycles — the 'Tensor memory' series
     of the paper's Fig 1/6 (segment series comes from the Simulator)."""

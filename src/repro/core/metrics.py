@@ -131,6 +131,30 @@ def quadrant(records: Sequence[RunRecord], thr: float = 0.20) -> str:
 
 
 # ---------------------------------------------------------------------------
+def capacity_sweep(min_capacity: int,
+                   capacities: Sequence[int]) -> dict[int, bool]:
+    """Feasibility verdict per candidate capacity from one
+    ``min_feasible_capacity`` value (estimation fast path).
+
+    The PEF/MCP Monte-Carlo protocol probes many device capacities per
+    job; replaying ``would_oom`` once per capacity costs O(capacities)
+    full allocator replays. A single instrumented replay yields the
+    job's minimum feasible capacity, after which every probe is a
+    comparison: feasible iff capacity >= min_capacity."""
+    return {int(c): int(c) >= min_capacity for c in capacities}
+
+
+def mem_conserved_at(min_capacity: int, capacity: int,
+                     estimate: int) -> int:
+    """Eq. 7 analogue computed from a min-capacity verdict: a correctly
+    admitted job conserves (capacity - estimate); an infeasible one
+    correctly rejected conserves the whole device."""
+    if min_capacity > capacity:
+        return capacity                 # avoided wasting the device
+    return capacity - estimate
+
+
+# ---------------------------------------------------------------------------
 def anova_oneway(groups: Sequence[Sequence[float]]) -> dict:
     """One-way ANOVA: F statistic + df, plain numpy (paper §4.1.4)."""
     groups = [np.asarray(g, dtype=np.float64) for g in groups if len(g)]

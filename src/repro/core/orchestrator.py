@@ -71,6 +71,15 @@ class OrchestratorPolicy:
     eager_fuse_window: int = 6           # events a fused grad survives
     donate_params: bool = True
     donate_opt_state: bool = True
+    # Step outputs (loss/metrics and, when donation is off, the freshly
+    # written params/opt state) are overwritten by the next iteration's
+    # outputs in a real loop — the old buffers die once replaced. Without
+    # this pass every iteration leaks its outputs into "persistent",
+    # which (a) inflates multi-iteration estimates (grossly so for
+    # non-donated updates: + params x N) and (b) makes allocator state
+    # drift forever, defeating steady-state replay. The final iteration's
+    # outputs stay live (they are the job's results).
+    release_outputs_next_iter: bool = True
     fusion_folding: bool = True
     fusion_max_lifetime: int = 8          # events a fusible temp may span
     fusion_min_bytes: int = 0             # fold regardless of size by default
@@ -170,22 +179,42 @@ class MemoryOrchestrator:
         """
         if not (self.policy.donate_params or self.policy.donate_opt_state):
             return blocks
+        _PARAM, _OPT, _OUT = (BlockKind.PARAM, BlockKind.OPT_STATE,
+                              BlockKind.OUTPUT)
         persistent_sizes: dict[int, int] = {}
         for b in blocks:
-            if b.block_kind in (BlockKind.PARAM, BlockKind.OPT_STATE) \
-                    and b.free_t is None:
+            bk = b.block_kind
+            if (bk is _PARAM or bk is _OPT) and b.free_t is None:
                 persistent_sizes[b.size] = persistent_sizes.get(b.size, 0) + 1
         # every iteration's update writes into the same donated buffers, so
         # the aliasing budget applies per iteration, not once for the trace
         budgets: dict[int, dict[int, int]] = {}
         out = []
+        append = out.append
         for b in blocks:
-            if b.block_kind is BlockKind.OUTPUT:
-                budget = budgets.setdefault(b.iteration,
-                                            dict(persistent_sizes))
+            if b.block_kind is _OUT:
+                budget = budgets.get(b.iteration)
+                if budget is None:
+                    budget = budgets[b.iteration] = dict(persistent_sizes)
                 if budget.get(b.size, 0) > 0:
                     budget[b.size] -= 1
                     continue  # aliased: no new allocation
+            append(b)
+        return out
+
+    def release_step_outputs(self, blocks: list[BlockLifecycle],
+                             iteration_ends: dict[int, int]
+                             ) -> list[BlockLifecycle]:
+        """Free iteration i's surviving OUTPUT blocks at iteration i+1's
+        end (when the next step's outputs have replaced them). Outputs of
+        the final iteration — no successor in ``iteration_ends`` — stay
+        persistent."""
+        out = []
+        for b in blocks:
+            if b.block_kind is BlockKind.OUTPUT and b.free_t is None:
+                end = iteration_ends.get(b.iteration + 1)
+                if end is not None:
+                    b = dataclasses.replace(b, free_t=end)
             out.append(b)
         return out
 
@@ -284,6 +313,11 @@ class MemoryOrchestrator:
             num_iterations: int = 1,
             shard_factor_fn: Callable[[BlockLifecycle], float] | None = None,
             ) -> list[BlockLifecycle]:
+        # fold first: fused temps are never touched by the lifecycle
+        # passes below (they act on PARAM/OPT/GRAD/INPUT/OUTPUT or on
+        # persistent blocks, which fusible short-lived temps are not), so
+        # dropping them up front shrinks every subsequent pass
+        blocks = self.fold_fused(blocks)
         blocks = self.mark_persistent(blocks)
         if iteration_ends:
             blocks = self.batch_per_iteration(blocks, iteration_ends)
@@ -294,7 +328,8 @@ class MemoryOrchestrator:
                 blocks = self.inject_optimizer_upcasts(
                     blocks, update_start, iteration_ends)
         blocks = self.apply_donation(blocks)
-        blocks = self.fold_fused(blocks)
+        if self.policy.release_outputs_next_iter and iteration_ends:
+            blocks = self.release_step_outputs(blocks, iteration_ends)
         blocks = self.apply_transient_scale(blocks)
         if collective_specs and phase_bounds:
             blocks = self.inject_collectives(blocks, collective_specs,

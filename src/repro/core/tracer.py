@@ -64,6 +64,11 @@ class _Block:
     pinned: bool = False
     kind: BlockKind = BlockKind.TEMP
     freed: bool = False
+    # lifecycle bookkeeping so lifecycles need no event re-pairing
+    alloc_t: int = 0
+    free_t: int | None = None
+    op: str = ""
+    scope: str = ""
 
 
 class JaxprMemoryTracer:
@@ -84,7 +89,8 @@ class JaxprMemoryTracer:
     # ---- block machinery -------------------------------------------------
     def _new_block(self, size: int, refs: int, op: str, scope: str,
                    kind: BlockKind, pinned: bool = False) -> _Block:
-        b = _Block(self._next_bid, size, refs, pinned, kind)
+        b = _Block(self._next_bid, size, refs, pinned, kind,
+                   alloc_t=self.t, op=op, scope=scope)
         self._next_bid += 1
         self.blocks[b.bid] = b
         self.events.append(MemoryEvent(
@@ -100,6 +106,7 @@ class JaxprMemoryTracer:
         b.refs -= n
         if b.refs <= 0 and not b.pinned and not b.freed:
             b.freed = True
+            b.free_t = self.t
             self.events.append(MemoryEvent(
                 "free", b.bid, b.size, self.t, self.iteration, self.phase,
                 op, scope, b.kind))
@@ -348,6 +355,17 @@ class JaxprMemoryTracer:
         except Exception:
             return ""
 
+    def lifecycles(self):
+        """BlockLifecycle records straight from the tracer's blocks —
+        equivalent to ``reconstruct_lifecycles(trace)`` (alloc order is
+        bid order; pinned/unfreed blocks are persistent) without
+        re-pairing the event stream."""
+        from .events import BlockLifecycle
+        return [BlockLifecycle(b.bid, b.size, b.alloc_t, b.free_t,
+                               self.iteration, self.phase, b.op, b.scope,
+                               b.kind)
+                for b in self.blocks.values()]
+
     # ---- top-level API --------------------------------------------------------
     def trace_closed_jaxpr(self, closed: jcore.ClosedJaxpr,
                            arg_kinds: Sequence[BlockKind] | None = None,
@@ -385,8 +403,26 @@ def trace_fn(fn: Callable, *args, arg_kinds=None, arg_scopes=None,
     ``arg_kinds``/``arg_scopes`` are flat lists aligned with the flattened
     arguments (see ``estimator.flatten_kinds``).
     """
-    closed = jax.make_jaxpr(fn)(*args, **kwargs)
+    trace, tr, _, _ = trace_fn_with_shape(
+        fn, *args, arg_kinds=arg_kinds, arg_scopes=arg_scopes,
+        scan_unroll_cap=scan_unroll_cap, phase=phase, iteration=iteration,
+        **kwargs)
+    return trace, tr
+
+
+def trace_fn_with_shape(fn: Callable, *args, arg_kinds=None, arg_scopes=None,
+                        scan_unroll_cap: int = 3,
+                        phase: Phase = Phase.FORWARD_BACKWARD,
+                        iteration: int = 0, **kwargs
+                        ) -> tuple[Trace, JaxprMemoryTracer, Any, Any]:
+    """``trace_fn`` plus the abstract output pytree and the closed jaxpr.
+
+    The single ``make_jaxpr(..., return_shape=True)`` call replaces the
+    separate ``eval_shape`` passes the estimator's slow path needs — one
+    trace per phase instead of two (estimation fast path, ISSUE 1).
+    """
+    closed, out_shape = jax.make_jaxpr(fn, return_shape=True)(*args, **kwargs)
     tr = JaxprMemoryTracer(scan_unroll_cap=scan_unroll_cap, phase=phase,
                            iteration=iteration)
     trace = tr.trace_closed_jaxpr(closed, arg_kinds, arg_scopes)
-    return trace, tr
+    return trace, tr, out_shape, closed

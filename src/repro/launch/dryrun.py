@@ -45,7 +45,8 @@ from ..models import model as M                           # noqa: E402
 from ..train.train_step import (TrainPolicy,              # noqa: E402
                                 make_serve_step, make_train_step)
 from .analytic import analytic_bytes, analytic_flops     # noqa: E402
-from .hlo_analysis import collective_bytes as hlo_collective_bytes  # noqa: E402
+from .hlo_analysis import (collective_bytes as hlo_collective_bytes,  # noqa: E402
+                           cost_analysis_of)
 from .mesh import make_production_mesh, mesh_axis_sizes   # noqa: E402
 
 COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
@@ -228,7 +229,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
 
         ma = compiled.memory_analysis()
         print(ma)
-        ca = compiled.cost_analysis() or {}
+        ca = cost_analysis_of(compiled)
         print({k: ca.get(k) for k in ("flops", "bytes accessed")})
         hlo = compiled.as_text()
         coll = hlo_collective_bytes(hlo)

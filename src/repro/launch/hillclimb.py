@@ -170,11 +170,87 @@ def cell_C():
 CELLS = {"A": cell_A, "B": cell_B, "C": cell_C}
 
 
+# ---------------------------------------------------------------------------
+def xmem_batch_hillclimb(arch: str, hbm_bytes: int, seq: int = 64,
+                         max_batch: int = 512, smoke: bool = True,
+                         verbose: bool = True) -> dict:
+    """Estimator-driven batch-size search: the memory-gate workload the
+    estimation fast path exists for (ISSUE 1).
+
+    Doubles the batch while the xMem estimate fits ``hbm_bytes``, then
+    reports the largest feasible batch and, for the winner, the exact
+    minimum feasible capacity from one instrumented replay
+    (``min_feasible_capacity``) — no per-capacity ``would_oom`` sweep.
+    Every probe re-traces only what changed: phase traces are cached per
+    (fn, avals) so the optimizer phases (batch-independent) stay warm
+    across probes.
+    """
+    from ..configs import get_config, get_smoke
+    from ..configs.base import smoke_shape
+    from ..configs.registry import input_specs
+    from ..core.estimator import XMemEstimator
+    from ..models import model as M
+    from ..train import TrainPolicy, make_estimator_hooks
+
+    cfg = get_smoke(arch) if smoke else get_config(arch)
+    policy = TrainPolicy(optimizer="adamw", microbatches=1)
+    fwd_bwd, update, opt_init = make_estimator_hooks(cfg, policy)
+    params = M.abstract_params(cfg)
+    est = XMemEstimator.for_tpu()
+    probes = []
+    best = None
+    b = 1
+    while b <= max_batch:
+        batch = input_specs(cfg, smoke_shape(seq_len=seq, global_batch=b))
+        rep = est.estimate_training(fwd_bwd, params, batch,
+                                    update_fn=update, opt_init_fn=opt_init)
+        fits = rep.fits(hbm_bytes)
+        probes.append({"batch": b, "peak_bytes": rep.peak_bytes,
+                       "fits": fits, "wall_s": rep.wall_time_s,
+                       "cache_hits": rep.cache_stats.get("hits", 0)})
+        if verbose:
+            print(f"[xmem-hillclimb] batch={b:4d} "
+                  f"peak={rep.peak_bytes/2**30:6.3f} GiB "
+                  f"{'fits' if fits else 'OOM '} "
+                  f"({rep.wall_time_s*1e3:.0f} ms, "
+                  f"cache {rep.cache_stats.get('hits', 0)}h)", flush=True)
+        if not fits:
+            break
+        best = (b, rep)
+        b *= 2
+    out = {"arch": cfg.name, "hbm_bytes": hbm_bytes, "probes": probes}
+    if best is not None:
+        b, rep = best
+        min_cap = est.min_feasible_capacity(fwd_bwd, params, None,
+                                            report=rep)
+        out.update(best_batch=b, best_peak_bytes=rep.peak_bytes,
+                   min_feasible_capacity=min_cap)
+        if verbose:
+            print(f"[xmem-hillclimb] best batch={b} "
+                  f"min feasible capacity "
+                  f"{min_cap/2**30:.3f} GiB", flush=True)
+    return out
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--cell", default="all")
     ap.add_argument("--out", default="artifacts/hillclimb")
+    ap.add_argument("--xmem-batch", metavar="ARCH",
+                    help="run the estimator-driven batch-size hillclimb "
+                         "for ARCH (smoke scale) instead of the cells")
+    ap.add_argument("--hbm-gib", type=float, default=0.25,
+                    help="capacity budget for --xmem-batch (smoke scale)")
     args = ap.parse_args()
+    if args.xmem_batch:
+        r = xmem_batch_hillclimb(args.xmem_batch,
+                                 int(args.hbm_gib * 2**30))
+        os.makedirs(args.out, exist_ok=True)
+        path = os.path.join(args.out, f"xmem_batch__{args.xmem_batch}.json")
+        with open(path, "w") as f:
+            json.dump(r, f, indent=1)
+        print(f"[xmem-hillclimb] wrote {path}")
+        return
     os.makedirs(args.out, exist_ok=True)
     names = list(CELLS) if args.cell == "all" else [args.cell]
     for name in names:

@@ -22,6 +22,39 @@ _DTYPE_BYTES = {
     "u8": 1, "pred": 1, "c64": 8, "c128": 16,
 }
 
+def normalize_cost_analysis(ca) -> dict:
+    """Normalize ``Compiled.cost_analysis()`` across JAX versions.
+
+    Older JAX returns one dict per device program (a list, usually of
+    length 1); newer JAX returns the dict directly. Multi-entry lists are
+    summed per numeric key (per-device programs partition the work).
+    Returns {} for None/empty.
+    """
+    if ca is None:
+        return {}
+    if isinstance(ca, dict):
+        return ca
+    if isinstance(ca, (list, tuple)):
+        if not ca:
+            return {}
+        if len(ca) == 1:
+            return dict(ca[0])
+        out: dict = {}
+        for entry in ca:
+            for k, v in entry.items():
+                if isinstance(v, (int, float)):
+                    out[k] = out.get(k, 0) + v
+                else:
+                    out.setdefault(k, v)
+        return out
+    return {}
+
+
+def cost_analysis_of(compiled) -> dict:
+    """``compiled.cost_analysis()`` with the version normalization."""
+    return normalize_cost_analysis(compiled.cost_analysis())
+
+
 _SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,\s]*)\]")
 _RESULT_RE = re.compile(
     r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*")

@@ -35,23 +35,31 @@ HBM_BYTES = 16 * 2**30     # v5e
 
 def admission_check(cfg, policy: TrainPolicy, shape: ShapeSpec,
                     hbm_bytes: int = HBM_BYTES, shard_factor_fn=None,
-                    verbose: bool = True):
-    """xMem gate: estimate peak device memory a priori (CPU-only)."""
+                    verbose: bool = True, est: XMemEstimator | None = None):
+    """xMem gate: estimate peak device memory a priori (CPU-only).
+
+    Pass ``est`` to amortize across repeated gate decisions — estimators
+    share the process-global trace cache, so a gate serving many jobs
+    (or a replan loop re-gating one job) skips re-tracing whenever the
+    job structure repeats (estimation fast path)."""
     fwd_bwd, update, opt_init = make_estimator_hooks(cfg, policy)
     from ..configs.registry import input_specs
     params = M.abstract_params(cfg)
     batch = input_specs(cfg, shape)
-    est = XMemEstimator.for_tpu()
+    est = est or XMemEstimator.for_tpu()
     rep = est.estimate_training(fwd_bwd, params, batch, update_fn=update,
                                 opt_init_fn=opt_init,
                                 shard_factor_fn=shard_factor_fn)
     ok = rep.peak_bytes <= hbm_bytes
     if verbose:
+        cs = rep.cache_stats
+        cache_note = (f", trace cache {cs['hits']}h/{cs['misses']}m"
+                      if cs else "")
         print(f"[xmem] estimated peak {rep.peak_bytes/2**30:.2f} GiB "
               f"(persistent {rep.persistent_bytes/2**30:.2f}) vs HBM "
               f"{hbm_bytes/2**30:.0f} GiB -> "
               f"{'ADMIT' if ok else 'REJECT'} "
-              f"({rep.wall_time_s:.2f}s estimation)")
+              f"({rep.wall_time_s:.2f}s estimation{cache_note})")
     return ok, rep
 
 
@@ -59,9 +67,10 @@ def replan_if_needed(cfg, policy: TrainPolicy, shape, hbm_bytes,
                      shard_factor_fn=None):
     """Auto-replan: double microbatches until the estimate fits."""
     p = policy
+    est = XMemEstimator.for_tpu()    # one estimator across the loop
     for _ in range(4):
         ok, rep = admission_check(cfg, p, shape, hbm_bytes,
-                                  shard_factor_fn)
+                                  shard_factor_fn, est=est)
         if ok:
             return p, rep
         if shape.global_batch // (p.microbatches * 2) < 1:

@@ -1,6 +1,10 @@
 """Unit + property tests for the two-level allocator simulation."""
 import pytest
-from hypothesis import given, settings, strategies as st
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis "
+    "(pip install -r requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.allocator import (
     CUDA_CACHING, XLA_BFC, TPU_ARENA, MiB, KiB,

@@ -5,7 +5,9 @@ import jax
 import jax.numpy as jnp
 import pytest
 
-from repro.launch.hlo_analysis import (collective_bytes, loop_multipliers,
+from repro.launch.hlo_analysis import (collective_bytes, cost_analysis_of,
+                                       loop_multipliers,
+                                       normalize_cost_analysis,
                                        split_computations, trip_count_of)
 
 
@@ -19,11 +21,15 @@ def scanned_hlo():
     ws = jax.ShapeDtypeStruct((16, 64, 64), jnp.float32)
     x = jax.ShapeDtypeStruct((8, 64), jnp.float32)
     comp = jax.jit(f).lower(ws, x).compile()
-    return comp.as_text(), comp.cost_analysis()
+    return comp.as_text(), cost_analysis_of(comp)
 
 
 def test_cost_analysis_counts_loop_body_once():
-    """The documented caveat this module exists to correct."""
+    """The documented caveat this module exists to correct.
+
+    ``cost_analysis()`` returns a list of per-program dicts on some JAX
+    versions — ``cost_analysis_of`` normalizes that (the raw
+    ``["flops"]`` access was a TypeError there)."""
     def make(L):
         def f(ws, x):
             def body(c, w):
@@ -35,9 +41,18 @@ def test_cost_analysis_counts_loop_body_once():
     flops = []
     for L in (2, 16):
         ws = jax.ShapeDtypeStruct((L, 64, 64), jnp.float32)
-        flops.append(jax.jit(make(L)).lower(ws, x).compile()
-                     .cost_analysis()["flops"])
+        flops.append(cost_analysis_of(
+            jax.jit(make(L)).lower(ws, x).compile())["flops"])
     assert flops[0] == pytest.approx(flops[1], rel=0.05)
+
+
+def test_normalize_cost_analysis_shapes():
+    assert normalize_cost_analysis(None) == {}
+    assert normalize_cost_analysis({"flops": 2.0}) == {"flops": 2.0}
+    assert normalize_cost_analysis([{"flops": 2.0}]) == {"flops": 2.0}
+    merged = normalize_cost_analysis(
+        [{"flops": 2.0, "x": "a"}, {"flops": 3.0}])
+    assert merged["flops"] == 5.0 and merged["x"] == "a"
 
 
 def test_split_and_trip_count(scanned_hlo):

@@ -7,7 +7,9 @@ import jax
 import jax.numpy as jnp
 import pytest
 
-from repro.configs import ARCH_IDS, get_config, get_smoke
+pytestmark = pytest.mark.slow   # arch compiles dominate suite wall time
+
+from repro.configs import ARCH_IDS, get_config, get_smoke  # noqa: E402
 from repro.configs.base import smoke_shape
 from repro.configs.registry import input_specs, decode_input_specs
 from repro.models import model as M
