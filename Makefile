@@ -1,0 +1,16 @@
+PYTHONPATH := src
+export PYTHONPATH
+
+.PHONY: test bench bench-check report
+
+test:            ## tier-1 test suite
+	python -m pytest -x -q
+
+bench:           ## full estimator benchmark; refreshes BENCH_estimator.json
+	python -m benchmarks.perf_estimator
+
+bench-check:     ## perf-regression gate vs checked-in BENCH_estimator.json
+	python -m benchmarks.report --check
+
+report:          ## render artifact tables
+	python -m benchmarks.report

@@ -1,4 +1,4 @@
-"""Estimator fast-path wall-time benchmark (ISSUE 1 acceptance).
+"""Estimator fast-path wall-time benchmark (ISSUE 1 + ISSUE 2 acceptance).
 
 Measures, on a fixed 24-layer dense toy (the profile workload the issue
 cites), iterations=3 unless noted:
@@ -18,13 +18,26 @@ cites), iterations=3 unless noted:
   cache (the admission-gate pattern); the speedup is taken against the
   slow path's repeated-call time (it has no cache, so repeats cost what
   its in-process estimate costs).
-* ``replay_events_per_s`` — allocator-sim replay throughput.
-* ``largeN_*`` — iterations=64: fast-path composition + steady-state
-  replay cost must stay ~flat in N.
+* ``replay_events_per_s`` — allocator-sim replay throughput through the
+  columnar (vectorized) engine, same protocol as the seed measurement
+  (replay of the materialized composition, program build included);
+  ``replay_events_per_s_object`` is the object-interpreter control and
+  ``replay_events_per_s_program`` the shared-program rate a capacity /
+  batch sweep amortizes to. ISSUE 2 gates columnar >= 10x the recorded
+  pre-columnar 137298 ev/s.
+* ``sweep_*`` — a 16-point batch sweep through
+  ``SweepService.estimate_many`` (columnar trace interpolation +
+  vectorized replay + pool fan-out) vs one-at-a-time estimates in the
+  pre-sweep configuration (object replay engine, shared trace cache —
+  the pre-ISSUE-2 hillclimb pattern). Fresh batch grids per repetition
+  for both arms. ISSUE 2 gates >= 4x wall-clock.
+* ``largeN_*`` — iterations=64: fast-path composition + replay cost
+  must stay ~flat in N (columnar: tiled arrays; object: steady-state).
 
 Targets (committed in BENCH_estimator.json, tracked across PRs):
   warm repeated-call speedup >= 5x, cold iterations=3 speedup >= 2x,
-  fast results byte-identical to slow (asserted here too).
+  columnar replay >= 10x recorded, 16-point sweep >= 4x, fast results
+  byte-identical to slow (asserted here too).
 
   PYTHONPATH=src python -m benchmarks.perf_estimator [--out BENCH_estimator.json]
 """
@@ -42,6 +55,53 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), os.pardir))
 
 L, D, H, B = 24, 256, 512, 32
 
+#: replay throughput recorded before the columnar engine (PR 1 /
+#: BENCH_estimator.json at commit 270e098) — the ISSUE 2 10x baseline
+RECORDED_REPLAY_EVS = 137_298
+
+
+def _loss(p, b):
+    import jax.numpy as jnp
+    h = b["x"]
+    for i in range(L):
+        h = jnp.tanh(h @ p[f"w{i}"])
+    return jnp.mean((h - b["y"]) ** 2)
+
+
+def _fwd_bwd(p, b):
+    """Module-level (picklable) so the sweep service can fan the probe
+    traces out over its process pool."""
+    import jax
+    return jax.value_and_grad(_loss)(p, b)
+
+
+def _adam_init(p):
+    import jax.numpy as jnp
+    import jax
+    return jax.tree.map(
+        lambda x: (jnp.zeros_like(x), jnp.zeros_like(x)), p)
+
+
+def _adam(p, g, s):
+    import jax
+    import jax.numpy as jnp
+
+    def upd(pp, gg, ss):
+        m, v = ss
+        m = 0.9 * m + 0.1 * gg
+        v = 0.999 * v + 0.001 * gg * gg
+        return pp - 1e-3 * m / (jnp.sqrt(v) + 1e-8), (m, v)
+    out = jax.tree.map(upd, p, g, s,
+                       is_leaf=lambda x: isinstance(x, tuple))
+    return {k: out[k][0] for k in out}, {k: out[k][1] for k in out}
+
+
+def _batch_specs(batch_size: int):
+    import jax
+    import jax.numpy as jnp
+    return {"x": jax.ShapeDtypeStruct((batch_size, D), jnp.float32),
+            "y": jax.ShapeDtypeStruct((batch_size, D), jnp.float32)}
+
 
 def _workload(batch_size: int = B):
     import jax
@@ -49,33 +109,7 @@ def _workload(batch_size: int = B):
 
     params = {f"w{i}": jax.ShapeDtypeStruct(
         (D, H) if i % 2 == 0 else (H, D), jnp.float32) for i in range(L)}
-    batch = {"x": jax.ShapeDtypeStruct((batch_size, D), jnp.float32),
-             "y": jax.ShapeDtypeStruct((batch_size, D), jnp.float32)}
-
-    def loss(p, b):
-        h = b["x"]
-        for i in range(L):
-            h = jnp.tanh(h @ p[f"w{i}"])
-        return jnp.mean((h - b["y"]) ** 2)
-
-    def fwd_bwd(p, b):
-        return jax.value_and_grad(loss)(p, b)
-
-    def adam_init(p):
-        return jax.tree.map(
-            lambda x: (jnp.zeros_like(x), jnp.zeros_like(x)), p)
-
-    def adam(p, g, s):
-        def upd(pp, gg, ss):
-            m, v = ss
-            m = 0.9 * m + 0.1 * gg
-            v = 0.999 * v + 0.001 * gg * gg
-            return pp - 1e-3 * m / (jnp.sqrt(v) + 1e-8), (m, v)
-        out = jax.tree.map(upd, p, g, s,
-                           is_leaf=lambda x: isinstance(x, tuple))
-        return {k: out[k][0] for k in out}, {k: out[k][1] for k in out}
-
-    return fwd_bwd, params, batch, adam, adam_init
+    return _fwd_bwd, params, _batch_specs(batch_size), _adam, _adam_init
 
 
 def _make_estimator(mode: str):
@@ -175,20 +209,93 @@ def run_benchmark(warm_calls: int = 10, cold_samples: int = 5) -> dict:
         and rep_fast.breakdown == rep_slow.breakdown
         and rep_fast.num_events == rep_slow.num_events)
 
-    # replay throughput on the materialized composition
+    # replay throughput on the materialized composition — same protocol
+    # as the recorded pre-columnar number (full replay() of the flat
+    # block list, program build included); best-of to resist box noise
     blocks = rep_fast.composition.materialize()
     n_events = sum(2 if b.free_t is not None else 1 for b in blocks)
-    t_replay = _median(
-        lambda: MemorySimulator(warm_est.allocator_policy).replay(blocks), 5)
+
+    def _best_of(f, reps=12, inner=8):
+        best = 1e9
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            for _ in range(inner):
+                f()
+            best = min(best, (time.perf_counter() - t0) / inner)
+        return best
+
+    pol = warm_est.allocator_policy
+    col_sim = MemorySimulator(pol, engine="columnar")
+    t_replay = _best_of(lambda: col_sim.replay(blocks))
+    obj_sim = MemorySimulator(pol, engine="object")
+    t_replay_obj = _best_of(lambda: obj_sim.replay(blocks), reps=4,
+                            inner=3)
+    prog = col_sim.as_program(blocks)
+    t_replay_prog = _best_of(lambda: col_sim.replay_program(prog))
+
+    # 16-point batch sweep: estimate_many (interpolation + columnar
+    # replay + pool) vs one-at-a-time in the pre-sweep configuration
+    # (object engine, shared cache). Fresh grids per repetition so
+    # neither arm is flattered by JAX's per-aval tracing caches.
+    from repro.core.cache import TraceCache as _TC
+    from repro.core.estimator import XMemEstimator
+    from repro.core.sweep import SweepPoint, SweepService
+
+    svc = SweepService(XMemEstimator.for_tpu(trace_cache=_TC()),
+                       processes=min(os.cpu_count() or 1, 2))
+    svc.warm_up()
+    # spin worker JAX tracing machinery outside the timed region
+    svc.estimate_many([SweepPoint(_fwd_bwd, params, _batch_specs(bb),
+                                  update_fn=_adam, opt_init_fn=_adam_init)
+                       for bb in (3, 7, 11, 15, 19, 23)])
+    sweep_seq, sweep_many = [], []
+    sweep_identical = True
+    sweep_stats = {}
+    for rep_i in range(1, 4):
+        grid = [rep_i * 1000 + 4 * k for k in range(1, 17)]
+        pts = [SweepPoint(_fwd_bwd, params, _batch_specs(bb),
+                          update_fn=_adam, opt_init_fn=_adam_init)
+               for bb in grid]
+        t0 = time.perf_counter()
+        many = svc.estimate_many(pts)
+        sweep_many.append(time.perf_counter() - t0)
+        sweep_stats = {k: many.stats[k] for k in
+                       ("traced", "interpolated", "pooled", "fallback")}
+        seq_grid = [rep_i * 1000 + 500 + 4 * k for k in range(1, 17)]
+        est_seq = XMemEstimator.for_tpu(trace_cache=_TC(),
+                                        engine="object")
+        t0 = time.perf_counter()
+        for bb in seq_grid:
+            est_seq.estimate_training(_fwd_bwd, params, _batch_specs(bb),
+                                      update_fn=_adam,
+                                      opt_init_fn=_adam_init)
+        sweep_seq.append(time.perf_counter() - t0)
+        # identity spot-check: sweep reports vs sequential on ITS grid
+        if rep_i == 1:
+            chk = XMemEstimator.for_tpu(trace_cache=_TC())
+            for bb, r in zip(grid, many.reports):
+                ref = chk.estimate_training(
+                    _fwd_bwd, params, _batch_specs(bb), update_fn=_adam,
+                    opt_init_fn=_adam_init)
+                sweep_identical &= (
+                    r.peak_bytes == ref.peak_bytes
+                    and r.peak_tensor_bytes == ref.peak_tensor_bytes
+                    and r.persistent_bytes == ref.persistent_bytes
+                    and r.breakdown == ref.breakdown
+                    and r.num_events == ref.num_events)
+    svc.close()
+    sweep_seq_s = statistics.median(sweep_seq)
+    sweep_many_s = statistics.median(sweep_many)
 
     # large-N: composition + replay must stay ~flat for the fast path
-    from repro.core.estimator import XMemEstimator
     largeN_fast = _median(lambda: estimate(XMemEstimator.for_tpu(
         iterations=64, trace_cache=warm_est.trace_cache)), 3)
     largeN_slow = _median(lambda: estimate(XMemEstimator.for_tpu(
         iterations=64, fastpath=False)), 3)
+    # steady-state skip stats come from the object engine (the columnar
+    # engine replays the tiled expansion instead of extrapolating)
     ss = estimate(XMemEstimator.for_tpu(
-        iterations=64,
+        iterations=64, engine="object",
         trace_cache=warm_est.trace_cache)).sim.stats["steady_state"]
 
     out = {
@@ -208,6 +315,17 @@ def run_benchmark(warm_calls: int = 10, cold_samples: int = 5) -> dict:
         "warm_speedup": round(slow_repeat / warm_fast, 2),
         "events_per_estimate": rep_fast.num_events,
         "replay_events_per_s": int(n_events / t_replay),
+        "replay_events_per_s_object": int(n_events / t_replay_obj),
+        "replay_events_per_s_program": int(n_events / t_replay_prog),
+        "replay_recorded_baseline": RECORDED_REPLAY_EVS,
+        "replay_speedup_vs_recorded": round(
+            n_events / t_replay / RECORDED_REPLAY_EVS, 2),
+        "sweep_points": 16,
+        "sweep_sequential_s": round(sweep_seq_s, 5),
+        "sweep_estimate_many_s": round(sweep_many_s, 5),
+        "sweep_speedup": round(sweep_seq_s / sweep_many_s, 2),
+        "sweep_stats": sweep_stats,
+        "sweep_identical": sweep_identical,
         "largeN_iterations": 64,
         "largeN_fast_s": round(largeN_fast, 5),
         "largeN_slow_s": round(largeN_slow, 5),
@@ -220,8 +338,34 @@ def run_benchmark(warm_calls: int = 10, cold_samples: int = 5) -> dict:
         # (the workload class the issue names); the strict fresh-process
         # control is reported above for transparency
         "meets_cold_target_2x": cold_sweep_slow / cold_sweep_fast >= 2.0,
+        "meets_replay_target_10x":
+            n_events / t_replay >= 10 * RECORDED_REPLAY_EVS,
+        "meets_sweep_target_4x": sweep_seq_s / sweep_many_s >= 4.0,
     }
     return out
+
+
+def quick_replay_snapshot() -> dict:
+    """Replay-throughput-only measurement for the perf-regression gate
+    (benchmarks/report.py --check): one traced composition, best-of
+    columnar replay. Seconds, not minutes."""
+    from repro.core.simulator import MemorySimulator
+
+    fwd_bwd, params, batch, adam, adam_init = _workload()
+    est = _make_estimator("fast")
+    rep = est.estimate_training(fwd_bwd, params, batch,
+                                update_fn=adam, opt_init_fn=adam_init)
+    blocks = rep.composition.materialize()
+    n_events = sum(2 if b.free_t is not None else 1 for b in blocks)
+    sim = MemorySimulator(est.allocator_policy, engine="columnar")
+    best = 1e9
+    for _ in range(12):
+        t0 = time.perf_counter()
+        for _ in range(8):
+            sim.replay(blocks)
+        best = min(best, (time.perf_counter() - t0) / 8)
+    return {"replay_events_per_s": int(n_events / best),
+            "events": n_events}
 
 
 def main() -> int:
@@ -242,8 +386,11 @@ def main() -> int:
         json.dump(out, f, indent=1)
         f.write("\n")
     print(f"wrote {args.out}")
-    ok = (out["fast_slow_identical"] and out["meets_warm_target_5x"]
-          and out["meets_cold_target_2x"])
+    ok = (out["fast_slow_identical"] and out["sweep_identical"]
+          and out["meets_warm_target_5x"]
+          and out["meets_cold_target_2x"]
+          and out["meets_replay_target_10x"]
+          and out["meets_sweep_target_4x"])
     return 0 if ok else 1
 
 

@@ -2,12 +2,22 @@
 hillclimb) — keeps the document reproducible from the JSON records.
 
   PYTHONPATH=src python -m benchmarks.report > artifacts/report.md
+
+Perf-regression gate (opt-in, wired to ``make bench-check``): compare a
+fresh lightweight ``perf_estimator`` replay measurement against the
+checked-in BENCH_estimator.json and fail on a >30% replay-throughput
+regression:
+
+  PYTHONPATH=src python -m benchmarks.report --check
 """
 from __future__ import annotations
 
 import glob
 import json
+import os
 import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), os.pardir))
 
 PEAK_FLOPS, HBM_BW, ICI_BW = 197e12, 819e9, 50e9
 
@@ -110,7 +120,38 @@ def hillclimb_table():
     print()
 
 
+def perf_check(baseline_path: str = "BENCH_estimator.json",
+               max_regression: float = 0.30) -> int:
+    """Lightweight perf gate: re-measure columnar replay throughput and
+    fail (exit 1) if it regressed more than ``max_regression`` against
+    the checked-in record. A fresh record that is *faster* passes and
+    prints a hint to refresh the baseline."""
+    if not os.path.exists(baseline_path):
+        print(f"[bench-check] no baseline at {baseline_path}; "
+              f"run `python -m benchmarks.perf_estimator` first")
+        return 1
+    with open(baseline_path) as f:
+        baseline = json.load(f)
+    recorded = baseline.get("replay_events_per_s")
+    if not recorded:
+        print(f"[bench-check] {baseline_path} lacks replay_events_per_s")
+        return 1
+    from benchmarks.perf_estimator import quick_replay_snapshot
+    snap = quick_replay_snapshot()
+    fresh = snap["replay_events_per_s"]
+    floor = recorded * (1.0 - max_regression)
+    status = "OK" if fresh >= floor else "REGRESSION"
+    print(f"[bench-check] replay_events_per_s: fresh={fresh:,} "
+          f"recorded={recorded:,} floor={int(floor):,} -> {status}")
+    if fresh >= recorded * 1.3:
+        print("[bench-check] fresh run is >=1.3x the record — consider "
+              "refreshing BENCH_estimator.json")
+    return 0 if fresh >= floor else 1
+
+
 if __name__ == "__main__":
+    if "--check" in sys.argv:
+        raise SystemExit(perf_check())
     which = sys.argv[1] if len(sys.argv) > 1 else "all"
     if which in ("all", "dryrun"):
         dryrun_table()

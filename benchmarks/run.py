@@ -119,12 +119,16 @@ def bench_rq4_runtime(records):
 
 def bench_rq5_scale():
     """Paper Fig. 9 / RQ5: full-scale per-device estimates vs the
-    dry-run's XLA memory_analysis (the A100 analogue)."""
+    dry-run's XLA memory_analysis (the A100 analogue). Estimates route
+    through one shared ``SweepService`` (warm trace cache + columnar
+    replay); each arch is its own sweep call so a failing arch cannot
+    take down the table."""
     import jax
     from repro.configs import ARCH_IDS, get_config
     from repro.configs.base import TRAIN_4K
     from repro.configs.registry import input_specs
     from repro.core.estimator import XMemEstimator
+    from repro.core.sweep import SweepPoint, SweepService
     from repro.distributed.sharding import ShardingPolicy, shard_factor_fn
     from repro.models import model as M
     from repro.train import TrainPolicy, make_estimator_hooks
@@ -133,6 +137,7 @@ def bench_rq5_scale():
     results = {}
     t0 = time.perf_counter()
     n = 0
+    svc = SweepService(XMemEstimator.for_tpu(scan_unroll_cap=2))
     for arch in ARCH_IDS:
         art = f"artifacts/dryrun/{arch}__train_4k__pod16x16.json"
         if not os.path.exists(art):
@@ -155,17 +160,18 @@ def bench_rq5_scale():
         mb = jax.tree_util.tree_map(
             lambda s: jax.ShapeDtypeStruct(
                 (max(s.shape[0] // micro, 1),) + s.shape[1:], s.dtype), mb)
-        est = XMemEstimator.for_tpu(scan_unroll_cap=2)
         try:
-            rep = est.estimate_training(
+            t1 = time.perf_counter()
+            rep = svc.estimate_many([SweepPoint(
                 fwd_bwd, params, mb, update_fn=update,
                 opt_init_fn=opt_init,
-                shard_factor_fn=shard_factor_fn(cfg, axis_sizes, pol))
+                shard_factor_fn=shard_factor_fn(cfg, axis_sizes, pol),
+            )]).reports[0]
             err = abs(rep.peak_bytes - truth) / truth
             results[arch] = {"truth_gib": truth / 2**30,
                              "xmem_gib": rep.peak_bytes / 2**30,
                              "xmem_err": err,
-                             "xmem_t": rep.wall_time_s}
+                             "xmem_t": time.perf_counter() - t1}
             n += 1
         except Exception as e:  # noqa: BLE001
             results[arch] = {"error": str(e)[:200]}

@@ -14,14 +14,17 @@ from .analyzer import (attribute_by_time_window, classify_blocks,
 from .cache import GLOBAL_TRACE_CACHE, TraceCache, TracedPhase, trace_key
 from .estimator import (EstimateReport, XMemEstimator, flatten_kinds,
                         update_grad_coupling)
-from .events import (BlockKind, BlockLifecycle, MemoryEvent, PeriodicBlocks,
-                     Phase, Trace, lifecycles_to_events, liveness_curve,
-                     peak_live_bytes, periodic_breakdown_peaks,
-                     periodic_peak_live, periodic_phase_peaks,
-                     reduced_for_breakdown)
+from .events import (TRACE_SCHEMA_VERSION, BlockKind, BlockLifecycle,
+                     ColumnarBlocks, ColumnarTrace, LazyEvents, MemoryEvent,
+                     PeriodicBlocks, Phase, Trace, TraceSchemaError,
+                     lifecycles_to_events, liveness_curve, peak_live_bytes,
+                     periodic_breakdown_peaks, periodic_peak_live,
+                     periodic_phase_peaks, reduced_for_breakdown)
 from .orchestrator import (CollectiveSpec, FUSIBLE_OPS, MemoryOrchestrator,
                            OrchestratorPolicy)
-from .simulator import MemorySimulator, SimResult
+from .simulator import (ColumnarProgram, MemorySimulator, SimResult,
+                        program_from_lifecycles, program_from_periodic)
+from .sweep import SweepPoint, SweepService, estimate_many
 from .tracer import (JaxprMemoryTracer, aval_bytes, trace_fn,
                      trace_fn_with_shape)
 
@@ -40,4 +43,8 @@ __all__ = [
     "MemoryOrchestrator", "OrchestratorPolicy", "MemorySimulator",
     "SimResult", "JaxprMemoryTracer", "aval_bytes", "trace_fn",
     "trace_fn_with_shape",
+    "TRACE_SCHEMA_VERSION", "TraceSchemaError", "ColumnarBlocks",
+    "ColumnarTrace", "ColumnarProgram", "LazyEvents",
+    "program_from_lifecycles", "program_from_periodic",
+    "SweepPoint", "SweepService", "estimate_many",
 ]

@@ -23,6 +23,8 @@ import dataclasses
 import itertools
 from typing import Optional
 
+import numpy as np
+
 KiB = 1024
 MiB = 1024 * 1024
 
@@ -85,6 +87,21 @@ POLICIES = {p.name: p for p in (CUDA_CACHING, XLA_BFC, TPU_ARENA)}
 
 def round_up(x: int, q: int) -> int:
     return ((x + q - 1) // q) * q if q else x
+
+
+# -- vectorized size policy (columnar replay engine) -------------------------
+def round_up_array(x: np.ndarray, q: int) -> np.ndarray:
+    """Elementwise ``round_up`` over an int64 array."""
+    if not q:
+        return x
+    return (x + (q - 1)) // q * q
+
+
+def round_size_array(sizes: np.ndarray, policy: AllocatorPolicy) -> np.ndarray:
+    """Elementwise ``CachingAllocatorSim.round_size`` — request rounding
+    for a whole event column in one shot."""
+    return np.maximum(round_up_array(sizes, policy.min_block),
+                      policy.min_block)
 
 
 class DeviceAllocatorSim:
@@ -266,7 +283,12 @@ class CachingAllocatorSim:
     def malloc(self, req: int, t: int = 0) -> int:
         if self.policy.arena:
             return self._arena_malloc(req, t)
-        size = self.round_size(req)
+        return self.malloc_rounded(self.round_size(req), t)
+
+    def malloc_rounded(self, size: int, t: int = 0) -> int:
+        """``malloc`` for an already request-rounded size — the batched
+        replay stepper rounds whole event columns with numpy up front and
+        enters here, skipping the per-event size policy."""
         pool = self._pool_of(size)
         pool_name = "large" if pool is self._free_large else "small"
         block = pool.best_fit(size)

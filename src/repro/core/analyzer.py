@@ -24,7 +24,27 @@ import dataclasses
 from collections import defaultdict
 from typing import Iterable, Sequence
 
-from .events import BlockKind, BlockLifecycle, MemoryEvent, Trace
+from .events import (TRACE_SCHEMA_VERSION, BlockKind, BlockLifecycle,
+                     MemoryEvent, Trace, TraceSchemaError)
+
+
+def load_trace(path: str) -> Trace:
+    """Load a persisted trace dump for analysis.
+
+    Delegates to ``Trace.load`` (which validates ``schema_version`` —
+    dumps written by a newer tracer, or with an unknown payload format,
+    raise :class:`TraceSchemaError` instead of mis-parsing) and wraps
+    non-schema failures in the same error type with the analyzer's
+    context attached, so callers get one clear failure mode.
+    """
+    try:
+        return Trace.load(path)
+    except TraceSchemaError:
+        raise
+    except (KeyError, ValueError, TypeError) as e:
+        raise TraceSchemaError(
+            f"{path}: not a valid xMem trace dump "
+            f"(schema <= v{TRACE_SCHEMA_VERSION}): {e}") from e
 
 
 def reconstruct_lifecycles(trace: Trace) -> list[BlockLifecycle]:
@@ -118,6 +138,20 @@ def attribute_by_time_window(blocks: Iterable[BlockLifecycle],
 
 _BWD_MARKERS = ("transpose", "backward")
 
+#: scope -> is-backward verdict memo; scope strings repeat heavily across
+#: blocks (and are interned by the tracer), so the substring scans run
+#: once per distinct scope instead of once per block
+_BWD_SCOPE_MEMO: dict[str, bool] = {}
+
+
+def _is_bwd_scope(scope: str) -> bool:
+    v = _BWD_SCOPE_MEMO.get(scope)
+    if v is None:
+        v = _BWD_SCOPE_MEMO[scope] = any(m in scope for m in _BWD_MARKERS)
+        if len(_BWD_SCOPE_MEMO) > 1 << 16:   # unbounded-growth guard
+            _BWD_SCOPE_MEMO.clear()
+    return v
+
 
 def classify_blocks(blocks: Iterable[BlockLifecycle],
                     param_like_sizes: frozenset[int] = frozenset()
@@ -130,12 +164,15 @@ def classify_blocks(blocks: Iterable[BlockLifecycle],
     * everything else inside fwd/bwd keeps ACTIVATION.
     """
     out = []
+    append = out.append
+    _act, _tmp, _grad = BlockKind.ACTIVATION, BlockKind.TEMP, BlockKind.GRAD
     for b in blocks:
-        if (b.block_kind in (BlockKind.ACTIVATION, BlockKind.TEMP)
+        bk = b.block_kind
+        if ((bk is _act or bk is _tmp)
                 and b.size in param_like_sizes
-                and any(m in b.scope for m in _BWD_MARKERS)):
-            b = dataclasses.replace(b, block_kind=BlockKind.GRAD)
-        out.append(b)
+                and _is_bwd_scope(b.scope)):
+            b = dataclasses.replace(b, block_kind=_grad)
+        append(b)
     return out
 
 

@@ -67,10 +67,19 @@ class TracedPhase:
         return len(self.trace.events)
 
 
+#: numpy dtype __str__ walks the type registry on every call — at ~150
+#: leaves per trace key that dominated warm estimates, so the string form
+#: is memoized per dtype object (dtypes are interned by numpy/jax).
+_DTYPE_STR: dict = {}
+
+
 def _aval_sig(leaf) -> tuple:
     shape = tuple(getattr(leaf, "shape", ()))
     dtype = getattr(leaf, "dtype", None)
-    return (shape, str(dtype))
+    s = _DTYPE_STR.get(dtype)
+    if s is None:
+        s = _DTYPE_STR[dtype] = str(dtype)
+    return (shape, s)
 
 
 def trace_key(fn, tag: str, flat_leaves: Sequence, treedefs: tuple,

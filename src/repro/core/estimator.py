@@ -49,7 +49,7 @@ from .cache import (BlockInfo, GLOBAL_TRACE_CACHE, TraceCache, TracedPhase,
                     trace_key)
 from .events import (BlockKind, BlockLifecycle, PeriodicBlocks, Phase,
                      peak_live_bytes, periodic_breakdown_peaks,
-                     reduced_for_breakdown)
+                     periodic_breakdown_peaks_fast, reduced_for_breakdown)
 from .orchestrator import CollectiveSpec, MemoryOrchestrator, OrchestratorPolicy
 from .simulator import MemorySimulator, SimResult
 from .tracer import trace_fn_with_shape
@@ -157,7 +157,8 @@ class XMemEstimator:
                  scan_unroll_cap: int = 3,
                  capacity: int = 1 << 62,
                  fastpath: bool = True,
-                 trace_cache: TraceCache | None = None):
+                 trace_cache: TraceCache | None = None,
+                 engine: str = "auto"):
         self.allocator_policy = allocator_policy
         self.orchestrator = MemoryOrchestrator(
             orchestrator_policy or OrchestratorPolicy())
@@ -165,6 +166,17 @@ class XMemEstimator:
         self.scan_unroll_cap = scan_unroll_cap
         self.capacity = capacity
         self.fastpath = fastpath
+        # replay engine: "auto" -> the columnar/vectorized engine on the
+        # fast path, the per-event object interpreter on the reference
+        # path (fastpath=False always replays through the object engine —
+        # it IS the reference).
+        if engine not in ("auto", "object", "columnar"):
+            raise ValueError(f"unknown replay engine {engine!r}")
+        if not fastpath:
+            engine = "object"
+        elif engine == "auto":
+            engine = "columnar"
+        self.engine = engine
         # fastpath estimators share the process-global cache by default so
         # per-decision estimator instances still hit warm traces; the
         # reference path never caches (seed semantics), including when a
@@ -259,11 +271,29 @@ class XMemEstimator:
                 kind_by_bid[b.bid] = k
         if kind_by_bid:
             # push reassigned kinds back into the recorded alloc events
-            # (only outputs change post-trace; inputs are kinded at birth)
-            for e in trace.events:
-                k = kind_by_bid.get(e.block_id)
-                if k is not None:
-                    e.block_kind = k
+            # (only outputs change post-trace; inputs are kinded at birth).
+            # The trace is columnar-backed: rewrite the kind column in one
+            # searchsorted sweep, plus any already-materialized event
+            # objects so both views agree.
+            import numpy as np
+            from .events import KIND_CODE, LazyEvents
+            cols = trace.columnar()
+            bids = np.fromiter(kind_by_bid, np.int64, len(kind_by_bid))
+            codes = np.fromiter((KIND_CODE[k] for k in kind_by_bid.values()),
+                                np.uint8, len(kind_by_bid))
+            order = np.argsort(bids)
+            bids, codes = bids[order], codes[order]
+            pos = np.searchsorted(bids, cols.block_id)
+            pos_c = np.minimum(pos, len(bids) - 1)
+            hit = bids[pos_c] == cols.block_id
+            cols.block_kind[hit] = codes[pos_c[hit]]
+            ev = trace.events
+            materialized = (ev._mat if isinstance(ev, LazyEvents) else ev)
+            if materialized is not None:
+                for e in materialized:
+                    k = kind_by_bid.get(e.block_id)
+                    if k is not None:
+                        e.block_kind = k
         entry = TracedPhase(
             trace=trace,
             lifecycles=tuple(tr.lifecycles()),
@@ -312,18 +342,25 @@ class XMemEstimator:
                   output_kind: BlockKind | None = None) -> None:
             nonlocal cursor
             input_bids = {b.bid for b in entry.input_blocks}
-            output_bids = {b.bid for b in entry.output_blocks}
+            output_bids = ({b.bid for b in entry.output_blocks}
+                           if output_kind is not None else ())
+            cur = cursor
+            bid = next_bid[0]
+            append = target.append
             for lc in entry.lifecycles:
-                if lc.block_id in input_bids:
+                lcb = lc.block_id
+                if lcb in input_bids:
                     continue
-                kind = lc.block_kind
-                if lc.block_id in output_bids and output_kind is not None:
-                    kind = output_kind
-                free_t = lc.free_t + cursor if lc.free_t is not None else None
-                target.append(BlockLifecycle(
-                    fresh_bid(), lc.size, lc.alloc_t + cursor, free_t, it,
-                    phase, lc.op, lc.scope, kind, lc.shard_factor))
-            cursor += len(entry.trace.events) + 1
+                ft = lc.free_t
+                bid += 1
+                append(BlockLifecycle(
+                    bid, lc.size, lc.alloc_t + cur,
+                    None if ft is None else ft + cur, it, phase, lc.op,
+                    lc.scope,
+                    output_kind if lcb in output_bids else lc.block_kind,
+                    lc.shard_factor))
+            next_bid[0] = bid
+            cursor = cur + len(entry.trace.events) + 1
 
         def one_iteration(it: int, target: list, with_init: bool) -> None:
             nonlocal cursor
@@ -473,14 +510,14 @@ class XMemEstimator:
         finally:
             self.orchestrator.policy = _policy_before
 
-    def _estimate_training(self, fwd_bwd_fn, params, batch, update_fn,
-                           opt_init_fn, shard_factor_fn, collective_specs,
-                           capacity, t0) -> EstimateReport:
-        cache = self.trace_cache
-        h0 = cache.hits if cache is not None else 0
-        m0 = cache.misses if cache is not None else 0
-
-        # --- stage 1: CPU traces (paper: profile first iterations) ---
+    def trace_phases(self, fwd_bwd_fn, params, batch, update_fn=None,
+                     opt_init_fn=None, fwd: TracedPhase | None = None
+                     ) -> tuple[TracedPhase, TracedPhase | None,
+                                TracedPhase | None]:
+        """Stage 1: per-phase CPU traces (cached). Passing ``fwd`` skips
+        the forward trace — the sweep service enters here with an
+        interpolated forward phase and still gets the optimizer phases
+        resolved (normally cache hits, they are batch-independent)."""
         def fwd_out_kinds(out_shape):
             n_out = len(jax.tree_util.tree_leaves(out_shape))
             n_loss = len(jax.tree_util.tree_leaves(out_shape[0])) \
@@ -488,11 +525,12 @@ class XMemEstimator:
             return [BlockKind.OUTPUT] * n_loss + \
                    [BlockKind.GRAD] * (n_out - n_loss)
 
-        fwd = self._trace_phase(
-            fwd_bwd_fn,
-            [(params, BlockKind.PARAM, "params"),
-             (batch, BlockKind.INPUT, "batch")],
-            Phase.FORWARD_BACKWARD, out_kind_fn=fwd_out_kinds, tag="fwd")
+        if fwd is None:
+            fwd = self._trace_phase(
+                fwd_bwd_fn,
+                [(params, BlockKind.PARAM, "params"),
+                 (batch, BlockKind.INPUT, "batch")],
+                Phase.FORWARD_BACKWARD, out_kind_fn=fwd_out_kinds, tag="fwd")
         fwd_out_shape = fwd.out_shape
 
         init = upd = None
@@ -514,7 +552,56 @@ class XMemEstimator:
                 upd_args.append((opt_state, BlockKind.OPT_STATE, "opt_state"))
             upd = self._trace_phase(update_fn, upd_args, Phase.OPTIMIZER,
                                     tag="upd")
+        return fwd, upd, init
 
+    def _estimate_training(self, fwd_bwd_fn, params, batch, update_fn,
+                           opt_init_fn, shard_factor_fn, collective_specs,
+                           capacity, t0) -> EstimateReport:
+        cache = self.trace_cache
+        h0 = cache.hits if cache is not None else 0
+        m0 = cache.misses if cache is not None else 0
+
+        # --- stage 1: CPU traces (paper: profile first iterations) ---
+        fwd, upd, init = self.trace_phases(fwd_bwd_fn, params, batch,
+                                           update_fn, opt_init_fn)
+
+        cache_stats = {}
+        if cache is not None:
+            cache_stats = {"hits": cache.hits - h0,
+                           "misses": cache.misses - m0,
+                           "global": cache.stats()}
+        return self.estimate_from_phases(
+            fwd, upd, init, shard_factor_fn=shard_factor_fn,
+            collective_specs=collective_specs, capacity=capacity, t0=t0,
+            cache_stats=cache_stats)
+
+    def estimate_from_phases(self, fwd: TracedPhase,
+                             upd: TracedPhase | None = None,
+                             init: TracedPhase | None = None, *,
+                             shard_factor_fn=None,
+                             collective_specs: Sequence[CollectiveSpec] = (),
+                             capacity: int | None = None,
+                             t0: float | None = None,
+                             cache_stats: dict | None = None
+                             ) -> EstimateReport:
+        """Stages 2-5 (compose, classify, orchestrate, simulate) from
+        already-traced phases. ``estimate_training`` lands here after
+        stage 1; the sweep service (``core/sweep.py``) enters directly
+        with cached or interpolated ``TracedPhase`` entries — including
+        from pool workers, where no JAX tracing must happen."""
+        if t0 is None:
+            t0 = time.perf_counter()
+        _policy_before = self.orchestrator.policy
+        try:
+            return self._estimate_from_phases(
+                fwd, upd, init, shard_factor_fn, collective_specs,
+                capacity, t0, cache_stats or {})
+        finally:
+            self.orchestrator.policy = _policy_before
+
+    def _estimate_from_phases(self, fwd, upd, init, shard_factor_fn,
+                              collective_specs, capacity, t0,
+                              cache_stats) -> EstimateReport:
         # --- stage 2+3: analyze & compose iterations (periodic) ---
         pb, meta = self._compose_periodic(fwd, upd, init)
         concrete = pb.prefix + pb.cycle + pb.suffix
@@ -538,7 +625,7 @@ class XMemEstimator:
         if self.orchestrator.policy.grad_release == "auto":
             mode = "eager_fused"
             upcasts = False
-            if update_fn is not None:
+            if upd is not None:
                 # reuse the already-traced flat update jaxpr (its invars
                 # are params|grads|opt_state leaves in flatten order) —
                 # no extra make_jaxpr; verdict memoized on the entry
@@ -576,7 +663,8 @@ class XMemEstimator:
                       + (len(upd.trace.events) if upd else 0)
                       + (len(init.trace.events) if init else 0))
         sim_runner = MemorySimulator(self.allocator_policy,
-                                     capacity or self.capacity)
+                                     capacity or self.capacity,
+                                     engine=self.engine)
         N = self.iterations
         prefix = [b for b in concrete if b.iteration == 0]
         cyc = [b for b in concrete if b.iteration == 1] if N >= 3 else []
@@ -592,8 +680,9 @@ class XMemEstimator:
             if b.free_t is None and b.block_kind in (
                 BlockKind.PARAM, BlockKind.OPT_STATE))
         # peaks computed on a bounded-replica reduction when middle
-        # iterations carry no net bytes — O(blocks), independent of N
-        liveness_peak, phase_pk = periodic_breakdown_peaks(
+        # iterations carry no net bytes — O(blocks), independent of N;
+        # the vectorized sweep is output-identical to the dict-based one
+        liveness_peak, phase_pk = periodic_breakdown_peaks_fast(
             reduced_for_breakdown(pb))
         breakdown = {
             "phase_peaks": phase_pk,
@@ -601,11 +690,6 @@ class XMemEstimator:
             "liveness_peak": liveness_peak,
         }
         composition = pb
-        cache_stats = {}
-        if cache is not None:
-            cache_stats = {"hits": cache.hits - h0,
-                           "misses": cache.misses - m0,
-                           "global": cache.stats()}
         report = EstimateReport(
             peak_bytes=sim.peak_reserved,
             peak_tensor_bytes=sim.peak_allocated,
@@ -615,7 +699,7 @@ class XMemEstimator:
             breakdown=breakdown,
             wall_time_s=time.perf_counter() - t0,
             num_events=num_events,
-            cache_stats=cache_stats,
+            cache_stats=cache_stats or {},
         )
         report.composition = composition   # for capacity probing
         # min_feasible_capacity may reuse report.sim as its instrumented
@@ -768,7 +852,8 @@ class XMemEstimator:
                 fwd_bwd_fn, params, batch, update_fn=update_fn,
                 opt_init_fn=opt_init_fn, shard_factor_fn=shard_factor_fn,
                 collective_specs=collective_specs)
-        sim_runner = MemorySimulator(self.allocator_policy, 1 << 62)
+        sim_runner = MemorySimulator(self.allocator_policy, 1 << 62,
+                                     engine=self.engine)
         probe = (report.sim
                  if getattr(report, "sim_unbounded", False)
                  and not report.sim.oom else None)
@@ -794,7 +879,8 @@ class XMemEstimator:
         if shard_factor_fn is not None:
             blocks = self.orchestrator.apply_sharding(blocks, shard_factor_fn)
         sim = MemorySimulator(self.allocator_policy,
-                              capacity or self.capacity).replay(blocks)
+                              capacity or self.capacity,
+                              engine=self.engine).replay(blocks)
         return EstimateReport(
             peak_bytes=sim.peak_reserved, peak_tensor_bytes=sim.peak_allocated,
             persistent_bytes=sum(b.sharded_size for b in blocks

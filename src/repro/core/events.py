@@ -20,6 +20,13 @@ import enum
 import json
 from typing import Iterable, Sequence
 
+import numpy as np
+
+#: On-disk trace schema. v1 = seed format (no version field, object event
+#: list). v2 adds the version field, columnar payloads and phase/iteration
+#: metadata for columnar traces. Loaders accept <= current, reject newer.
+TRACE_SCHEMA_VERSION = 2
+
 
 class BlockKind(enum.Enum):
     """Semantic class of a memory block (drives Orchestrator policy)."""
@@ -45,7 +52,33 @@ class Phase(enum.Enum):
     DATA = "data"                 # host->device batch transfer
 
 
-@dataclasses.dataclass
+# Stable enum <-> small-int code tables for the columnar representation.
+# Order is append-only: new members must be added at the end so codes in
+# saved columnar dumps stay valid across versions.
+PHASE_TABLE: tuple[Phase, ...] = tuple(Phase)
+PHASE_CODE: dict[Phase, int] = {p: i for i, p in enumerate(PHASE_TABLE)}
+KIND_TABLE: tuple[BlockKind, ...] = tuple(BlockKind)
+KIND_CODE: dict[BlockKind, int] = {k: i for i, k in enumerate(KIND_TABLE)}
+
+
+class StringInterner:
+    """Append-only string table: intern() -> small int, table[i] -> str."""
+
+    __slots__ = ("table", "_index")
+
+    def __init__(self, table: Sequence[str] = ()):
+        self.table: list[str] = list(table)
+        self._index: dict[str, int] = {s: i for i, s in enumerate(self.table)}
+
+    def intern(self, s: str) -> int:
+        i = self._index.get(s)
+        if i is None:
+            i = self._index[s] = len(self.table)
+            self.table.append(s)
+        return i
+
+
+@dataclasses.dataclass(slots=True)
 class MemoryEvent:
     """One alloc/free in execution order.
 
@@ -78,7 +111,7 @@ class MemoryEvent:
         return MemoryEvent(**d)
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(slots=True)
 class BlockLifecycle:
     """A reconstructed memory block (paper §3.2).
 
@@ -112,9 +145,234 @@ class BlockLifecycle:
         return self.alloc_t <= t < end
 
 
+# -- columnar (structure-of-arrays) representations -------------------------
+@dataclasses.dataclass
+class ColumnarTrace:
+    """Event stream as parallel numpy columns (the hot-path format).
+
+    One row per event; ``kind`` is 1 for alloc / 0 for free, ``phase`` and
+    ``block_kind`` are codes into :data:`PHASE_TABLE` / :data:`KIND_TABLE`,
+    ``op``/``scope`` index the interned string tables. Conversion to and
+    from ``MemoryEvent`` lists is lossless (``test_columnar.py``).
+    """
+
+    kind: np.ndarray          # uint8: 1 = alloc, 0 = free
+    block_id: np.ndarray      # int64
+    size: np.ndarray          # int64, bytes (pre-rounding)
+    t: np.ndarray             # int64 logical clock
+    iteration: np.ndarray     # int64
+    phase: np.ndarray         # uint8 codes -> PHASE_TABLE
+    op: np.ndarray            # int32 -> op_table
+    scope: np.ndarray         # int32 -> scope_table
+    block_kind: np.ndarray    # uint8 codes -> KIND_TABLE
+    op_table: list[str]
+    scope_table: list[str]
+
+    def __len__(self) -> int:
+        return int(self.kind.shape[0])
+
+    @staticmethod
+    def from_events(events: Sequence[MemoryEvent]) -> "ColumnarTrace":
+        n = len(events)
+        kind = np.empty(n, dtype=np.uint8)
+        bid = np.empty(n, dtype=np.int64)
+        size = np.empty(n, dtype=np.int64)
+        t = np.empty(n, dtype=np.int64)
+        it = np.empty(n, dtype=np.int64)
+        phase = np.empty(n, dtype=np.uint8)
+        op = np.empty(n, dtype=np.int32)
+        scope = np.empty(n, dtype=np.int32)
+        bkind = np.empty(n, dtype=np.uint8)
+        ops = StringInterner()
+        scopes = StringInterner()
+        for i, e in enumerate(events):
+            kind[i] = 1 if e.kind == "alloc" else 0
+            bid[i] = e.block_id
+            size[i] = e.size
+            t[i] = e.t
+            it[i] = e.iteration
+            phase[i] = PHASE_CODE[e.phase]
+            op[i] = ops.intern(e.op)
+            scope[i] = scopes.intern(e.scope)
+            bkind[i] = KIND_CODE[e.block_kind]
+        return ColumnarTrace(kind, bid, size, t, it, phase, op, scope,
+                             bkind, ops.table, scopes.table)
+
+    @staticmethod
+    def from_columns(kind, bid, size, t, iteration, phase, op, scope,
+                     bkind, op_table, scope_table) -> "ColumnarTrace":
+        """Build from raw python lists (the tracer's direct-emission path:
+        no ``MemoryEvent`` objects are ever constructed)."""
+        return ColumnarTrace(
+            np.asarray(kind, dtype=np.uint8),
+            np.asarray(bid, dtype=np.int64),
+            np.asarray(size, dtype=np.int64),
+            np.asarray(t, dtype=np.int64),
+            np.asarray(iteration, dtype=np.int64),
+            np.asarray(phase, dtype=np.uint8),
+            np.asarray(op, dtype=np.int32),
+            np.asarray(scope, dtype=np.int32),
+            np.asarray(bkind, dtype=np.uint8),
+            list(op_table), list(scope_table))
+
+    def event_at(self, i: int) -> MemoryEvent:
+        return MemoryEvent(
+            "alloc" if self.kind[i] else "free", int(self.block_id[i]),
+            int(self.size[i]), int(self.t[i]), int(self.iteration[i]),
+            PHASE_TABLE[self.phase[i]], self.op_table[self.op[i]],
+            self.scope_table[self.scope[i]], KIND_TABLE[self.block_kind[i]])
+
+    def to_events(self) -> list[MemoryEvent]:
+        return [self.event_at(i) for i in range(len(self))]
+
+    def with_sizes(self, sizes: np.ndarray) -> "ColumnarTrace":
+        """Same structure, new size column (sweep-point synthesis)."""
+        return dataclasses.replace(
+            self, size=np.asarray(sizes, dtype=np.int64))
+
+    def to_json(self) -> dict:
+        return {
+            "kind": self.kind.tolist(),
+            "block_id": self.block_id.tolist(),
+            "size": self.size.tolist(),
+            "t": self.t.tolist(),
+            "iteration": self.iteration.tolist(),
+            "phase": self.phase.tolist(),
+            "op": self.op.tolist(),
+            "scope": self.scope.tolist(),
+            "block_kind": self.block_kind.tolist(),
+            "op_table": self.op_table,
+            "scope_table": self.scope_table,
+        }
+
+    @staticmethod
+    def from_json(d: dict) -> "ColumnarTrace":
+        return ColumnarTrace.from_columns(
+            d["kind"], d["block_id"], d["size"], d["t"], d["iteration"],
+            d["phase"], d["op"], d["scope"], d["block_kind"],
+            d["op_table"], d["scope_table"])
+
+
+class LazyEvents(Sequence):
+    """List-compatible view over a ``ColumnarTrace`` that materializes
+    ``MemoryEvent`` objects only on first element access. ``len()`` (the
+    dominant consumer on the fast path) never materializes."""
+
+    def __init__(self, columns: ColumnarTrace):
+        self.columns = columns
+        self._mat: list[MemoryEvent] | None = None
+
+    def _materialized(self) -> list[MemoryEvent]:
+        if self._mat is None:
+            self._mat = self.columns.to_events()
+        return self._mat
+
+    def __len__(self) -> int:
+        return len(self.columns)
+
+    def __getitem__(self, i):
+        return self._materialized()[i]
+
+    def __iter__(self):
+        return iter(self._materialized())
+
+    def __reduce__(self):
+        # pickle only the columns (pool payloads stay lean); the
+        # materialized object cache rebuilds on demand
+        return (LazyEvents, (self.columns,))
+
+
+@dataclasses.dataclass
+class ColumnarBlocks:
+    """Lifecycles as parallel numpy columns. ``free_t`` uses -1 as the
+    persistent sentinel (``BlockLifecycle.free_t is None``)."""
+
+    block_id: np.ndarray      # int64
+    size: np.ndarray          # int64
+    alloc_t: np.ndarray       # int64
+    free_t: np.ndarray        # int64, -1 = persistent
+    iteration: np.ndarray     # int64
+    phase: np.ndarray         # uint8 codes
+    op: np.ndarray            # int32 -> op_table
+    scope: np.ndarray         # int32 -> scope_table
+    block_kind: np.ndarray    # uint8 codes
+    shard_factor: np.ndarray  # float64
+    op_table: list[str]
+    scope_table: list[str]
+
+    def __len__(self) -> int:
+        return int(self.block_id.shape[0])
+
+    @staticmethod
+    def from_lifecycles(blocks: Sequence[BlockLifecycle]) -> "ColumnarBlocks":
+        n = len(blocks)
+        bid = np.empty(n, dtype=np.int64)
+        size = np.empty(n, dtype=np.int64)
+        at = np.empty(n, dtype=np.int64)
+        ft = np.empty(n, dtype=np.int64)
+        it = np.empty(n, dtype=np.int64)
+        phase = np.empty(n, dtype=np.uint8)
+        op = np.empty(n, dtype=np.int32)
+        scope = np.empty(n, dtype=np.int32)
+        bkind = np.empty(n, dtype=np.uint8)
+        shard = np.empty(n, dtype=np.float64)
+        ops = StringInterner()
+        scopes = StringInterner()
+        for i, b in enumerate(blocks):
+            bid[i] = b.block_id
+            size[i] = b.size
+            at[i] = b.alloc_t
+            ft[i] = -1 if b.free_t is None else b.free_t
+            it[i] = b.iteration
+            phase[i] = PHASE_CODE[b.phase]
+            op[i] = ops.intern(b.op)
+            scope[i] = scopes.intern(b.scope)
+            bkind[i] = KIND_CODE[b.block_kind]
+            shard[i] = b.shard_factor
+        return ColumnarBlocks(bid, size, at, ft, it, phase, op, scope,
+                              bkind, shard, ops.table, scopes.table)
+
+    def to_lifecycles(self) -> list[BlockLifecycle]:
+        ft = self.free_t
+        return [BlockLifecycle(
+            int(self.block_id[i]), int(self.size[i]), int(self.alloc_t[i]),
+            None if ft[i] < 0 else int(ft[i]), int(self.iteration[i]),
+            PHASE_TABLE[self.phase[i]], self.op_table[self.op[i]],
+            self.scope_table[self.scope[i]], KIND_TABLE[self.block_kind[i]],
+            float(self.shard_factor[i])) for i in range(len(self))]
+
+    def sharded_sizes(self) -> np.ndarray:
+        return sharded_sizes_array(self.size, self.shard_factor)
+
+    def with_sizes(self, sizes: np.ndarray) -> "ColumnarBlocks":
+        return dataclasses.replace(
+            self, size=np.asarray(sizes, dtype=np.int64))
+
+
+def sharded_sizes_array(size: np.ndarray, shard: np.ndarray) -> np.ndarray:
+    """Vectorized ``BlockLifecycle.sharded_size`` — the one place the
+    truncation semantics live for array code (exact: float division
+    truncated toward zero, floor of 1, zero-size blocks stay 0)."""
+    out = np.where(shard == 1.0, size,
+                   np.maximum((size / shard).astype(np.int64), 1))
+    return np.where(size == 0, 0, out).astype(np.int64)
+
+
+class TraceSchemaError(ValueError):
+    """A persisted trace file is incompatible with this code version."""
+
+
 @dataclasses.dataclass
 class Trace:
-    """Ordered event stream + metadata — the inter-stage currency."""
+    """Ordered event stream + metadata — the inter-stage currency.
+
+    ``events`` may be a plain list or a :class:`LazyEvents` view over a
+    ``ColumnarTrace`` (hot-path traces are columnar-backed; objects
+    materialize only if a consumer iterates). ``columnar()`` returns the
+    SoA form, building and caching it on first use for object-backed
+    traces. Mutating ``events`` after ``columnar()`` has been called is
+    a contract violation (the two views would diverge).
+    """
 
     events: list[MemoryEvent]
     num_iterations: int = 1
@@ -123,24 +381,61 @@ class Trace:
     def __len__(self) -> int:
         return len(self.events)
 
+    def columnar(self) -> ColumnarTrace:
+        if isinstance(self.events, LazyEvents):
+            return self.events.columns
+        cols = self.meta.get("_columns")
+        if cols is None:
+            cols = ColumnarTrace.from_events(self.events)
+            self.meta["_columns"] = cols
+        return cols
+
+    @staticmethod
+    def from_columnar(columns: ColumnarTrace, num_iterations: int = 1,
+                      meta: dict | None = None) -> "Trace":
+        return Trace(LazyEvents(columns), num_iterations, meta or {})
+
     def iteration_slice(self, it: int) -> list[MemoryEvent]:
         return [e for e in self.events if e.iteration == it]
 
-    def save(self, path: str) -> None:
+    def save(self, path: str, columnar: bool = False) -> None:
+        """Persist as versioned JSON. ``columnar=True`` writes the SoA
+        payload (phase/iteration carried as full per-event columns plus
+        the trace-level metadata, so nothing is lost round-tripping)."""
+        meta = {k: v for k, v in self.meta.items() if k != "_columns"}
+        d: dict = {
+            "schema_version": TRACE_SCHEMA_VERSION,
+            "num_iterations": self.num_iterations,
+            "meta": meta,
+        }
+        if columnar:
+            d["format"] = "columnar"
+            d["columns"] = self.columnar().to_json()
+        else:
+            d["format"] = "events"
+            d["events"] = [e.to_json() for e in self.events]
         with open(path, "w") as f:
-            json.dump(
-                {
-                    "num_iterations": self.num_iterations,
-                    "meta": self.meta,
-                    "events": [e.to_json() for e in self.events],
-                },
-                f,
-            )
+            json.dump(d, f)
 
     @staticmethod
     def load(path: str) -> "Trace":
         with open(path) as f:
             d = json.load(f)
+        version = d.get("schema_version", 1)   # v1: seed dumps, no field
+        if not isinstance(version, int) or version < 1 \
+                or version > TRACE_SCHEMA_VERSION:
+            raise TraceSchemaError(
+                f"{path}: trace schema version {version!r} is not supported "
+                f"by this build (max {TRACE_SCHEMA_VERSION}); re-dump the "
+                f"trace with a matching version of the tracer")
+        fmt = d.get("format", "events")
+        if fmt == "columnar":
+            return Trace.from_columnar(
+                ColumnarTrace.from_json(d["columns"]),
+                num_iterations=d["num_iterations"], meta=d.get("meta", {}))
+        if fmt != "events" or "events" not in d:
+            raise TraceSchemaError(
+                f"{path}: unknown trace payload format {fmt!r}")
         return Trace(
             events=[MemoryEvent.from_json(e) for e in d["events"]],
             num_iterations=d["num_iterations"],
@@ -350,6 +645,67 @@ def periodic_breakdown_peaks(pb: PeriodicBlocks) -> tuple[int, dict]:
 
     return sweep(total), {ph.value: sweep(d) for ph, d in
                           sorted(per.items(), key=lambda kv: kv[0].value)}
+
+
+def periodic_breakdown_peaks_fast(pb: PeriodicBlocks) -> tuple[int, dict]:
+    """Vectorized ``periodic_breakdown_peaks``: the delta sweep becomes
+    argsort + cumsum, with liveness evaluated at the last event of each
+    timestamp (equivalent to summing all deltas at equal t first).
+    Output is identical to the dict-based sweep (tests/test_columnar.py).
+    """
+    def cols(blocks, reps=1, period=0):
+        if not blocks:
+            return None
+        s, at, ft, ph = zip(*((b.sharded_size, b.alloc_t,
+                               -1 if b.free_t is None else b.free_t,
+                               PHASE_CODE[b.phase]) for b in blocks))
+        s = np.array(s, np.int64)
+        at = np.array(at, np.int64)
+        ft = np.array(ft, np.int64)
+        ph = np.array(ph, np.uint8)
+        if reps > 1:
+            dt = (np.arange(reps, dtype=np.int64) * period)[:, None]
+            at = (at[None, :] + dt).ravel()
+            ft = np.where(ft[None, :] < 0, np.int64(-1),
+                          ft[None, :] + dt).ravel()
+            s = np.broadcast_to(s, (reps, s.shape[0])).ravel()
+            ph = np.broadcast_to(ph, (reps, ph.shape[0])).ravel()
+        return s, at, ft, ph
+
+    parts = [p for p in (
+        cols(pb.prefix),
+        cols(pb.cycle, max(pb.n_cycles, 0) or 1, pb.period)
+        if pb.n_cycles > 0 else None,
+        cols(pb.suffix)) if p is not None]
+    if not parts:
+        return 0, {}
+    s = np.concatenate([p[0] for p in parts])
+    at = np.concatenate([p[1] for p in parts])
+    ft = np.concatenate([p[2] for p in parts])
+    ph = np.concatenate([p[3] for p in parts])
+    has_free = ft >= 0
+    times = np.concatenate([at, ft[has_free]])
+    deltas = np.concatenate([s, -s[has_free]])
+    phases = np.concatenate([ph, ph[has_free]])
+
+    def sweep(t, d):
+        if t.size == 0:
+            return 0
+        order = np.argsort(t, kind="stable")
+        t = t[order]
+        cs = np.cumsum(d[order])
+        last = np.empty(t.shape, bool)
+        last[:-1] = t[1:] != t[:-1]
+        last[-1] = True
+        return max(int(cs[last].max()), 0)
+
+    total = sweep(times, deltas)
+    per = {}
+    for code in np.unique(ph):
+        mask = phases == code
+        per[PHASE_TABLE[code].value] = sweep(times[mask], deltas[mask])
+    per = {k: per[k] for k in sorted(per)}
+    return total, per
 
 
 def liveness_curve(blocks: Iterable[BlockLifecycle]) -> list[tuple[int, int]]:

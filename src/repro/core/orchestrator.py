@@ -304,15 +304,16 @@ class MemoryOrchestrator:
                 for b in blocks]
 
     # -- composite ------------------------------------------------------------
-    def run(self, blocks: list[BlockLifecycle], *,
-            iteration_ends: dict[int, int] | None = None,
-            update_start: dict[int, int] | None = None,
-            next_bwd_start: dict[int, int] | None = None,
-            collective_specs: Sequence[CollectiveSpec] = (),
-            phase_bounds: dict | None = None,
-            num_iterations: int = 1,
-            shard_factor_fn: Callable[[BlockLifecycle], float] | None = None,
-            ) -> list[BlockLifecycle]:
+    def run_unfused(self, blocks: list[BlockLifecycle], *,
+                    iteration_ends: dict[int, int] | None = None,
+                    update_start: dict[int, int] | None = None,
+                    next_bwd_start: dict[int, int] | None = None,
+                    collective_specs: Sequence[CollectiveSpec] = (),
+                    phase_bounds: dict | None = None,
+                    num_iterations: int = 1,
+                    shard_factor_fn=None) -> list[BlockLifecycle]:
+        """The pass pipeline as individual passes — the readable form
+        ``run`` is a fusion of (and the oracle it is tested against)."""
         # fold first: fused temps are never touched by the lifecycle
         # passes below (they act on PARAM/OPT/GRAD/INPUT/OUTPUT or on
         # persistent blocks, which fusible short-lived temps are not), so
@@ -331,6 +332,133 @@ class MemoryOrchestrator:
         if self.policy.release_outputs_next_iter and iteration_ends:
             blocks = self.release_step_outputs(blocks, iteration_ends)
         blocks = self.apply_transient_scale(blocks)
+        if collective_specs and phase_bounds:
+            blocks = self.inject_collectives(blocks, collective_specs,
+                                             phase_bounds, num_iterations)
+        if shard_factor_fn is not None:
+            blocks = self.apply_sharding(blocks, shard_factor_fn)
+        return blocks
+
+    def run(self, blocks: list[BlockLifecycle], *,
+            iteration_ends: dict[int, int] | None = None,
+            update_start: dict[int, int] | None = None,
+            next_bwd_start: dict[int, int] | None = None,
+            collective_specs: Sequence[CollectiveSpec] = (),
+            phase_bounds: dict | None = None,
+            num_iterations: int = 1,
+            shard_factor_fn: Callable[[BlockLifecycle], float] | None = None,
+            ) -> list[BlockLifecycle]:
+        """Fused pass pipeline — output-identical to ``run_unfused``
+        (asserted by tests/test_columnar.py) but two list traversals
+        instead of eight. This is the estimator's per-point hot loop, so
+        the per-block passes (fold, persistence, batch, grad release,
+        upcast injection) run in one pass that also collects the donation
+        budget, and the list-order-dependent tail (donation, output
+        release, transient scale) runs in a second."""
+        p = self.policy
+        iteration_ends = iteration_ends or {}
+        update_start_d = update_start if update_start is not None else None
+        next_bwd = next_bwd_start or {}
+        do_batch = bool(iteration_ends)
+        do_upcast = (update_start is not None and bool(iteration_ends)
+                     and p.optimizer_upcast_coexist)
+        grad_mode = p.grad_release
+        if grad_mode in ("auto",):
+            grad_mode = "at_update"
+        _PARAM, _OPT, _GRAD = (BlockKind.PARAM, BlockKind.OPT_STATE,
+                               BlockKind.GRAD)
+        _IN, _OUT, _ACT, _TMP = (BlockKind.INPUT, BlockKind.OUTPUT,
+                                 BlockKind.ACTIVATION, BlockKind.TEMP)
+        fold = p.fusion_folding
+        fuse_life, fuse_min = p.fusion_max_lifetime, p.fusion_min_bytes
+        out: list[BlockLifecycle] = []
+        append = out.append
+        upcast_blocks: list[BlockLifecycle] = []
+        persistent_sizes: dict[int, int] = {}
+        for b in blocks:
+            kind = b.block_kind
+            free_t = b.free_t
+            # fold_fused
+            if (fold and free_t is not None and b.op in FUSIBLE_OPS
+                    and (free_t - b.alloc_t) <= fuse_life
+                    and b.size >= fuse_min and (kind is _ACT or kind is _TMP)):
+                continue
+            # mark_persistent
+            if kind is _PARAM or kind is _OPT:
+                if free_t is not None:
+                    b = dataclasses.replace(b, free_t=None)
+                persistent_sizes[b.size] = \
+                    persistent_sizes.get(b.size, 0) + 1
+                append(b)
+                continue
+            # batch_per_iteration
+            if do_batch and kind is _IN:
+                end = iteration_ends.get(b.iteration)
+                if end is not None:
+                    b = dataclasses.replace(b, free_t=end)
+                append(b)
+                continue
+            # release_gradients (+ upcast injection bookkeeping)
+            if kind is _GRAD and update_start_d is not None:
+                if free_t is None:
+                    if grad_mode == "eager_fused":
+                        us = update_start_d.get(b.iteration)
+                        if b.op == "scan_ys":
+                            t = us
+                        else:
+                            t = b.alloc_t + p.eager_fuse_window
+                            if us is not None:
+                                t = min(t, us)
+                    elif grad_mode == "at_update":
+                        t = update_start_d.get(b.iteration)
+                    else:  # at_next_iter
+                        t = next_bwd.get(b.iteration + 1)
+                    b = dataclasses.replace(b, free_t=t)
+                    free_t = t
+                if do_upcast:
+                    us = update_start_d.get(b.iteration)
+                    end = iteration_ends.get(b.iteration)
+                    if (us is not None and end is not None and us < end
+                            and (free_t is None or free_t >= us)):
+                        upcast_blocks.append((b, us, end))
+                append(b)
+                continue
+            append(b)
+        # inject_optimizer_upcasts appends synthetic blocks at the tail,
+        # in GRAD block order, ids descending from -100000
+        bid = -100_000
+        for b, us, end in upcast_blocks:
+            append(BlockLifecycle(
+                bid, int(b.size * p.upcast_factor), us, end,
+                b.iteration, Phase.OPTIMIZER, "grad_upcast", b.scope,
+                BlockKind.TEMP, b.shard_factor))
+            bid -= 1
+        # second traversal: donation, output release, transient scale
+        do_donate = p.donate_params or p.donate_opt_state
+        do_release_out = p.release_outputs_next_iter and bool(iteration_ends)
+        scale = p.transient_scale
+        budgets: dict[int, dict[int, int]] = {}
+        blocks2: list[BlockLifecycle] = []
+        append2 = blocks2.append
+        for b in out:
+            if b.block_kind is _OUT:
+                if do_donate:
+                    budget = budgets.get(b.iteration)
+                    if budget is None:
+                        budget = budgets[b.iteration] = \
+                            dict(persistent_sizes)
+                    if budget.get(b.size, 0) > 0:
+                        budget[b.size] -= 1
+                        continue          # aliased: no new allocation
+                if do_release_out and b.free_t is None:
+                    end = iteration_ends.get(b.iteration + 1)
+                    if end is not None:
+                        b = dataclasses.replace(b, free_t=end)
+            if (scale != 1.0 and b.free_t is not None
+                    and b.block_kind in (_ACT, _TMP, _GRAD)):
+                b = dataclasses.replace(b, size=int(b.size * scale))
+            append2(b)
+        blocks = blocks2
         if collective_specs and phase_bounds:
             blocks = self.inject_collectives(blocks, collective_specs,
                                              phase_bounds, num_iterations)

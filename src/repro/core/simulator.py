@@ -32,14 +32,164 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
+from operator import attrgetter
 from typing import Sequence
 
+import numpy as np
+
 from .allocator import (AllocatorPolicy, CachingAllocatorSim, CUDA_CACHING,
-                        DeviceAllocatorSim, SimOOMError, round_up)
-from .events import (BlockLifecycle, PeriodicBlocks, lifecycles_to_events,
+                        DeviceAllocatorSim, SimOOMError, round_size_array,
+                        round_up, round_up_array)
+from .events import (CYCLE_ID_STRIDE, BlockLifecycle, PeriodicBlocks,
+                     lifecycles_to_events, sharded_sizes_array,
                      shift_cycle_bid, split_cycle_bid)
 
 _UNBOUNDED = 1 << 62
+
+#: Above this many expanded event rows the columnar engine hands back to
+#: the object engine, whose steady-state replay is O(cycle) in N while
+#: tiled expansion is O(N * cycle).
+_MAX_COLUMNAR_EVENTS = 4_000_000
+
+
+# -- columnar programs (vectorized replay engine) ----------------------------
+@dataclasses.dataclass
+class ColumnarProgram:
+    """A replay-ready, time-sorted columnar event stream.
+
+    Rows are sorted exactly the way the object engine orders its merged
+    stream — primary ``t``, frees (kind 0) before allocs (kind 1) at
+    equal ``t``, ties broken by block position — so event indices (and
+    therefore ``oom_at``) coincide between engines. ``size`` is the
+    sharded request size; ``exec_mask`` marks events that actually drive
+    the allocator (positive-size allocs, and frees whose alloc both
+    executes and precedes them), mirroring the object engine's skip
+    rules. A program is immutable and capacity-independent: one build
+    serves every probe of a capacity sweep and every point of a batch
+    sweep that shares the structure.
+    """
+
+    t: np.ndarray          # int64 logical clock
+    kind: np.ndarray       # int8: 1 = alloc, 0 = free
+    bid: np.ndarray        # int64 block id
+    size: np.ndarray       # int64 sharded request bytes
+    exec_mask: np.ndarray  # bool: event reaches the allocator
+    _n_blocks: int = 0
+    _traj: dict = dataclasses.field(default_factory=dict)
+
+    def __len__(self) -> int:
+        return int(self.t.shape[0])
+
+    @property
+    def unique_bids(self) -> bool:
+        flag = self._traj.get("unique_bids")
+        if flag is None:
+            allocs = self.bid[self.kind == 1]
+            flag = int(np.unique(allocs).shape[0]) == self._n_blocks
+            self._traj["unique_bids"] = flag
+        return flag
+
+    def arena_trajectory(self, policy: AllocatorPolicy):
+        """Capacity-independent arena state curves (live bytes, page
+        demand), computed once and cached — every capacity probe of a
+        sweep reuses them, so probing K capacities costs one pass plus
+        K comparisons."""
+        key = (policy.min_block, policy.device_page)
+        traj = self._traj.get(key)
+        if traj is None:
+            exec_mask = self.exec_mask
+            exec_alloc = exec_mask & (self.kind == 1)
+            rounded = round_size_array(self.size, policy)
+            delta = np.where(exec_mask,
+                             np.where(self.kind == 1, rounded, -rounded), 0)
+            live = np.cumsum(delta)
+            want = np.where(exec_alloc,
+                            round_up_array(live, policy.device_page), 0)
+            traj = self._traj[key] = (exec_alloc, live, want)
+        return traj
+
+
+_BLOCK_COLS = attrgetter("block_id", "size", "alloc_t", "free_t",
+                         "shard_factor")
+
+
+def _block_arrays(blocks: Sequence[BlockLifecycle]):
+    n = len(blocks)
+    if not n:
+        z = np.empty(0, np.int64)
+        return z, z, z, z
+    bid, size, at, ft, shard = zip(*map(_BLOCK_COLS, blocks))
+    bid = np.array(bid, np.int64)
+    size = np.array(size, np.int64)
+    at = np.array(at, np.int64)
+    ft = np.fromiter((-1 if v is None else v for v in ft), np.int64, n)
+    shard = np.array(shard, np.float64)
+    if np.any(shard != 1.0):
+        size = sharded_sizes_array(size, shard)
+    return bid, size, at, ft
+
+
+def _program_from_block_arrays(bid, size, at, ft) -> ColumnarProgram:
+    """Expand per-lifecycle columns (free_t == -1 means persistent) into
+    the sorted event stream. Row ``i < n_blocks`` is block i's alloc;
+    the tail rows are the frees, paired by construction."""
+    n_b = int(bid.shape[0])
+    idx_f = np.nonzero(ft >= 0)[0]
+    n_f = int(idx_f.shape[0])
+    n_ev = n_b + n_f
+
+    def expand(col, fill=None):
+        out = np.empty(n_ev, col.dtype)
+        out[:n_b] = col
+        out[n_b:] = col[idx_f] if fill is None else fill
+        return out
+
+    ev_t = expand(at, fill=ft[idx_f])
+    ev_bid = expand(bid)
+    ev_size = expand(size)
+    ev_kind = np.zeros(n_ev, np.int8)
+    ev_kind[:n_b] = 1
+    ev_seq = np.empty(n_ev, np.int64)
+    ev_seq[:n_b] = np.arange(n_b)
+    ev_seq[n_b:] = idx_f
+    order = np.lexsort((ev_seq, ev_kind, ev_t))
+    pos = np.empty(n_ev, np.int64)
+    pos[order] = np.arange(n_ev)
+    alloc_ok = size > 0
+    ev_exec = np.empty(n_ev, bool)
+    ev_exec[:n_b] = alloc_ok
+    ev_exec[n_b:] = alloc_ok[idx_f] & (pos[:n_b][idx_f] < pos[n_b:])
+    return ColumnarProgram(ev_t[order], ev_kind[order], ev_bid[order],
+                           ev_size[order], ev_exec[order], n_b)
+
+
+def program_from_lifecycles(blocks: Sequence[BlockLifecycle]
+                            ) -> ColumnarProgram:
+    return _program_from_block_arrays(*_block_arrays(blocks))
+
+
+def program_from_periodic(pb: PeriodicBlocks) -> ColumnarProgram:
+    """Expand a periodic composition with array arithmetic: the middle
+    iterations are offset-shifted tiles of the cycle template (times
+    shifted by k*period, ids by the cycle-instance stride) — no
+    per-event Python objects are ever built."""
+    parts = [_block_arrays(pb.prefix)]
+    nc, P = pb.n_cycles, pb.period
+    if nc > 0 and len(pb.cycle):
+        c_bid, c_size, c_at, c_ft = _block_arrays(pb.cycle)
+        C = c_bid.shape[0]
+        inst = np.arange(nc, dtype=np.int64)
+        dt = (inst * P)[:, None]
+        shift = ((inst + 1) * CYCLE_ID_STRIDE)[:, None]
+        ft_tiled = np.where(c_ft[None, :] < 0, np.int64(-1),
+                            c_ft[None, :] + dt)
+        parts.append(((c_bid[None, :] + shift).ravel(),
+                      np.broadcast_to(c_size, (nc, C)).ravel(),
+                      (c_at[None, :] + dt).ravel(),
+                      ft_tiled.ravel()))
+    parts.append(_block_arrays(pb.suffix))
+    bid, size, at, ft = (np.concatenate(cols) for cols in zip(*parts))
+    return _program_from_block_arrays(bid, size, at, ft)
 
 
 @dataclasses.dataclass
@@ -75,14 +225,69 @@ def _event_tuples(blocks: Sequence[BlockLifecycle], seq0: int
 
 
 class MemorySimulator:
+    """Two-level allocator replay with two interchangeable engines.
+
+    ``engine="object"`` (default) is the reference implementation: the
+    per-event Python interpreter, including steady-state extrapolation
+    for periodic compositions. ``engine="columnar"`` replays a
+    :class:`ColumnarProgram` — exact vectorized prefix-sum liveness for
+    the arena policy, a batched stepper (numpy rounding + tight loop
+    over primitive columns) for the BFC policies — and falls back to the
+    object engine whenever a program cannot represent the input (block-id
+    collisions, or expansions past ``_MAX_COLUMNAR_EVENTS`` where
+    steady-state skipping wins). Both engines produce identical
+    ``SimResult`` peaks and OOM points (tests/test_columnar.py).
+    """
+
     def __init__(self, policy: AllocatorPolicy = CUDA_CACHING,
-                 capacity: int = _UNBOUNDED):
+                 capacity: int = _UNBOUNDED, engine: str = "object"):
+        if engine not in ("object", "columnar"):
+            raise ValueError(f"unknown replay engine {engine!r}")
         self.policy = policy
         self.capacity = capacity
+        self.engine = engine
         self.last_capacity_replays = 0    # replays used by the last sweep
 
+    # -- columnar dispatch ----------------------------------------------------
+    def as_program(self, blocks) -> ColumnarProgram | None:
+        """Build (or pass through) a columnar program, or None when the
+        input needs the object engine. A *prebuilt* program that this
+        policy cannot replay (arena + colliding block ids) raises — it
+        carries no lifecycles to fall back to."""
+        if isinstance(blocks, ColumnarProgram):
+            if self.policy.arena and not blocks.unique_bids:
+                raise ValueError(
+                    "ColumnarProgram has colliding block ids: the arena "
+                    "engine needs unique lifecycle ids — replay the "
+                    "original lifecycles instead (the object engine "
+                    "resolves collisions through its handle table)")
+            return blocks
+        if isinstance(blocks, PeriodicBlocks):
+            rows = 2 * (len(blocks.prefix) + len(blocks.suffix)
+                        + blocks.n_cycles * len(blocks.cycle))
+            if rows > _MAX_COLUMNAR_EVENTS:
+                return None
+            prog = program_from_periodic(blocks)
+        else:
+            prog = program_from_lifecycles(blocks)
+        if self.policy.arena and not prog.unique_bids:
+            # the vectorized pairing assumes one lifecycle per id; the
+            # object engine's handle table resolves collisions instead
+            return None
+        return prog
+
+    def replay_program(self, prog: ColumnarProgram) -> SimResult:
+        if self.policy.arena:
+            return self._replay_arena_program(prog)
+        return self._replay_bfc_program(prog)
+
     def replay(self, blocks, steady_state: bool = True) -> SimResult:
-        """Replay a flat lifecycle list or a ``PeriodicBlocks`` program."""
+        """Replay a flat lifecycle list, a ``PeriodicBlocks`` composition
+        or a prebuilt ``ColumnarProgram``."""
+        if self.engine == "columnar" or isinstance(blocks, ColumnarProgram):
+            prog = self.as_program(blocks)
+            if prog is not None:
+                return self.replay_program(prog)
         if isinstance(blocks, PeriodicBlocks):
             return self._replay_periodic(blocks, steady_state)
         events = lifecycles_to_events(blocks)
@@ -339,10 +544,89 @@ class MemorySimulator:
             "events_replayed": n_done,
         })
 
+    # -- columnar engines ------------------------------------------------------
+    def _replay_arena_program(self, prog: ColumnarProgram) -> SimResult:
+        """Exact vectorized arena replay: request rounding, live-byte
+        prefix sum, page-rounded demand curve and first-over-capacity OOM
+        detection are all single array expressions. O(n log n) in the
+        event count (the sort lives in program construction)."""
+        n = len(prog)
+        # arena demand: reserved ratchets to round_up(live, page) at each
+        # executing alloc; OOM iff that want exceeds capacity (§3.4(v)
+        # collapses to one comparison — reclaim cannot help a compacting
+        # arena whose live bytes alone overflow). The curves are
+        # capacity-independent, so they are cached on the program and
+        # every capacity probe pays only the comparisons below.
+        exec_alloc, live, want = prog.arena_trajectory(self.policy)
+        over = want > self.capacity
+        oom = bool(over.any())
+        oom_at = int(np.argmax(over)) if oom else None
+        j = oom_at if oom else n
+        live_j, want_j = live[:j], want[:j]
+        alloc_j = exec_alloc[:j]
+        peak_alloc = int(live_j[alloc_j].max()) if alloc_j.any() else 0
+        res_run = np.maximum.accumulate(want_j)
+        reserved = int(res_run[-1]) if j else 0
+        demand_hi = j + 1 if oom else n   # failing want still recorded
+        max_inuse = int(want[:demand_hi].max()) if demand_hi else 0
+        executed = prog.exec_mask[:j]
+        curve = list(zip(prog.t[:j][executed].tolist(),
+                         live_j[executed].tolist(),
+                         res_run[executed].tolist()))
+        allocated = int(live_j[-1]) if j else 0
+        stats = {
+            "allocated": allocated,
+            "reserved": reserved,
+            "peak_allocated": peak_alloc,
+            "peak_reserved": reserved,
+            "device_peak_reserved": reserved,
+            "n_splits": 0, "n_merges": 0, "n_cache_hits": 0,
+            "n_segments": 0,
+            "max_inuse_demand": max_inuse,
+            "engine": "columnar",
+            "events_replayed": j,
+        }
+        return SimResult(peak_reserved=reserved, peak_allocated=peak_alloc,
+                         oom=oom, oom_at=oom_at, curve=curve, stats=stats,
+                         segments=[])
+
+    def _replay_bfc_program(self, prog: ColumnarProgram) -> SimResult:
+        """Batched BFC stepper: request rounding is done for the whole
+        column with numpy and events stream through a tight loop over
+        primitive values; the Python free-list/segment logic is entered
+        only where BFC state actually decides (best-fit, split, coalesce,
+        reclaim)."""
+        device = DeviceAllocatorSim(self.capacity, self.policy.device_page)
+        sim = CachingAllocatorSim(self.policy, device)
+        rounded = round_size_array(prog.size, self.policy)
+        handles: dict[int, int] = {}
+        malloc = sim.malloc_rounded
+        free = sim.free
+        pop = handles.pop
+        oom, oom_at = False, None
+        n_done = 0
+        try:
+            for kind, bid, rsize, size, t in zip(
+                    prog.kind.tolist(), prog.bid.tolist(), rounded.tolist(),
+                    prog.size.tolist(), prog.t.tolist()):
+                if kind:
+                    if size > 0:
+                        handles[bid] = malloc(rsize, t)
+                else:
+                    h = pop(bid, None)
+                    if h is not None:
+                        free(h, t)
+                n_done += 1
+        except SimOOMError:
+            oom, oom_at = True, n_done
+        return self._result(sim, oom, oom_at, extra_stats={
+            "engine": "columnar", "events_replayed": n_done})
+
     # -- capacity probing ------------------------------------------------------
     def would_oom(self, blocks, capacity: int) -> bool:
         """Two-level OOM verdict at a specific capacity (PEF round 2)."""
-        return MemorySimulator(self.policy, capacity).replay(blocks).oom
+        return MemorySimulator(self.policy, capacity,
+                               self.engine).replay(blocks).oom
 
     def min_feasible_capacity(self, blocks,
                               probe: SimResult | None = None) -> int:
@@ -352,33 +636,62 @@ class MemorySimulator:
         demand (the candidate) plus a proven bracket: ``peak_allocated``
         rounded up is a hard lower bound, and an unbounded run's
         ``peak_reserved`` is always feasible (the trajectory is identical
-        at that capacity). Two verification replays confirm the candidate
-        in the common case; otherwise a page-granular bisection inside
-        the bracket resolves reclaim-induced divergence.
+        at that capacity).
+
+        For the arena policy the candidate is returned outright — an
+        arena trajectory is capacity-independent up to its OOM point, so
+        feasibility at c is exactly ``max demand <= c`` and the
+        instrumented maximum IS the answer (a true multi-capacity replay:
+        every candidate capacity is decided by the one demand curve).
+        For the BFC policies reclaim can genuinely shift the answer, so
+        two verification replays confirm the candidate and a
+        page-granular bisection resolves divergence; with the columnar
+        engine all of those probes share one prebuilt program (the sort
+        and rounding are paid once, not per probe).
         """
         page = max(self.policy.device_page, 1)
+        prog = (self.as_program(blocks) if self.engine == "columnar"
+                else None)
+
+        def replay_at(cap: int) -> SimResult:
+            sim = MemorySimulator(self.policy, cap, self.engine)
+            return (sim.replay_program(prog) if prog is not None
+                    else sim.replay(blocks))
+
         # a usable probe must be a COMPLETE unbounded replay: an OOM'd or
         # capacity-constrained run has truncated peaks/demand (and its
         # reclaim behavior invalidates the feasible-by-identity bracket)
         if (probe is None or probe.oom
                 or "max_inuse_demand" not in probe.stats):
-            probe = MemorySimulator(self.policy, _UNBOUNDED).replay(blocks)
+            probe = replay_at(_UNBOUNDED)
             self.last_capacity_replays = 1
         else:
             self.last_capacity_replays = 0
         if probe.peak_reserved <= 0:
             return 0
         lo = round_up(max(probe.peak_allocated, 1), page)
-        hi = round_up(probe.peak_reserved, page)      # feasible by identity
-        cand = min(max(round_up(
-            probe.stats.get("max_inuse_demand", hi), page), lo), hi)
+        cand = max(round_up(
+            probe.stats.get("max_inuse_demand", probe.peak_reserved),
+            page), lo)
+        if self.policy.arena:
+            return cand                     # exact, zero extra replays
 
         def feasible(c: int) -> bool:
             self.last_capacity_replays += 1
-            return not self.would_oom(blocks, c)
+            return not replay_at(c).oom
+
+        # upper bracket: an unbounded run's peak_reserved is usually
+        # feasible by trajectory identity, but growth-doubling policies
+        # can need MORE than the unbounded reservation once capacity
+        # pressure reorders reclaims and doubling grants — so the
+        # bracket is verified and grown geometrically until it holds
+        hi = max(round_up(probe.peak_reserved, page), cand)
+        while not feasible(hi):
+            hi = round_up(hi * 2, page)
+        cand = min(cand, hi)
 
         lo_k, hi_k = lo // page, hi // page
-        if feasible(cand):
+        if cand == hi or feasible(cand):
             if cand <= lo or not feasible(cand - page):
                 return cand                            # O(1) replays
             hi_k = cand // page - 1

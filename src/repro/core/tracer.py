@@ -35,6 +35,7 @@ from collections import defaultdict
 from typing import Any, Callable, Sequence
 
 import jax
+import numpy as np
 from jax.extend import core as jcore
 
 try:  # DropVar is not re-exported via jax.extend.core
@@ -42,7 +43,8 @@ try:  # DropVar is not re-exported via jax.extend.core
 except ImportError:  # pragma: no cover - future-proofing
     _DropVar = ()
 
-from .events import BlockKind, MemoryEvent, Phase, Trace
+from .events import (KIND_CODE, PHASE_CODE, BlockKind, ColumnarTrace,
+                     Phase, StringInterner, Trace)
 
 # Primitive param keys that hold sub-jaxprs to inline.
 _CALL_JAXPR_KEYS = ("jaxpr", "call_jaxpr", "fun_jaxpr")
@@ -79,12 +81,27 @@ class JaxprMemoryTracer:
         self.cap = scan_unroll_cap
         self.phase = phase
         self.iteration = iteration
-        self.events: list[MemoryEvent] = []
+        # Events are emitted straight into primitive columns (the
+        # ColumnarTrace SoA layout) — MemoryEvent objects materialize
+        # lazily, only if a consumer iterates trace.events.
+        self._ev_kind: list[int] = []    # 1 = alloc, 0 = free
+        self._ev_bid: list[int] = []
+        self._ev_size: list[int] = []
+        self._ev_t: list[int] = []
+        self._ev_op: list[int] = []
+        self._ev_scope: list[int] = []
+        self._ev_bkind: list[int] = []
+        self._ops = StringInterner()
+        self._scopes = StringInterner()
         self.t = 0
         self._next_bid = 0
         self.blocks: dict[int, _Block] = {}
         self.input_blocks: list[_Block] = []
         self.output_blocks: list[_Block] = []
+
+    @property
+    def num_events(self) -> int:
+        return len(self._ev_kind)
 
     # ---- block machinery -------------------------------------------------
     def _new_block(self, size: int, refs: int, op: str, scope: str,
@@ -93,9 +110,13 @@ class JaxprMemoryTracer:
                    alloc_t=self.t, op=op, scope=scope)
         self._next_bid += 1
         self.blocks[b.bid] = b
-        self.events.append(MemoryEvent(
-            "alloc", b.bid, size, self.t, self.iteration, self.phase,
-            op, scope, kind))
+        self._ev_kind.append(1)
+        self._ev_bid.append(b.bid)
+        self._ev_size.append(size)
+        self._ev_t.append(self.t)
+        self._ev_op.append(self._ops.intern(op))
+        self._ev_scope.append(self._scopes.intern(scope))
+        self._ev_bkind.append(KIND_CODE[kind])
         self.t += 1
         return b
 
@@ -107,9 +128,13 @@ class JaxprMemoryTracer:
         if b.refs <= 0 and not b.pinned and not b.freed:
             b.freed = True
             b.free_t = self.t
-            self.events.append(MemoryEvent(
-                "free", b.bid, b.size, self.t, self.iteration, self.phase,
-                op, scope, b.kind))
+            self._ev_kind.append(0)
+            self._ev_bid.append(b.bid)
+            self._ev_size.append(b.size)
+            self._ev_t.append(self.t)
+            self._ev_op.append(self._ops.intern(op))
+            self._ev_scope.append(self._scopes.intern(scope))
+            self._ev_bkind.append(KIND_CODE[b.kind])
             self.t += 1
 
     # ---- use counting ------------------------------------------------------
@@ -391,8 +416,15 @@ class JaxprMemoryTracer:
                 b.pinned = True
                 b.kind = b.kind if b.kind != BlockKind.ACTIVATION else BlockKind.OUTPUT
         self.output_blocks = [b for b in outs if b is not None]
-        return Trace(self.events, num_iterations=1,
-                     meta={"phase": self.phase.value})
+        n = self.num_events
+        columns = ColumnarTrace.from_columns(
+            self._ev_kind, self._ev_bid, self._ev_size, self._ev_t,
+            np.full(n, self.iteration, dtype=np.int64),
+            np.full(n, PHASE_CODE[self.phase], dtype=np.uint8),
+            self._ev_op, self._ev_scope, self._ev_bkind,
+            self._ops.table, self._scopes.table)
+        return Trace.from_columnar(columns, num_iterations=1,
+                                   meta={"phase": self.phase.value})
 
 
 def trace_fn(fn: Callable, *args, arg_kinds=None, arg_scopes=None,

@@ -291,6 +291,53 @@ def iter_cells():
             yield arch, shape_name
 
 
+# ---------------------------------------------------------------------------
+def xmem_gate(arch: str, hbm_gib: float = 0.25, seq: int = 64,
+              batches: tuple = (1, 2, 4, 8, 12, 16, 24, 32, 48, 64),
+              out_dir: str = "artifacts/dryrun") -> dict:
+    """Estimator-side admission gate for a dry-run cell family: sweep
+    the candidate batch sizes through ``SweepService.estimate_many``
+    (columnar trace interpolation + vectorized replay) BEFORE paying any
+    XLA compile, and record which settings fit the device. Smoke-scale
+    configs keep this runnable anywhere; the full-scale dry-run then
+    only compiles settings the gate admits."""
+    from ..configs import get_smoke
+    from ..configs.base import smoke_shape
+    from ..configs.registry import input_specs
+    from ..core.estimator import XMemEstimator
+    from ..core.sweep import SweepPoint, SweepService
+    from ..models import model as M
+    from ..train import TrainPolicy, make_estimator_hooks
+
+    cfg = get_smoke(arch)
+    tpolicy = TrainPolicy(optimizer="adamw", microbatches=1)
+    fwd_bwd, update, opt_init = make_estimator_hooks(cfg, tpolicy)
+    params = M.abstract_params(cfg)
+    svc = SweepService(XMemEstimator.for_tpu())
+    points = [SweepPoint(
+        fwd_bwd, params,
+        input_specs(cfg, smoke_shape(seq_len=seq, global_batch=b)),
+        update_fn=update, opt_init_fn=opt_init) for b in batches]
+    result = svc.estimate_many(points)
+    hbm = int(hbm_gib * 2**30)
+    record = {
+        "arch": cfg.name, "kind": "xmem_gate", "hbm_bytes": hbm,
+        "seq": seq,
+        "sweep": {k: result.stats[k] for k in
+                  ("points", "traced", "interpolated", "fallback",
+                   "wall_s")},
+        "settings": [
+            {"batch": b, "peak_bytes": rep.peak_bytes,
+             "fits": rep.fits(hbm)}
+            for b, rep in zip(batches, result.reports)],
+    }
+    record["admitted"] = [s["batch"] for s in record["settings"]
+                          if s["fits"]]
+    os.makedirs(out_dir, exist_ok=True)
+    _write(os.path.join(out_dir, f"{arch}__xmem_gate.json"), record)
+    return record
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch")
@@ -300,7 +347,23 @@ def main():
     ap.add_argument("--both-meshes", action="store_true")
     ap.add_argument("--out", default="artifacts/dryrun")
     ap.add_argument("--force", action="store_true")
+    ap.add_argument("--xmem-gate", metavar="ARCH",
+                    help="run the estimator-side batch admission sweep "
+                         "for ARCH (smoke scale, no compile) and exit")
+    ap.add_argument("--hbm-gib", type=float, default=0.25,
+                    help="capacity budget for --xmem-gate (smoke scale)")
     args = ap.parse_args()
+
+    if args.xmem_gate:
+        r = xmem_gate(args.xmem_gate, hbm_gib=args.hbm_gib,
+                      out_dir=args.out)
+        s = r["sweep"]
+        print(f"[xmem-gate] {r['arch']}: admitted batches "
+              f"{r['admitted']} of "
+              f"{[x['batch'] for x in r['settings']]} "
+              f"({s['traced']} traced / {s['interpolated']} interpolated, "
+              f"{s['wall_s']*1e3:.0f} ms)")
+        return
 
     meshes = (False, True) if (args.both_meshes or args.all) \
         else (args.multi_pod,)

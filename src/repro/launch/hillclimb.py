@@ -175,20 +175,22 @@ def xmem_batch_hillclimb(arch: str, hbm_bytes: int, seq: int = 64,
                          max_batch: int = 512, smoke: bool = True,
                          verbose: bool = True) -> dict:
     """Estimator-driven batch-size search: the memory-gate workload the
-    estimation fast path exists for (ISSUE 1).
+    estimation fast path exists for (ISSUE 1, re-based on the sweep
+    service in ISSUE 2).
 
-    Doubles the batch while the xMem estimate fits ``hbm_bytes``, then
-    reports the largest feasible batch and, for the winner, the exact
-    minimum feasible capacity from one instrumented replay
+    The doubling grid 1, 2, 4, ... max_batch is handed to
+    ``SweepService.estimate_many`` as one batch: three probe batches are
+    traced for real, the rest are synthesized from the columnar affine
+    trace model (with per-point exactness checks) and replayed through
+    the vectorized engine. The largest fitting batch wins and its exact
+    minimum feasible capacity comes from the single instrumented replay
     (``min_feasible_capacity``) — no per-capacity ``would_oom`` sweep.
-    Every probe re-traces only what changed: phase traces are cached per
-    (fn, avals) so the optimizer phases (batch-independent) stay warm
-    across probes.
     """
     from ..configs import get_config, get_smoke
     from ..configs.base import smoke_shape
     from ..configs.registry import input_specs
     from ..core.estimator import XMemEstimator
+    from ..core.sweep import SweepPoint, SweepService
     from ..models import model as M
     from ..train import TrainPolicy, make_estimator_hooks
 
@@ -197,36 +199,47 @@ def xmem_batch_hillclimb(arch: str, hbm_bytes: int, seq: int = 64,
     fwd_bwd, update, opt_init = make_estimator_hooks(cfg, policy)
     params = M.abstract_params(cfg)
     est = XMemEstimator.for_tpu()
-    probes = []
-    best = None
+    svc = SweepService(est)            # hooks are closures: inline service
+    grid = []
     b = 1
     while b <= max_batch:
-        batch = input_specs(cfg, smoke_shape(seq_len=seq, global_batch=b))
-        rep = est.estimate_training(fwd_bwd, params, batch,
-                                    update_fn=update, opt_init_fn=opt_init)
+        grid.append(b)
+        b *= 2
+    points = [SweepPoint(
+        fwd_bwd, params,
+        input_specs(cfg, smoke_shape(seq_len=seq, global_batch=gb)),
+        update_fn=update, opt_init_fn=opt_init) for gb in grid]
+    result = svc.estimate_many(points)
+    probes = []
+    best = None
+    for gb, rep in zip(grid, result.reports):
         fits = rep.fits(hbm_bytes)
-        probes.append({"batch": b, "peak_bytes": rep.peak_bytes,
+        probes.append({"batch": gb, "peak_bytes": rep.peak_bytes,
                        "fits": fits, "wall_s": rep.wall_time_s,
                        "cache_hits": rep.cache_stats.get("hits", 0)})
         if verbose:
-            print(f"[xmem-hillclimb] batch={b:4d} "
+            print(f"[xmem-hillclimb] batch={gb:4d} "
                   f"peak={rep.peak_bytes/2**30:6.3f} GiB "
-                  f"{'fits' if fits else 'OOM '} "
-                  f"({rep.wall_time_s*1e3:.0f} ms, "
-                  f"cache {rep.cache_stats.get('hits', 0)}h)", flush=True)
-        if not fits:
-            break
-        best = (b, rep)
-        b *= 2
-    out = {"arch": cfg.name, "hbm_bytes": hbm_bytes, "probes": probes}
+                  f"{'fits' if fits else 'OOM '}", flush=True)
+        if fits and (best is None or gb > best[0]):
+            best = (gb, rep)
+    out = {"arch": cfg.name, "hbm_bytes": hbm_bytes, "probes": probes,
+           "sweep": {k: result.stats[k] for k in
+                     ("points", "traced", "interpolated", "fallback",
+                      "wall_s")}}
+    if verbose:
+        s = out["sweep"]
+        print(f"[xmem-hillclimb] sweep: {s['points']} points, "
+              f"{s['traced']} traced, {s['interpolated']} interpolated "
+              f"({s['wall_s']*1e3:.0f} ms total)", flush=True)
     if best is not None:
-        b, rep = best
+        gb, rep = best
         min_cap = est.min_feasible_capacity(fwd_bwd, params, None,
                                             report=rep)
-        out.update(best_batch=b, best_peak_bytes=rep.peak_bytes,
+        out.update(best_batch=gb, best_peak_bytes=rep.peak_bytes,
                    min_feasible_capacity=min_cap)
         if verbose:
-            print(f"[xmem-hillclimb] best batch={b} "
+            print(f"[xmem-hillclimb] best batch={gb} "
                   f"min feasible capacity "
                   f"{min_cap/2**30:.3f} GiB", flush=True)
     return out

@@ -179,18 +179,26 @@ class TestSteadyStateEquivalence:
                               _estimate(slow, shapes))
 
     def test_steady_state_actually_skips(self, shapes):
+        # steady-state extrapolation is an object-engine feature; the
+        # columnar engine replays the tiled expansion instead (and must
+        # agree — asserted below and in tests/test_columnar.py)
         est = XMemEstimator.for_tpu(iterations=32,
-                                    trace_cache=TraceCache())
+                                    trace_cache=TraceCache(),
+                                    engine="object")
         rep = _estimate(est, shapes)
         ss = rep.sim.stats["steady_state"]
         assert ss["cycles_total"] == 30
         assert ss["cycles_skipped"] >= 25      # paper §3.1: stabilizes fast
         # replay cost independent of N: compare against N=8
         rep8 = _estimate(XMemEstimator.for_tpu(
-            iterations=8, trace_cache=TraceCache()), shapes)
+            iterations=8, trace_cache=TraceCache(), engine="object"), shapes)
         extra = (rep.sim.stats["events_replayed"]
                  - rep8.sim.stats["events_replayed"])
         assert extra == 0
+        rep_col = _estimate(XMemEstimator.for_tpu(
+            iterations=32, trace_cache=TraceCache()), shapes)
+        assert rep_col.sim.stats["engine"] == "columnar"
+        assert rep_col.peak_bytes == rep.peak_bytes
 
     def test_oom_verdict_matches(self, shapes):
         for fastpath in (True, False):
