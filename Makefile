@@ -1,10 +1,13 @@
 PYTHONPATH := src
 export PYTHONPATH
 
-.PHONY: test bench bench-check report
+.PHONY: test test-fast bench bench-check report
 
 test:            ## tier-1 test suite
 	python -m pytest -x -q
+
+test-fast:       ## tier-1 subset (<60 s): skips the slow smoke-arch suite
+	python -m pytest -x -q -m "not slow"
 
 bench:           ## full estimator benchmark; refreshes BENCH_estimator.json
 	python -m benchmarks.perf_estimator

@@ -123,9 +123,10 @@ def hillclimb_table():
 def perf_check(baseline_path: str = "BENCH_estimator.json",
                max_regression: float = 0.30) -> int:
     """Lightweight perf gate: re-measure columnar replay throughput and
-    fail (exit 1) if it regressed more than ``max_regression`` against
-    the checked-in record. A fresh record that is *faster* passes and
-    prints a hint to refresh the baseline."""
+    mesh-sweep throughput, and fail (exit 1) if either regressed more
+    than ``max_regression`` against the checked-in record. A fresh
+    record that is *faster* passes and prints a hint to refresh the
+    baseline. Records that predate the mesh sweep skip that check."""
     if not os.path.exists(baseline_path):
         print(f"[bench-check] no baseline at {baseline_path}; "
               f"run `python -m benchmarks.perf_estimator` first")
@@ -136,17 +137,35 @@ def perf_check(baseline_path: str = "BENCH_estimator.json",
     if not recorded:
         print(f"[bench-check] {baseline_path} lacks replay_events_per_s")
         return 1
-    from benchmarks.perf_estimator import quick_replay_snapshot
+    from benchmarks.perf_estimator import (quick_mesh_sweep_snapshot,
+                                           quick_replay_snapshot)
     snap = quick_replay_snapshot()
     fresh = snap["replay_events_per_s"]
     floor = recorded * (1.0 - max_regression)
-    status = "OK" if fresh >= floor else "REGRESSION"
+    ok = fresh >= floor
+    status = "OK" if ok else "REGRESSION"
     print(f"[bench-check] replay_events_per_s: fresh={fresh:,} "
           f"recorded={recorded:,} floor={int(floor):,} -> {status}")
     if fresh >= recorded * 1.3:
         print("[bench-check] fresh run is >=1.3x the record — consider "
               "refreshing BENCH_estimator.json")
-    return 0 if fresh >= floor else 1
+    rec_mesh_s = baseline.get("mesh_sweep_s")
+    rec_topos = baseline.get("mesh_sweep_topologies")
+    if rec_mesh_s and rec_topos:
+        mesh = quick_mesh_sweep_snapshot()
+        rec_rate = rec_topos / rec_mesh_s
+        fresh_rate = mesh["mesh_sweep_topologies_per_s"]
+        mfloor = rec_rate * (1.0 - max_regression)
+        mok = fresh_rate >= mfloor
+        print(f"[bench-check] mesh_sweep topologies/s: "
+              f"fresh={fresh_rate:,} recorded={rec_rate:,.0f} "
+              f"floor={int(mfloor):,} -> "
+              f"{'OK' if mok else 'REGRESSION'}")
+        ok = ok and mok
+    else:
+        print("[bench-check] baseline predates mesh sweep; skipping "
+              "that check (refresh BENCH_estimator.json)")
+    return 0 if ok else 1
 
 
 if __name__ == "__main__":

@@ -165,7 +165,8 @@ def bench_rq5_scale():
             rep = svc.estimate_many([SweepPoint(
                 fwd_bwd, params, mb, update_fn=update,
                 opt_init_fn=opt_init,
-                shard_factor_fn=shard_factor_fn(cfg, axis_sizes, pol),
+                shard_factor_fn=shard_factor_fn(
+                    cfg, axis_sizes, pol, params=params, batch=mb),
             )]).reports[0]
             err = abs(rep.peak_bytes - truth) / truth
             results[arch] = {"truth_gib": truth / 2**30,
@@ -418,6 +419,28 @@ def bench_roofline():
     return rows
 
 
+def bench_mesh_sweep():
+    """ISSUE 3: topology grid from one cached trace vs one-at-a-time
+    per-topology estimates (spec-driven factors + per-axis collectives
+    in both arms) — the topology-search workload joining the perf
+    trajectory in BENCH_estimator.json."""
+    from benchmarks.perf_estimator import measure_mesh_sweep
+
+    t0 = time.perf_counter()
+    seq_s, many_s, stats, identical = measure_mesh_sweep(reps=1)
+    t = (time.perf_counter() - t0) * 1e6 / max(stats["topologies"], 1)
+    _csv("mesh_sweep", t,
+         f"topologies={stats['topologies']};"
+         f"speedup={seq_s / many_s:.2f};identical={identical}")
+    print("\n== mesh-topology sweep: one cached trace vs per-topology ==")
+    print(f"{stats['topologies']} topologies  "
+          f"traces={stats['trace_cache']['misses']}  "
+          f"sweep={many_s*1e3:.0f}ms  sequential={seq_s*1e3:.0f}ms  "
+          f"speedup={seq_s/many_s:.2f}x  identical={identical}")
+    return {"topologies": stats["topologies"], "sweep_s": many_s,
+            "sequential_s": seq_s, "identical": identical}
+
+
 # ---------------------------------------------------------------------------
 def main() -> None:
     ap = argparse.ArgumentParser()
@@ -442,6 +465,7 @@ def main() -> None:
     bench_fig6_fidelity()
     bench_ablation(rows)
     bench_capacity_probe()
+    bench_mesh_sweep()
     bench_rq5_scale()
     bench_roofline()
 

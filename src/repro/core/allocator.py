@@ -256,7 +256,18 @@ class CachingAllocatorSim:
         self.reserved += seg_size
         self.peak_reserved = max(self.peak_reserved, self.reserved)
         if self.policy.growth_doubling:
-            self._grow_next = min(self._grow_next * 2, 1 << 36)
+            # TF BFC (BFCAllocator::Extend): a request larger than the
+            # growth cursor doubles the cursor until it covers the
+            # request and allocates WITHOUT the post-allocation double
+            # (increased_allocation short-circuit); only pool-growth
+            # regions served at the cursor size double it for next time.
+            if seg_size > self._grow_next:
+                g = self._grow_next
+                while g < seg_size:
+                    g *= 2
+                self._grow_next = min(g, 1 << 36)
+            else:
+                self._grow_next = min(self._grow_next * 2, 1 << 36)
         return blk
 
     def _release_segment(self, seg: _Segment) -> None:
@@ -267,15 +278,27 @@ class CachingAllocatorSim:
         del self._segments[seg.sid]
 
     def _release_cached(self, pool: Optional[str], need: int) -> int:
-        """Free fully-cached segments (largest first); returns bytes freed."""
+        """Free fully-cached segments (largest first); returns bytes freed.
+
+        The reclaim target is compared in *device pages*: the retry grant
+        needs ``round_up(need, device_page)`` bytes of device headroom,
+        and each released segment returns ``round_up(seg, device_page)``
+        — comparing raw segment bytes against raw ``need`` can stop the
+        ladder one segment short of what the page-rounded grant actually
+        requires, leaving the retry to fail (and the second rung to dump
+        every cached segment) near capacity."""
+        page = self.policy.device_page
         cands = [s for s in self._segments.values()
                  if s.fully_free() and (pool is None or s.pool == pool)]
         cands.sort(key=lambda s: -s.size)
+        need_pages = round_up(need, page) if need else 0
         freed = 0
+        freed_pages = 0
         for s in cands:
             self._release_segment(s)
             freed += s.size
-            if need and freed >= need:
+            freed_pages += round_up(s.size, page)
+            if need_pages and freed_pages >= need_pages:
                 break
         return freed
 

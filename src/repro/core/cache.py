@@ -37,11 +37,13 @@ from .events import BlockKind, BlockLifecycle, Trace
 
 @dataclasses.dataclass(frozen=True)
 class BlockInfo:
-    """Lightweight summary of a tracer input/output block."""
+    """Lightweight summary of a tracer input/output block. ``shape``
+    feeds the spec-driven sharding engine (None = unknown)."""
 
     bid: int
     size: int
     kind: BlockKind
+    shape: tuple | None = None
 
 
 @dataclasses.dataclass

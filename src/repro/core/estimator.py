@@ -55,36 +55,142 @@ from .simulator import MemorySimulator, SimResult
 from .tracer import trace_fn_with_shape
 
 
-def _coupling_from_jaxpr(jaxpr, n_params: int, n_grads: int) -> dict:
-    """Taint analysis over a (flat) update jaxpr — see
-    ``update_grad_coupling`` for semantics."""
+_EMPTY_TAINT: frozenset = frozenset()
+
+
+def _taint_region(jaxpr, in_taints, state: dict,
+                  const_taints=None) -> list:
+    """Propagate per-gradient taint sets through one jaxpr region,
+    recursing into call primitives (pjit / remat / custom_* / scan /
+    while / cond). A union of more than one gradient index at a *plain*
+    primitive marks the update as coupled; unioning at a call-primitive
+    boundary does NOT — a ``pjit``-wrapped per-leaf update keeps its
+    leaves separate inside the sub-jaxpr, which is where the verdict is
+    decided (mis-reporting it as coupled forces all-grads-coexist and
+    inflates the estimate). Returns the outvar taints."""
     from jax.extend import core as jcore
     taint: dict = {}
-    for i, v in enumerate(jaxpr.invars):
-        if n_params <= i < n_params + n_grads:
-            taint[v] = frozenset({i - n_params})
-    coupling = "per_leaf"
-    upcasts = False
+    for v, tt in zip(jaxpr.constvars, const_taints or ()):
+        if tt:
+            taint[v] = tt
+    for v, tt in zip(jaxpr.invars, in_taints):
+        if tt:
+            taint[v] = tt
+
+    def read(v):
+        if isinstance(v, jcore.Literal):
+            return _EMPTY_TAINT
+        return taint.get(v, _EMPTY_TAINT)
+
+    def closed_parts(j):
+        if isinstance(j, jcore.ClosedJaxpr):
+            return j.jaxpr, len(j.consts)
+        return j, 0
+
+    def run_fixpoint(body, consts_t, carry_t, xs_t, n_carry):
+        """Scan/while bodies feed carry outputs back into carry inputs;
+        iterate until the carry taints stop growing. Taint sets only
+        grow and each pass moves taint at least one carry slot further,
+        so the fixpoint arrives within n_carry+1 passes (a chain rotated
+        through k carries needs k passes — two would miss couplings
+        behind longer chains and underestimate)."""
+        inner, n_inner_consts = closed_parts(body)
+        carry_t = list(carry_t)
+        outs = None
+        for _ in range(n_carry + 1):
+            outs = _taint_region(
+                inner, list(consts_t) + carry_t + list(xs_t), state,
+                const_taints=[_EMPTY_TAINT] * n_inner_consts)
+            new_carry = [a | b for a, b in zip(carry_t, outs[:n_carry])]
+            if new_carry == carry_t:
+                break
+            carry_t = new_carry
+        return carry_t, outs[n_carry:] if outs else []
+
     for eqn in jaxpr.eqns:
-        union: frozenset = frozenset()
-        for v in eqn.invars:
-            if isinstance(v, jcore.Literal):
-                continue
-            union = union | taint.get(v, frozenset())
-        if len(union) > 1:
-            coupling = "coupled"
-        if union:
-            if eqn.primitive.name == "convert_element_type":
-                iv = eqn.invars[0]
-                ov = eqn.outvars[0]
-                try:
-                    if ov.aval.dtype.itemsize > iv.aval.dtype.itemsize:
-                        upcasts = True  # f32 working copies of grads
-                except AttributeError:
-                    pass
-            for ov in eqn.outvars:
-                taint[ov] = union
-    return {"coupling": coupling, "upcasts": upcasts}
+        name = eqn.primitive.name
+        ins = [read(v) for v in eqn.invars]
+        if name == "scan":
+            p = eqn.params
+            nc, ncar = p["num_consts"], p["num_carry"]
+            carry_t, ys_t = run_fixpoint(
+                p["jaxpr"], ins[:nc], ins[nc:nc + ncar],
+                ins[nc + ncar:], ncar)
+            out_taints = list(carry_t) + list(ys_t)
+        elif name == "while":
+            p = eqn.params
+            cn, bn = p["cond_nconsts"], p["body_nconsts"]
+            carry_t, _ = run_fixpoint(
+                p["body_jaxpr"], ins[cn:cn + bn], ins[cn + bn:], (),
+                len(ins) - cn - bn)
+            # the loop condition runs too: a grad-norm convergence test
+            # (`while norm(g) > eps`) unions gradients inside cond_jaxpr
+            # — one pass over the converged carry taints catches it
+            # (state flags only grow, cond feeds nothing back)
+            cond_inner, cond_nc = closed_parts(p["cond_jaxpr"])
+            _taint_region(cond_inner, list(ins[:cn]) + list(carry_t),
+                          state, const_taints=[_EMPTY_TAINT] * cond_nc)
+            out_taints = list(carry_t)
+        elif name == "cond":
+            branch_ins = ins[1:]
+            out_taints = None
+            for br in eqn.params["branches"]:
+                inner, n_inner_consts = closed_parts(br)
+                outs = _taint_region(
+                    inner, branch_ins, state,
+                    const_taints=[_EMPTY_TAINT] * n_inner_consts)
+                out_taints = outs if out_taints is None else [
+                    a | b for a, b in zip(out_taints, outs)]
+            out_taints = out_taints or []
+        else:
+            sub = None
+            for key in ("jaxpr", "call_jaxpr", "fun_jaxpr"):
+                j = eqn.params.get(key)
+                if isinstance(j, (jcore.Jaxpr, jcore.ClosedJaxpr)):
+                    sub = j
+                    break
+            if sub is not None:
+                inner, n_inner_consts = closed_parts(sub)
+                out_taints = _taint_region(
+                    inner, ins, state,
+                    const_taints=[_EMPTY_TAINT] * n_inner_consts)
+            else:
+                union: frozenset = _EMPTY_TAINT
+                for tt in ins:
+                    if tt:
+                        union = union | tt
+                if len(union) > 1:
+                    state["coupling"] = "coupled"
+                if union and name == "convert_element_type":
+                    iv = eqn.invars[0]
+                    ov = eqn.outvars[0]
+                    try:
+                        if ov.aval.dtype.itemsize > iv.aval.dtype.itemsize:
+                            state["upcasts"] = True  # f32 grad copies
+                    except AttributeError:
+                        pass
+                out_taints = [union] * len(eqn.outvars)
+        for ov, tt in zip(eqn.outvars, out_taints):
+            if tt:
+                taint[ov] = tt
+    return [read(v) for v in jaxpr.outvars]
+
+
+def _coupling_from_jaxpr(jaxpr, n_params: int, n_grads: int) -> dict:
+    """Taint analysis over a (flat) update jaxpr — see
+    ``update_grad_coupling`` for semantics. Recurses into nested call
+    primitives: a jitted (pjit-wrapped) tree-mapped per-leaf optimizer
+    stays "per_leaf" instead of being mis-unioned at the call boundary.
+    """
+    in_taints = []
+    for i, _v in enumerate(jaxpr.invars):
+        if n_params <= i < n_params + n_grads:
+            in_taints.append(frozenset({i - n_params}))
+        else:
+            in_taints.append(_EMPTY_TAINT)
+    state = {"coupling": "per_leaf", "upcasts": False}
+    _taint_region(jaxpr, in_taints, state)
+    return state
 
 
 def update_grad_coupling(update_fn: Callable, params, grads,
@@ -297,9 +403,9 @@ class XMemEstimator:
         entry = TracedPhase(
             trace=trace,
             lifecycles=tuple(tr.lifecycles()),
-            input_blocks=tuple(BlockInfo(b.bid, b.size, b.kind)
+            input_blocks=tuple(BlockInfo(b.bid, b.size, b.kind, b.shape)
                                for b in tr.input_blocks),
-            output_blocks=tuple(BlockInfo(b.bid, b.size, b.kind)
+            output_blocks=tuple(BlockInfo(b.bid, b.size, b.kind, b.shape)
                                 for b in tr.output_blocks),
             out_shape=out_shape,
             closed_jaxpr=closed,
@@ -358,7 +464,7 @@ class XMemEstimator:
                     None if ft is None else ft + cur, it, phase, lc.op,
                     lc.scope,
                     output_kind if lcb in output_bids else lc.block_kind,
-                    lc.shard_factor))
+                    lc.shard_factor, lc.shape))
             next_bid[0] = bid
             cursor = cur + len(entry.trace.events) + 1
 
@@ -368,7 +474,8 @@ class XMemEstimator:
                 if b.kind is BlockKind.INPUT and b.size > 0:
                     target.append(BlockLifecycle(
                         fresh_bid(), b.size, cursor, None, it, Phase.DATA,
-                        "host_to_device", "batch", BlockKind.INPUT))
+                        "host_to_device", "batch", BlockKind.INPUT,
+                        1.0, b.shape))
             cursor += 1
             bwd_start[it] = cursor
             place(fwd, it, Phase.FORWARD_BACKWARD, target)
@@ -390,7 +497,7 @@ class XMemEstimator:
             if b.kind is BlockKind.PARAM and b.size > 0:
                 prefix.append(BlockLifecycle(
                     fresh_bid(), b.size, 0, None, 0, Phase.INIT,
-                    "init", "params", BlockKind.PARAM))
+                    "init", "params", BlockKind.PARAM, 1.0, b.shape))
         cursor += 1
 
         one_iteration(0, prefix, with_init=True)
@@ -464,7 +571,7 @@ class XMemEstimator:
             if b.kind is BlockKind.PARAM and b.size > 0:
                 blocks.append(BlockLifecycle(
                     fresh_bid(), b.size, 0, None, 0, Phase.INIT,
-                    "init", "params", BlockKind.PARAM))
+                    "init", "params", BlockKind.PARAM, 1.0, b.shape))
         cursor += 1
 
         for it in range(self.iterations):
@@ -473,7 +580,8 @@ class XMemEstimator:
                 if b.kind is BlockKind.INPUT and b.size > 0:
                     blocks.append(BlockLifecycle(
                         fresh_bid(), b.size, cursor, None, it, Phase.DATA,
-                        "host_to_device", "batch", BlockKind.INPUT))
+                        "host_to_device", "batch", BlockKind.INPUT,
+                        1.0, b.shape))
             cursor += 1
             bwd_start[it] = cursor
             blocks.extend(place(fwd, it, Phase.FORWARD_BACKWARD))
@@ -807,7 +915,8 @@ class XMemEstimator:
         blocks = o.apply_transient_scale(blocks)
         if collective_specs and phase_bounds:
             blocks = o.inject_collectives(blocks, collective_specs,
-                                          phase_bounds, self.iterations)
+                                          phase_bounds, self.iterations,
+                                          shard_factor_fn)
         if shard_factor_fn is not None:
             blocks = o.apply_sharding(blocks, shard_factor_fn)
 

@@ -24,8 +24,10 @@ import numpy as np
 
 #: On-disk trace schema. v1 = seed format (no version field, object event
 #: list). v2 adds the version field, columnar payloads and phase/iteration
-#: metadata for columnar traces. Loaders accept <= current, reject newer.
-TRACE_SCHEMA_VERSION = 2
+#: metadata for columnar traces. v3 adds per-block shape metadata (the
+#: spec-driven per-device estimation input); v2 dumps load with shapes
+#: unknown. Loaders accept <= current, reject newer.
+TRACE_SCHEMA_VERSION = 3
 
 
 class BlockKind(enum.Enum):
@@ -62,20 +64,33 @@ KIND_CODE: dict[BlockKind, int] = {k: i for i, k in enumerate(KIND_TABLE)}
 
 
 class StringInterner:
-    """Append-only string table: intern() -> small int, table[i] -> str."""
+    """Append-only value table: intern() -> small int, table[i] -> value.
+
+    Works for any hashable value — strings (op/scope tables) and shape
+    tuples / ``None`` (shape tables) share the implementation."""
 
     __slots__ = ("table", "_index")
 
-    def __init__(self, table: Sequence[str] = ()):
-        self.table: list[str] = list(table)
-        self._index: dict[str, int] = {s: i for i, s in enumerate(self.table)}
+    def __init__(self, table: Sequence = ()):
+        self.table: list = list(table)
+        self._index: dict = {s: i for i, s in enumerate(self.table)}
 
-    def intern(self, s: str) -> int:
+    def intern(self, s) -> int:
         i = self._index.get(s)
         if i is None:
             i = self._index[s] = len(self.table)
             self.table.append(s)
         return i
+
+
+def _shape_table_to_json(table: Sequence) -> list:
+    return [None if s is None else list(s) for s in table]
+
+
+def _shape_table_from_json(table: Sequence | None) -> list:
+    if table is None:          # v2 dump: shapes unknown
+        return [None]
+    return [None if s is None else tuple(int(d) for d in s) for s in table]
 
 
 @dataclasses.dataclass(slots=True)
@@ -96,11 +111,13 @@ class MemoryEvent:
     op: str = ""           # primitive name, e.g. "dot_general"
     scope: str = ""        # layer scope, e.g. "decoder/layers/attn/q_proj"
     block_kind: BlockKind = BlockKind.TEMP
+    shape: tuple | None = None   # aval dims (spec-driven sharding input)
 
     def to_json(self) -> dict:
         d = dataclasses.asdict(self)
         d["phase"] = self.phase.value
         d["block_kind"] = self.block_kind.value
+        d["shape"] = None if self.shape is None else list(self.shape)
         return d
 
     @staticmethod
@@ -108,6 +125,8 @@ class MemoryEvent:
         d = dict(d)
         d["phase"] = Phase(d["phase"])
         d["block_kind"] = BlockKind(d["block_kind"])
+        shape = d.get("shape")   # absent in v1/v2 dumps
+        d["shape"] = None if shape is None else tuple(shape)
         return MemoryEvent(**d)
 
 
@@ -118,7 +137,10 @@ class BlockLifecycle:
     ``free_t is None`` → persistent for the rest of the trace (paper:
     "blocks lacking a deallocation event are considered persistent").
     ``shard_factor`` divides the size for per-device estimation in the
-    distributed extension (paper §6.2); 1 on a single device.
+    distributed extension (paper §6.2); 1 on a single device. ``shape``
+    carries the producing aval's dims so the spec-driven sharding engine
+    can resolve a true PartitionSpec factor; ``None`` = unknown (external
+    traces, synthetic blocks) and resolves to replicated.
     """
 
     block_id: int
@@ -131,6 +153,7 @@ class BlockLifecycle:
     scope: str = ""
     block_kind: BlockKind = BlockKind.TEMP
     shard_factor: float = 1.0
+    shape: tuple | None = None
 
     @property
     def persistent(self) -> bool:
@@ -152,8 +175,9 @@ class ColumnarTrace:
 
     One row per event; ``kind`` is 1 for alloc / 0 for free, ``phase`` and
     ``block_kind`` are codes into :data:`PHASE_TABLE` / :data:`KIND_TABLE`,
-    ``op``/``scope`` index the interned string tables. Conversion to and
-    from ``MemoryEvent`` lists is lossless (``test_columnar.py``).
+    ``op``/``scope`` index the interned string tables and ``shape`` the
+    interned shape-tuple table (entry ``None`` = unknown). Conversion to
+    and from ``MemoryEvent`` lists is lossless (``test_columnar.py``).
     """
 
     kind: np.ndarray          # uint8: 1 = alloc, 0 = free
@@ -167,6 +191,12 @@ class ColumnarTrace:
     block_kind: np.ndarray    # uint8 codes -> KIND_TABLE
     op_table: list[str]
     scope_table: list[str]
+    shape: np.ndarray | None = None     # int32 -> shape_table
+    shape_table: list = dataclasses.field(default_factory=lambda: [None])
+
+    def __post_init__(self):
+        if self.shape is None:
+            self.shape = np.zeros(len(self.kind), dtype=np.int32)
 
     def __len__(self) -> int:
         return int(self.kind.shape[0])
@@ -183,8 +213,10 @@ class ColumnarTrace:
         op = np.empty(n, dtype=np.int32)
         scope = np.empty(n, dtype=np.int32)
         bkind = np.empty(n, dtype=np.uint8)
+        shp = np.empty(n, dtype=np.int32)
         ops = StringInterner()
         scopes = StringInterner()
+        shapes = StringInterner([None])
         for i, e in enumerate(events):
             kind[i] = 1 if e.kind == "alloc" else 0
             bid[i] = e.block_id
@@ -195,12 +227,15 @@ class ColumnarTrace:
             op[i] = ops.intern(e.op)
             scope[i] = scopes.intern(e.scope)
             bkind[i] = KIND_CODE[e.block_kind]
+            shp[i] = shapes.intern(e.shape)
         return ColumnarTrace(kind, bid, size, t, it, phase, op, scope,
-                             bkind, ops.table, scopes.table)
+                             bkind, ops.table, scopes.table,
+                             shp, shapes.table)
 
     @staticmethod
     def from_columns(kind, bid, size, t, iteration, phase, op, scope,
-                     bkind, op_table, scope_table) -> "ColumnarTrace":
+                     bkind, op_table, scope_table,
+                     shape=None, shape_table=None) -> "ColumnarTrace":
         """Build from raw python lists (the tracer's direct-emission path:
         no ``MemoryEvent`` objects are ever constructed)."""
         return ColumnarTrace(
@@ -213,14 +248,17 @@ class ColumnarTrace:
             np.asarray(op, dtype=np.int32),
             np.asarray(scope, dtype=np.int32),
             np.asarray(bkind, dtype=np.uint8),
-            list(op_table), list(scope_table))
+            list(op_table), list(scope_table),
+            None if shape is None else np.asarray(shape, dtype=np.int32),
+            [None] if shape_table is None else list(shape_table))
 
     def event_at(self, i: int) -> MemoryEvent:
         return MemoryEvent(
             "alloc" if self.kind[i] else "free", int(self.block_id[i]),
             int(self.size[i]), int(self.t[i]), int(self.iteration[i]),
             PHASE_TABLE[self.phase[i]], self.op_table[self.op[i]],
-            self.scope_table[self.scope[i]], KIND_TABLE[self.block_kind[i]])
+            self.scope_table[self.scope[i]], KIND_TABLE[self.block_kind[i]],
+            self.shape_table[self.shape[i]])
 
     def to_events(self) -> list[MemoryEvent]:
         return [self.event_at(i) for i in range(len(self))]
@@ -243,6 +281,8 @@ class ColumnarTrace:
             "block_kind": self.block_kind.tolist(),
             "op_table": self.op_table,
             "scope_table": self.scope_table,
+            "shape": self.shape.tolist(),
+            "shape_table": _shape_table_to_json(self.shape_table),
         }
 
     @staticmethod
@@ -250,7 +290,9 @@ class ColumnarTrace:
         return ColumnarTrace.from_columns(
             d["kind"], d["block_id"], d["size"], d["t"], d["iteration"],
             d["phase"], d["op"], d["scope"], d["block_kind"],
-            d["op_table"], d["scope_table"])
+            d["op_table"], d["scope_table"],
+            d.get("shape"),                    # absent in v2 dumps
+            _shape_table_from_json(d.get("shape_table")))
 
 
 class LazyEvents(Sequence):
@@ -299,6 +341,12 @@ class ColumnarBlocks:
     shard_factor: np.ndarray  # float64
     op_table: list[str]
     scope_table: list[str]
+    shape: np.ndarray | None = None     # int32 -> shape_table
+    shape_table: list = dataclasses.field(default_factory=lambda: [None])
+
+    def __post_init__(self):
+        if self.shape is None:
+            self.shape = np.zeros(len(self.block_id), dtype=np.int32)
 
     def __len__(self) -> int:
         return int(self.block_id.shape[0])
@@ -316,8 +364,10 @@ class ColumnarBlocks:
         scope = np.empty(n, dtype=np.int32)
         bkind = np.empty(n, dtype=np.uint8)
         shard = np.empty(n, dtype=np.float64)
+        shp = np.empty(n, dtype=np.int32)
         ops = StringInterner()
         scopes = StringInterner()
+        shapes = StringInterner([None])
         for i, b in enumerate(blocks):
             bid[i] = b.block_id
             size[i] = b.size
@@ -329,8 +379,10 @@ class ColumnarBlocks:
             scope[i] = scopes.intern(b.scope)
             bkind[i] = KIND_CODE[b.block_kind]
             shard[i] = b.shard_factor
+            shp[i] = shapes.intern(b.shape)
         return ColumnarBlocks(bid, size, at, ft, it, phase, op, scope,
-                              bkind, shard, ops.table, scopes.table)
+                              bkind, shard, ops.table, scopes.table,
+                              shp, shapes.table)
 
     def to_lifecycles(self) -> list[BlockLifecycle]:
         ft = self.free_t
@@ -339,7 +391,8 @@ class ColumnarBlocks:
             None if ft[i] < 0 else int(ft[i]), int(self.iteration[i]),
             PHASE_TABLE[self.phase[i]], self.op_table[self.op[i]],
             self.scope_table[self.scope[i]], KIND_TABLE[self.block_kind[i]],
-            float(self.shard_factor[i])) for i in range(len(self))]
+            float(self.shard_factor[i]),
+            self.shape_table[self.shape[i]]) for i in range(len(self))]
 
     def sharded_sizes(self) -> np.ndarray:
         return sharded_sizes_array(self.size, self.shard_factor)
@@ -461,13 +514,13 @@ def lifecycles_to_events(blocks: Sequence[BlockLifecycle]) -> list[MemoryEvent]:
         evs.append(
             (b.alloc_t, 1, MemoryEvent(
                 "alloc", b.block_id, b.sharded_size, b.alloc_t, b.iteration,
-                b.phase, b.op, b.scope, b.block_kind))
+                b.phase, b.op, b.scope, b.block_kind, b.shape))
         )
         if b.free_t is not None:
             evs.append(
                 (b.free_t, 0, MemoryEvent(
                     "free", b.block_id, b.sharded_size, b.free_t, b.iteration,
-                    b.phase, b.op, b.scope, b.block_kind))
+                    b.phase, b.op, b.scope, b.block_kind, b.shape))
             )
     evs.sort(key=lambda x: (x[0], x[1]))
     return [e for _, _, e in evs]
@@ -530,7 +583,7 @@ class PeriodicBlocks:
                     shift_cycle_bid(b.block_id, k), b.size, b.alloc_t + dt,
                     None if b.free_t is None else b.free_t + dt,
                     b.iteration + k, b.phase, b.op, b.scope, b.block_kind,
-                    b.shard_factor))
+                    b.shard_factor, b.shape))
         out.extend(self.suffix)
         return out
 

@@ -102,13 +102,26 @@ class OrchestratorPolicy:
 
 @dataclasses.dataclass
 class CollectiveSpec:
-    """One injected communication buffer (distributed estimation)."""
+    """One injected communication buffer (distributed estimation).
+
+    ``size`` is a fixed per-device byte count when ``source`` is empty.
+    With ``source`` set, the buffer is sized at injection time from the
+    composition's *actual sharded tensors* (per mesh axis, not a fixed
+    factor): the largest per-device block of the named kind in the
+    iteration, times ``scale`` (e.g. the axis size for an all-gather
+    that materializes the unsharded tensor). ``axis``/``collective`` are
+    attribution metadata (which mesh axis and primitive the buffer
+    models)."""
 
     name: str
-    size: int              # bytes per device
+    size: int              # bytes per device (fixed-size specs)
     phase: Phase
     at: str = "phase_start"  # or "phase_end"
     persistent: bool = False
+    axis: str = ""           # mesh axis the collective runs over
+    collective: str = ""     # all_reduce | all_gather | reduce_scatter
+    source: str = ""         # "" fixed | "grads" | "params" | "activations"
+    scale: float = 1.0       # multiplier on the derived per-device size
 
 
 class MemoryOrchestrator:
@@ -256,17 +269,57 @@ class MemoryOrchestrator:
             out.append(BlockLifecycle(
                 bid, int(b.size * self.policy.upcast_factor), us, end,
                 b.iteration, Phase.OPTIMIZER, "grad_upcast", b.scope,
-                BlockKind.TEMP, b.shard_factor))
+                BlockKind.TEMP, b.shard_factor, b.shape))
             bid -= 1
         return out
 
     def inject_collectives(self, blocks: list[BlockLifecycle],
                            specs: Sequence[CollectiveSpec],
                            phase_bounds: dict[tuple[int, str], tuple[int, int]],
-                           num_iterations: int) -> list[BlockLifecycle]:
-        """Add COLLECTIVE buffers at phase starts/ends per iteration."""
+                           num_iterations: int,
+                           shard_factor_fn: Callable | None = None
+                           ) -> list[BlockLifecycle]:
+        """Add COLLECTIVE buffers at phase starts/ends per iteration.
+
+        Dynamic specs (``source`` set) are sized from the composition's
+        actual blocks at their *per-device* size — the sharding pass runs
+        after injection, so the factor function is applied here to the
+        candidate source blocks (collective buffers themselves stay
+        factor-1: they are already per-device quantities)."""
         if not specs:
             return blocks
+        dynamic = [s for s in specs if s.source]
+        src_max: dict[tuple[int, str], int] = {}
+        if dynamic:
+            wanted = {s.source for s in dynamic}
+
+            def per_device(b: BlockLifecycle) -> int:
+                if shard_factor_fn is not None:
+                    f = max(shard_factor_fn(b), 1.0)
+                    if f != 1.0:
+                        return max(int(b.size / f), 1) if b.size else 0
+                return b.sharded_size
+
+            for b in blocks:
+                k = b.block_kind
+                if k is BlockKind.GRAD:
+                    source = "grads"
+                elif k is BlockKind.PARAM:
+                    source = "params"
+                elif k is BlockKind.ACTIVATION:
+                    source = "activations"
+                else:
+                    continue
+                if source not in wanted:
+                    continue
+                # persistent params count for every iteration
+                its = (range(num_iterations) if k is BlockKind.PARAM
+                       and b.free_t is None else (b.iteration,))
+                s = per_device(b)
+                for it in its:
+                    key = (it, source)
+                    if s > src_max.get(key, 0):
+                        src_max[key] = s
         out = list(blocks)
         bid = -1  # negative ids: synthetic blocks
         for it in range(num_iterations):
@@ -274,10 +327,22 @@ class MemoryOrchestrator:
                 key = (it, s.phase.value)
                 if key not in phase_bounds:
                     continue
+                size = s.size
+                if s.source:
+                    size = int(src_max.get((it, s.source), 0) * s.scale)
+                    if size <= 0:
+                        continue
                 start, end = phase_bounds[key]
-                t0 = start if s.at == "phase_start" else end
+                if s.at == "phase_start":
+                    t0, t1 = start, end
+                else:
+                    # end-of-phase staging (gradient all-reduce /
+                    # reduce-scatter): allocated one tick before the
+                    # boundary so it coexists with tensors freed exactly
+                    # at phase end (frees sort before allocs at equal t)
+                    t0, t1 = max(start, end - 1), end
                 out.append(BlockLifecycle(
-                    bid, s.size, t0, None if s.persistent else end,
+                    bid, size, t0, None if s.persistent else t1,
                     it, s.phase, "collective", s.name, BlockKind.COLLECTIVE))
                 bid -= 1
         return out
@@ -334,7 +399,8 @@ class MemoryOrchestrator:
         blocks = self.apply_transient_scale(blocks)
         if collective_specs and phase_bounds:
             blocks = self.inject_collectives(blocks, collective_specs,
-                                             phase_bounds, num_iterations)
+                                             phase_bounds, num_iterations,
+                                             shard_factor_fn)
         if shard_factor_fn is not None:
             blocks = self.apply_sharding(blocks, shard_factor_fn)
         return blocks
@@ -431,7 +497,7 @@ class MemoryOrchestrator:
             append(BlockLifecycle(
                 bid, int(b.size * p.upcast_factor), us, end,
                 b.iteration, Phase.OPTIMIZER, "grad_upcast", b.scope,
-                BlockKind.TEMP, b.shard_factor))
+                BlockKind.TEMP, b.shard_factor, b.shape))
             bid -= 1
         # second traversal: donation, output release, transient scale
         do_donate = p.donate_params or p.donate_opt_state
@@ -461,7 +527,8 @@ class MemoryOrchestrator:
         blocks = blocks2
         if collective_specs and phase_bounds:
             blocks = self.inject_collectives(blocks, collective_specs,
-                                             phase_bounds, num_iterations)
+                                             phase_bounds, num_iterations,
+                                             shard_factor_fn)
         if shard_factor_fn is not None:
             blocks = self.apply_sharding(blocks, shard_factor_fn)
         return blocks

@@ -73,6 +73,92 @@ class SweepResult:
         return len(self.reports)
 
 
+# -- mesh-topology sweep -----------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class MeshTopology:
+    """One (pod, data, model, fsdp) cell of a topology grid."""
+
+    pod: int = 1
+    data: int = 1
+    model: int = 1
+    fsdp: bool = False
+
+    @property
+    def n_devices(self) -> int:
+        return self.pod * self.data * self.model
+
+    @property
+    def axis_sizes(self) -> dict:
+        return {"pod": self.pod, "data": self.data, "model": self.model}
+
+    @property
+    def label(self) -> str:
+        tag = f"{self.pod}x{self.data}x{self.model}"
+        return tag + ("+fsdp" if self.fsdp else "")
+
+    def sharding_policy(self):
+        from ..distributed.sharding import ShardingPolicy
+        fsdp_axes = (("data", "pod") if self.pod > 1 else ("data",))
+        return ShardingPolicy(fsdp=self.fsdp, fsdp_axes=fsdp_axes,
+                              batch_axes=("pod", "data"))
+
+
+def topology_grid(n_devices: int, *, pods: Sequence[int] = (1,),
+                  fsdp: Sequence[bool] = (False, True)
+                  ) -> list[MeshTopology]:
+    """All (pod, data, model, fsdp) cells whose device product equals
+    ``n_devices`` — the default grid ``estimate_mesh_sweep`` callers
+    batch over. fsdp=True cells are skipped when every fsdp axis has
+    size 1 (they would duplicate the fsdp=False estimate bit-for-bit
+    while claiming ZeRO-3 was modeled)."""
+    out = []
+    for pod in pods:
+        if pod <= 0 or n_devices % pod:
+            continue
+        per_pod = n_devices // pod
+        for model in range(1, per_pod + 1):
+            if per_pod % model:
+                continue
+            data = per_pod // model
+            for f in fsdp:
+                if f and data * pod == 1:
+                    continue
+                out.append(MeshTopology(pod=pod, data=data,
+                                        model=model, fsdp=f))
+    return out
+
+
+@dataclasses.dataclass
+class MeshSweepResult:
+    """Per-topology estimates from one cached trace."""
+
+    topologies: list[MeshTopology]
+    reports: list[EstimateReport]
+    stats: dict
+
+    def __iter__(self):
+        return iter(zip(self.topologies, self.reports))
+
+    def __len__(self):
+        return len(self.reports)
+
+    def admitted(self, capacity: int) -> list[MeshTopology]:
+        """Topologies whose per-device estimate fits ``capacity``."""
+        return [t for t, r in zip(self.topologies, self.reports)
+                if r.fits(capacity)]
+
+    def best(self, capacity: int
+             ) -> tuple[MeshTopology, EstimateReport] | None:
+        """Cheapest admitted topology: fewest devices, then lowest
+        per-device peak."""
+        fits = [(t, r) for t, r in zip(self.topologies, self.reports)
+                if r.fits(capacity)]
+        if not fits:
+            return None
+        return min(fits, key=lambda tr: (tr[0].n_devices,
+                                         tr[1].peak_bytes))
+
+
 # -- affine trace model ------------------------------------------------------
 def _fit_affine(y_lo, y_hi, b_lo: int, b_hi: int):
     """Integer affine fit through two probes, or None if non-integral."""
@@ -122,6 +208,7 @@ class _PhaseModel:
                     and np.array_equal(ref.block_kind, c.block_kind)
                     and np.array_equal(ref.op, c.op)
                     and np.array_equal(ref.scope, c.scope)
+                    and np.array_equal(ref.shape, c.shape)
                     and ref.op_table == c.op_table
                     and ref.scope_table == c.scope_table):
                 return
@@ -134,6 +221,7 @@ class _PhaseModel:
                     and np.array_equal(lref.alloc_t, c.alloc_t)
                     and np.array_equal(lref.free_t, c.free_t)
                     and np.array_equal(lref.block_kind, c.block_kind)
+                    and np.array_equal(lref.shape, c.shape)
                     and np.array_equal(lref.shard_factor, c.shard_factor)):
                 return
 
@@ -144,14 +232,49 @@ class _PhaseModel:
                 return None
             return m
 
+        def fit_shape_table(tables):
+            """Affine model per shape-table entry (None entries must be
+            None in every probe; dims fit like sizes)."""
+            lo, mid, hi = tables
+            if not (len(lo) == len(mid) == len(hi)):
+                return None
+            models: list = []
+            for a, bb, c in zip(lo, mid, hi):
+                if a is None or bb is None or c is None:
+                    if not (a is None and bb is None and c is None):
+                        return None
+                    models.append(None)
+                    continue
+                if not (len(a) == len(bb) == len(c)):
+                    return None
+                m = fit3(a, bb, c)
+                if m is None:
+                    return None
+                models.append(m)
+            return models
+
+        def fit_block_shapes(block_lists):
+            """Affine per-block shape model over input/output BlockInfos."""
+            lo, mid, hi = block_lists
+            return fit_shape_table((tuple(b.shape for b in lo),
+                                    tuple(b.shape for b in mid),
+                                    tuple(b.shape for b in hi)))
+
         self.ev_sizes = fit3(cols[0].size, cols[1].size, cols[2].size)
         self.lc_sizes = fit3(lcs[0].size, lcs[1].size, lcs[2].size)
         self.in_sizes = fit3(*[[b.size for b in p.input_blocks]
                                for p in (p_lo, p_mid, p_hi)])
         self.out_sizes = fit3(*[[b.size for b in p.output_blocks]
                                 for p in (p_lo, p_mid, p_hi)])
+        self.ev_shapes = fit_shape_table([c.shape_table for c in cols])
+        self.lc_shapes = fit_shape_table([c.shape_table for c in lcs])
+        self.in_shapes = fit_block_shapes([p.input_blocks
+                                           for p in (p_lo, p_mid, p_hi)])
+        self.out_shapes = fit_block_shapes([p.output_blocks
+                                            for p in (p_lo, p_mid, p_hi)])
         if None in (self.ev_sizes, self.lc_sizes, self.in_sizes,
-                    self.out_sizes):
+                    self.out_sizes, self.ev_shapes, self.lc_shapes,
+                    self.in_shapes, self.out_shapes):
             return
         if len({(b.bid, b.kind) for b in p_lo.input_blocks}
                ^ {(b.bid, b.kind) for b in p_hi.input_blocks}):
@@ -213,6 +336,25 @@ class _PhaseModel:
         if (ev_sizes < 0).any() or (lc_sizes < 0).any() \
                 or (out_sizes < 0).any():
             return None
+
+        def eval_shapes(models):
+            out = []
+            for m in models:
+                if m is None:
+                    out.append(None)
+                    continue
+                shape = tuple(int(d) for d in _eval_affine(m, b))
+                if any(d < 0 for d in shape):
+                    return None
+                out.append(shape)
+            return out
+
+        ev_table = eval_shapes(self.ev_shapes)
+        lc_table = eval_shapes(self.lc_shapes)
+        in_shapes = eval_shapes(self.in_shapes)
+        out_shapes = eval_shapes(self.out_shapes)
+        if None in (ev_table, lc_table, in_shapes, out_shapes):
+            return None
         new_leaves = []
         for leaf, dim_model in zip(
                 jax.tree_util.tree_leaves(tp.out_shape), self.out_dims):
@@ -223,21 +365,25 @@ class _PhaseModel:
         out_shape = jax.tree_util.tree_unflatten(
             jax.tree_util.tree_structure(tp.out_shape), new_leaves)
         trace = Trace.from_columnar(
-            tp.trace.columnar().with_sizes(ev_sizes),
+            dataclasses.replace(tp.trace.columnar().with_sizes(ev_sizes),
+                                shape_table=ev_table),
             num_iterations=tp.trace.num_iterations,
             meta={k: v for k, v in tp.trace.meta.items()
                   if k != "_columns"})
-        lifecycles = tuple(
-            self.lc_template.with_sizes(lc_sizes).to_lifecycles())
+        lifecycles = tuple(dataclasses.replace(
+            self.lc_template.with_sizes(lc_sizes),
+            shape_table=lc_table).to_lifecycles())
         return TracedPhase(
             trace=trace,
             lifecycles=lifecycles,
             input_blocks=tuple(
-                BlockInfo(bi.bid, int(s), bi.kind)
-                for bi, s in zip(tp.input_blocks, in_sizes)),
+                BlockInfo(bi.bid, int(s), bi.kind, shp)
+                for bi, s, shp in zip(tp.input_blocks, in_sizes,
+                                      in_shapes)),
             output_blocks=tuple(
-                BlockInfo(bi.bid, int(s), bi.kind)
-                for bi, s in zip(tp.output_blocks, out_sizes)),
+                BlockInfo(bi.bid, int(s), bi.kind, shp)
+                for bi, s, shp in zip(tp.output_blocks, out_sizes,
+                                      out_shapes)),
             out_shape=out_shape,
             closed_jaxpr=None,          # never shipped / re-analyzed
             arg_leaf_counts=tp.arg_leaf_counts,
@@ -246,12 +392,14 @@ class _PhaseModel:
 
 def _trace_sig(entry: TracedPhase) -> tuple:
     """Structural fingerprint of a phase trace — everything except the
-    size columns. Two traces with equal signatures differ only in sizes,
-    the precondition for the affine model."""
+    size columns and the shape *table* (whose dims vary with the sweep
+    scalar; the interned shape index pattern must still match). Two
+    traces with equal signatures differ only in sizes/shape dims, the
+    precondition for the affine model."""
     c = entry.trace.columnar()
     return (len(c), c.kind.tobytes(), c.block_id.tobytes(), c.t.tobytes(),
             c.op.tobytes(), c.scope.tobytes(), c.phase.tobytes(),
-            c.block_kind.tobytes(), tuple(c.op_table),
+            c.block_kind.tobytes(), c.shape.tobytes(), tuple(c.op_table),
             tuple(c.scope_table))
 
 
@@ -736,6 +884,58 @@ class SweepService:
                 stats["pooled"] += 1
 
     # -- public API ----------------------------------------------------------
+    def estimate_mesh_sweep(self, fwd_bwd_fn, params, batch,
+                            topologies: Sequence[MeshTopology], *,
+                            update_fn=None, opt_init_fn=None, cfg=None,
+                            shard_factors: str = "spec",
+                            collectives: bool = True,
+                            capacity: int | None = None) -> MeshSweepResult:
+        """Per-device estimates for a grid of mesh topologies from ONE
+        cached trace (ROADMAP: multi-device topologies as first-class
+        estimation targets).
+
+        Stage 1 (jaxpr tracing) is topology-independent: the phases are
+        traced once (or served from the trace cache) and stages 2-5 —
+        compose, spec-driven shard factors, per-axis collective
+        injection, vectorized replay — re-run per topology. With
+        ``shard_factors="spec"`` each topology's factors come from the
+        PartitionSpecs the sharding engine would place at that mesh,
+        divisibility fallbacks included; ``collectives=True`` injects
+        the per-axis staging buffers (``mesh_collective_specs``).
+        """
+        from ..distributed.sharding import (mesh_collective_specs,
+                                            shard_factor_fn)
+        t0 = time.perf_counter()
+        est = self.estimator
+        cache = est.trace_cache
+        h0, m0 = cache.hits, cache.misses
+        fwd, upd, init = est.trace_phases(fwd_bwd_fn, params, batch,
+                                          update_fn, opt_init_fn)
+        self._resolve_coupling(upd)
+        t_trace = time.perf_counter() - t0
+        opt_state = init.out_shape if init is not None else None
+        reports = []
+        for topo in topologies:
+            mesh = topo.axis_sizes
+            pol = topo.sharding_policy()
+            factor = shard_factor_fn(cfg, mesh, pol, mode=shard_factors,
+                                     params=params, opt_state=opt_state,
+                                     batch=batch)
+            specs = (mesh_collective_specs(mesh, pol)
+                     if collectives else ())
+            reports.append(est.estimate_from_phases(
+                fwd, upd, init, shard_factor_fn=factor,
+                collective_specs=specs, capacity=capacity))
+        stats = {
+            "topologies": len(reports),
+            "trace_s": t_trace,
+            "trace_cache": {"hits": cache.hits - h0,
+                            "misses": cache.misses - m0},
+            "wall_s": time.perf_counter() - t0,
+            "shard_factors": shard_factors,
+        }
+        return MeshSweepResult(list(topologies), reports, stats)
+
     def estimate_many(self, points: Sequence[SweepPoint],
                       interpolate: bool = True) -> SweepResult:
         t0 = time.perf_counter()

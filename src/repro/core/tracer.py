@@ -58,6 +58,14 @@ def aval_bytes(aval) -> int:
     return int(math.prod(shape)) * dtype.itemsize if len(shape) else dtype.itemsize
 
 
+def aval_shape(aval) -> tuple | None:
+    """Dims of an aval as a plain int tuple (None when shapeless)."""
+    shape = getattr(aval, "shape", None)
+    if shape is None:
+        return None
+    return tuple(int(d) for d in shape)
+
+
 @dataclasses.dataclass
 class _Block:
     bid: int
@@ -71,6 +79,7 @@ class _Block:
     free_t: int | None = None
     op: str = ""
     scope: str = ""
+    shape: tuple | None = None    # producing aval dims (sharding input)
 
 
 class JaxprMemoryTracer:
@@ -91,8 +100,10 @@ class JaxprMemoryTracer:
         self._ev_op: list[int] = []
         self._ev_scope: list[int] = []
         self._ev_bkind: list[int] = []
+        self._ev_shape: list[int] = []
         self._ops = StringInterner()
         self._scopes = StringInterner()
+        self._shapes = StringInterner([None])
         self.t = 0
         self._next_bid = 0
         self.blocks: dict[int, _Block] = {}
@@ -105,9 +116,10 @@ class JaxprMemoryTracer:
 
     # ---- block machinery -------------------------------------------------
     def _new_block(self, size: int, refs: int, op: str, scope: str,
-                   kind: BlockKind, pinned: bool = False) -> _Block:
+                   kind: BlockKind, pinned: bool = False,
+                   shape: tuple | None = None) -> _Block:
         b = _Block(self._next_bid, size, refs, pinned, kind,
-                   alloc_t=self.t, op=op, scope=scope)
+                   alloc_t=self.t, op=op, scope=scope, shape=shape)
         self._next_bid += 1
         self.blocks[b.bid] = b
         self._ev_kind.append(1)
@@ -117,6 +129,7 @@ class JaxprMemoryTracer:
         self._ev_op.append(self._ops.intern(op))
         self._ev_scope.append(self._scopes.intern(scope))
         self._ev_bkind.append(KIND_CODE[kind])
+        self._ev_shape.append(self._shapes.intern(shape))
         self.t += 1
         return b
 
@@ -135,6 +148,7 @@ class JaxprMemoryTracer:
             self._ev_op.append(self._ops.intern(op))
             self._ev_scope.append(self._scopes.intern(scope))
             self._ev_bkind.append(KIND_CODE[b.kind])
+            self._ev_shape.append(self._shapes.intern(b.shape))
             self.t += 1
 
     # ---- use counting ------------------------------------------------------
@@ -208,7 +222,7 @@ class JaxprMemoryTracer:
                         continue
                     out_blocks.append(self._new_block(
                         aval_bytes(ov.aval), n_uses, op, scope,
-                        BlockKind.ACTIVATION))
+                        BlockKind.ACTIVATION, shape=aval_shape(ov.aval)))
 
             # bind outvars; region results need ref adjustment to use counts
             if sub is not None or eqn.primitive.name in ("scan", "while", "cond"):
@@ -270,7 +284,7 @@ class JaxprMemoryTracer:
             else:
                 ys_blocks.append(self._new_block(
                     aval_bytes(ov.aval), 1, "scan_ys", scope,
-                    BlockKind.ACTIVATION))
+                    BlockKind.ACTIVATION, shape=aval_shape(ov.aval)))
 
         # _interpret_region is self-balancing on its bindings (it retains
         # internal uses itself), so consts need no pre-pay across
@@ -285,7 +299,8 @@ class JaxprMemoryTracer:
             x_slices = []
             for xb, xv in zip(xs, inner.invars[n_const + n_carry:]):
                 sl = self._new_block(aval_bytes(xv.aval), 1, "dynamic_slice",
-                                     scope, BlockKind.ACTIVATION)
+                                     scope, BlockKind.ACTIVATION,
+                                     shape=aval_shape(xv.aval))
                 self._release(xb, 1, "dynamic_slice", scope)
                 x_slices.append(sl)
             # body invars are [operand-consts..., carry..., x-slices...]
@@ -388,7 +403,7 @@ class JaxprMemoryTracer:
         from .events import BlockLifecycle
         return [BlockLifecycle(b.bid, b.size, b.alloc_t, b.free_t,
                                self.iteration, self.phase, b.op, b.scope,
-                               b.kind)
+                               b.kind, 1.0, b.shape)
                 for b in self.blocks.values()]
 
     # ---- top-level API --------------------------------------------------------
@@ -400,14 +415,16 @@ class JaxprMemoryTracer:
         const_blocks = []
         for c in closed.consts:
             b = self._new_block(int(getattr(c, "nbytes", 0)), 1, "const",
-                                "consts", BlockKind.PARAM, pinned=True)
+                                "consts", BlockKind.PARAM, pinned=True,
+                                shape=aval_shape(c))
             const_blocks.append(b)
         in_blocks = []
         for i, v in enumerate(jaxpr.invars):
             kind = (arg_kinds[i] if arg_kinds is not None else BlockKind.INPUT)
             scope = (arg_scopes[i] if arg_scopes is not None else f"arg{i}")
             b = self._new_block(aval_bytes(v.aval), counts.get(v, 0), "input",
-                                scope, kind, pinned=True)
+                                scope, kind, pinned=True,
+                                shape=aval_shape(v.aval))
             in_blocks.append(b)
         self.input_blocks = in_blocks
         outs = self._interpret_region(jaxpr, in_blocks, const_blocks)
@@ -422,7 +439,8 @@ class JaxprMemoryTracer:
             np.full(n, self.iteration, dtype=np.int64),
             np.full(n, PHASE_CODE[self.phase], dtype=np.uint8),
             self._ev_op, self._ev_scope, self._ev_bkind,
-            self._ops.table, self._scopes.table)
+            self._ops.table, self._scopes.table,
+            self._ev_shape, self._shapes.table)
         return Trace.from_columnar(columns, num_iterations=1,
                                    meta={"phase": self.phase.value})
 

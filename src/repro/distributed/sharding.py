@@ -82,6 +82,14 @@ def _axis_size(mesh, name: str) -> int:
     return dict(zip(mesh.axis_names, mesh.devices.shape)).get(name, 1)
 
 
+def _axis_names(mesh) -> tuple:
+    """Axis names of a jax Mesh or an {axis: size} dict (estimator-side
+    meshes need no device array)."""
+    if isinstance(mesh, dict):
+        return tuple(mesh.keys())
+    return tuple(mesh.axis_names)
+
+
 def _fits(dim: int, mesh: Mesh, axes) -> bool:
     total = 1
     for a in (axes if isinstance(axes, tuple) else (axes,)):
@@ -89,9 +97,12 @@ def _fits(dim: int, mesh: Mesh, axes) -> bool:
     return dim % total == 0 and dim >= total
 
 
-def spec_for_path(path: str, shape: tuple, mesh: Mesh,
+def spec_for_path(path: str, shape: tuple, mesh,
                   policy: ShardingPolicy) -> P:
-    """Resolve the PartitionSpec for one parameter leaf."""
+    """Resolve the PartitionSpec for one parameter leaf. ``mesh`` may be
+    a jax Mesh or an {axis: size} dict (spec-driven estimation needs no
+    device array)."""
+    axis_names = _axis_names(mesh)
     template = None
     for pat, tmpl in _RULES:
         if re.search(pat, path):
@@ -105,7 +116,7 @@ def spec_for_path(path: str, shape: tuple, mesh: Mesh,
         for i in range(k):
             t = template[len(template) - k + i]
             dim_idx = nd - k + i
-            if t == "M" and policy.model_axis in mesh.axis_names \
+            if t == "M" and policy.model_axis in axis_names \
                     and _fits(shape[dim_idx], mesh, policy.model_axis):
                 spec[dim_idx] = policy.model_axis
         # vocab-shard fallback: embed [V, D] with V not divisible by the
@@ -115,7 +126,7 @@ def spec_for_path(path: str, shape: tuple, mesh: Mesh,
                 and _fits(shape[nd - 1], mesh, policy.model_axis):
             spec[nd - 1] = policy.model_axis
     if policy.fsdp:
-        axes = tuple(a for a in policy.fsdp_axes if a in mesh.axis_names)
+        axes = tuple(a for a in policy.fsdp_axes if a in axis_names)
         if axes:
             # shard the largest remaining unsharded dim over fsdp axes
             cands = [(shape[i], i) for i in range(nd)
@@ -139,52 +150,67 @@ def param_shardings(abstract_params, cfg: ModelConfig, mesh: Mesh,
     return jax.tree_util.tree_unflatten(treedef, out)
 
 
+def batch_spec_for_shape(shape: tuple, mesh,
+                         policy: ShardingPolicy | None = None) -> P:
+    """Input rule as a pure shape function: batch (leading) dim over the
+    batch axes, replicated when it does not divide."""
+    policy = policy or ShardingPolicy()
+    axes = tuple(a for a in policy.batch_axes if a in _axis_names(mesh))
+    nd = len(shape)
+    if nd == 0 or not axes or not _fits(shape[0], mesh, axes):
+        return P()
+    s = [axes if len(axes) > 1 else axes[0]] + [None] * (nd - 1)
+    return P(*s)
+
+
 def batch_shardings(batch_specs, mesh: Mesh,
                     policy: ShardingPolicy | None = None):
     """Inputs: batch dim sharded over (pod, data)."""
     policy = policy or ShardingPolicy()
-    axes = tuple(a for a in policy.batch_axes if a in mesh.axis_names)
+    return jax.tree_util.tree_map(
+        lambda leaf: NamedSharding(
+            mesh, batch_spec_for_shape(tuple(leaf.shape), mesh, policy)),
+        batch_specs)
 
-    def spec(leaf):
-        nd = len(leaf.shape)
-        if nd == 0 or not axes or not _fits(leaf.shape[0], mesh, axes):
-            return NamedSharding(mesh, P())
-        s = [axes if len(axes) > 1 else axes[0]] + [None] * (nd - 1)
-        return NamedSharding(mesh, P(*s))
 
-    return jax.tree_util.tree_map(spec, batch_specs)
+def opt_spec_for_shape(shape: tuple, mesh,
+                       policy: ShardingPolicy | None = None) -> P:
+    """Optimizer-state rule as a pure shape function: the largest
+    divisible dim goes on the model axis and (with fsdp) the next
+    largest on the fsdp axes; scalars and non-divisible dims degrade
+    gracefully to replication."""
+    policy = policy or ShardingPolicy()
+    axis_names = _axis_names(mesh)
+    fsdp_axes = tuple(a for a in policy.fsdp_axes if a in axis_names)
+    nd = len(shape)
+    if nd == 0:
+        return P()
+    s: list = [None] * nd
+    order = sorted(range(nd), key=lambda i: -shape[i])
+    for i in order:
+        if policy.model_axis in axis_names \
+                and _fits(shape[i], mesh, policy.model_axis):
+            s[i] = policy.model_axis
+            break
+    if fsdp_axes:
+        for i in order:
+            if s[i] is None and _fits(shape[i], mesh, fsdp_axes):
+                s[i] = fsdp_axes if len(fsdp_axes) > 1 else fsdp_axes[0]
+                break
+    return P(*s)
 
 
 def opt_state_shardings(abstract_opt_state, mesh: Mesh,
                         policy: ShardingPolicy | None = None):
-    """Optimizer state sharding: the largest divisible dim goes on the
-    model axis and (with fsdp, or ZeRO-1 style regardless for 2D+ states)
-    the next largest on the data axes — m/v mirror their parameter's
-    dominant-dim layout; factored Adafactor rows/cols and scalar counters
-    degrade gracefully to replication."""
+    """Optimizer state sharding — m/v mirror their parameter's
+    dominant-dim layout; factored Adafactor rows/cols and scalar
+    counters degrade gracefully to replication (see
+    :func:`opt_spec_for_shape`)."""
     policy = policy or ShardingPolicy()
-    fsdp_axes = tuple(a for a in policy.fsdp_axes if a in mesh.axis_names)
-
-    def spec(leaf):
-        shape = getattr(leaf, "shape", ())
-        nd = len(shape)
-        if nd == 0:
-            return NamedSharding(mesh, P())
-        s: list = [None] * nd
-        order = sorted(range(nd), key=lambda i: -shape[i])
-        for i in order:
-            if policy.model_axis in mesh.axis_names \
-                    and _fits(shape[i], mesh, policy.model_axis):
-                s[i] = policy.model_axis
-                break
-        if fsdp_axes:
-            for i in order:
-                if s[i] is None and _fits(shape[i], mesh, fsdp_axes):
-                    s[i] = fsdp_axes if len(fsdp_axes) > 1 else fsdp_axes[0]
-                    break
-        return NamedSharding(mesh, P(*s))
-
-    return jax.tree_util.tree_map(spec, abstract_opt_state)
+    return jax.tree_util.tree_map(
+        lambda leaf: NamedSharding(mesh, opt_spec_for_shape(
+            tuple(getattr(leaf, "shape", ())), mesh, policy)),
+        abstract_opt_state)
 
 
 # decode-state layouts by cache key: (batch_dim, model_dim_candidates)
@@ -246,13 +272,219 @@ def cache_shardings(abstract_cache, mesh: Mesh,
 
 
 # ---------------------------------------------------------------------------
-def shard_factor_fn(cfg: ModelConfig, mesh: Mesh,
-                    policy: ShardingPolicy | None = None):
-    """xMem hook: BlockLifecycle -> division factor for per-device sizes.
+# spec-driven per-device factors (paper §6.2, done right)
+def spec_factor(spec: P, shape: tuple, mesh) -> float:
+    """Division factor a PartitionSpec implies for a tensor's bytes.
 
-    Params/grads/opt-state: actual sharding factor from the rules
-    (model x fsdp). Activations/inputs: batch axes. Collectives:
-    unsharded (already per-device)."""
+    Per-device elements are ``prod(ceil(dim / axes))``; the factor is
+    ``global / per_device``. Because every rule above drops an axis that
+    does not divide its dim, the ceil is exact in practice — but it is
+    kept so a hand-written non-divisible spec *under*-counts the factor
+    (over-estimates per-device bytes) instead of the reverse: the safe
+    direction for the paper's OOM-threshold guarantee."""
+    if not shape:
+        return 1.0
+    glob = 1
+    per_dev = 1
+    entries = tuple(spec) + (None,) * (len(shape) - len(spec))
+    for dim, assigned in zip(shape, entries):
+        dim = int(dim)
+        glob *= dim
+        if assigned is None:
+            per_dev *= dim
+            continue
+        axes = assigned if isinstance(assigned, tuple) else (assigned,)
+        total = 1
+        for a in axes:
+            total *= _axis_size(mesh, a)
+        per_dev *= -(-dim // total) if total else dim
+    if per_dev <= 0:
+        return 1.0
+    return glob / per_dev
+
+
+class SpecShardFactors:
+    """xMem hook: BlockLifecycle -> division factor, resolved from the
+    *actual* PartitionSpecs the sharding engine would place.
+
+    * PARAM / GRAD / OUTPUT / ``grad_upcast`` temps — matched by shape
+      against the resolved per-leaf param specs (gradients and fresh
+      params mirror their parameter's sharding under GSPMD). Ambiguous
+      shapes take the **least-sharded** matching leaf: replication is the
+      conservative direction for a safe OOM threshold.
+    * OPT_STATE — :func:`opt_spec_for_shape` on the block's shape
+      (identical to what ``opt_state_shardings`` places).
+    * INPUT — :func:`batch_spec_for_shape` (batch dim over the batch
+      axes, replicated when non-divisible).
+    * CACHE — matched against the decode-state tree's resolved
+      :func:`cache_spec_for` specs when a cache pytree is supplied.
+    * ACTIVATION / TEMP — batch-dim sharding when the leading dim
+      divides the batch axes AND is a multiple of the traced global
+      batch, plus GSPMD-style propagation from producing weights: an
+      activation whose trailing dim equals the *output width* of a
+      column-parallel (model-axis-on-last-dim) weight inherits that
+      model sharding — iff the width divides the axis.
+    * COLLECTIVE — 1.0 (injected buffers are already per-device).
+
+    Blocks without shape metadata (external traces, synthetic blocks)
+    resolve by exact byte-size match against the param leaves, else
+    replicate — never a blanket divisor, so the divisibility fallbacks
+    can never be silently bypassed (the heuristic's underestimation bug).
+    """
+
+    def __init__(self, mesh, policy: ShardingPolicy | None = None, *,
+                 params=None, opt_state=None, batch=None, cache=None):
+        from ..core.events import BlockKind
+        self._BK = BlockKind            # bound once: __call__ is per-block
+        policy = policy or ShardingPolicy()
+        self.mesh = dict(mesh) if isinstance(mesh, dict) else {
+            a: _axis_size(mesh, a) for a in _axis_names(mesh)}
+        self.policy = policy
+        self.model = _axis_size(mesh, policy.model_axis)
+        self.data_total = 1
+        for a in policy.batch_axes:
+            self.data_total *= _axis_size(mesh, a)
+
+        # resolved param specs -> factor per shape (min = least sharded)
+        self.param_factor_by_shape: dict[tuple, float] = {}
+        self.param_factor_by_size: dict[int, float] = {}
+        self.model_widths: set[int] = set()
+        if params is not None:
+            flat, _ = jax.tree_util.tree_flatten_with_path(params)
+            for key_path, leaf in flat:
+                shape = tuple(int(d) for d in getattr(leaf, "shape", ()))
+                path = jax.tree_util.keystr(key_path)
+                spec = spec_for_path(path, shape, self.mesh, policy)
+                f = spec_factor(spec, shape, self.mesh)
+                prev = self.param_factor_by_shape.get(shape)
+                self.param_factor_by_shape[shape] = \
+                    f if prev is None else min(prev, f)
+                nbytes = _leaf_bytes(leaf)
+                if nbytes:
+                    prevs = self.param_factor_by_size.get(nbytes)
+                    self.param_factor_by_size[nbytes] = \
+                        f if prevs is None else min(prevs, f)
+                # column-parallel output widths: model axis on last dim
+                entries = tuple(spec)
+                if shape and len(entries) == len(shape):
+                    last = entries[-1]
+                    axes = last if isinstance(last, tuple) else (last,)
+                    if last is not None and policy.model_axis in axes:
+                        self.model_widths.add(shape[-1])
+        self.opt_factor_by_shape: dict[tuple, float] = {}
+        if opt_state is not None:
+            for leaf in jax.tree_util.tree_leaves(opt_state):
+                shape = tuple(int(d) for d in getattr(leaf, "shape", ()))
+                self.opt_factor_by_shape.setdefault(
+                    shape, self._opt_factor(shape))
+        # traced global batch extents (leading dims of the batch leaves)
+        self.batch_extents: set[int] = set()
+        if batch is not None:
+            for leaf in jax.tree_util.tree_leaves(batch):
+                shape = getattr(leaf, "shape", ())
+                if len(shape):
+                    self.batch_extents.add(int(shape[0]))
+        self.cache_factor_by_shape: dict[tuple, float] = {}
+        if cache is not None:
+            flat, _ = jax.tree_util.tree_flatten_with_path(cache)
+            for key_path, leaf in flat:
+                shape = tuple(int(d) for d in getattr(leaf, "shape", ()))
+                path = jax.tree_util.keystr(key_path)
+                spec = cache_spec_for(path, shape, self.mesh, policy)
+                f = spec_factor(spec, shape, self.mesh)
+                prev = self.cache_factor_by_shape.get(shape)
+                self.cache_factor_by_shape[shape] = \
+                    f if prev is None else min(prev, f)
+
+    # -- per-kind resolution -------------------------------------------------
+    def _opt_factor(self, shape: tuple) -> float:
+        return spec_factor(
+            opt_spec_for_shape(shape, self.mesh, self.policy), shape,
+            self.mesh)
+
+    def _param_like(self, block) -> float:
+        shape = block.shape
+        if shape is not None:
+            f = self.param_factor_by_shape.get(tuple(shape))
+            if f is not None:
+                return f
+            return 1.0
+        return self.param_factor_by_size.get(block.size, 1.0)
+
+    def _activation(self, block) -> float:
+        shape = block.shape
+        if shape is None:
+            return 1.0
+        f = 1.0
+        nd = len(shape)
+        if nd and self.data_total > 1 and shape[0] % self.data_total == 0 \
+                and (not self.batch_extents
+                     or any(b and shape[0] % b == 0
+                            for b in self.batch_extents)):
+            f *= self.data_total
+        if nd >= 2 and self.model > 1 and shape[-1] in self.model_widths \
+                and shape[-1] % self.model == 0:
+            f *= self.model
+        return f
+
+    def __call__(self, block) -> float:
+        BlockKind = self._BK
+        k = block.block_kind
+        if k is BlockKind.PARAM or k is BlockKind.GRAD:
+            return self._param_like(block)
+        if k is BlockKind.OUTPUT:
+            shape = block.shape
+            if shape is not None:
+                f = self.param_factor_by_shape.get(tuple(shape))
+                if f is not None:
+                    return f
+                of = self.opt_factor_by_shape.get(tuple(shape))
+                return of if of is not None else 1.0
+            return self.param_factor_by_size.get(block.size, 1.0)
+        if k is BlockKind.OPT_STATE:
+            shape = block.shape
+            if shape is not None:
+                shape = tuple(shape)
+                f = self.opt_factor_by_shape.get(shape)
+                return f if f is not None else self._opt_factor(shape)
+            return self.param_factor_by_size.get(block.size, 1.0)
+        if k is BlockKind.INPUT:
+            shape = block.shape
+            if shape is None:
+                return 1.0
+            return spec_factor(
+                batch_spec_for_shape(tuple(shape), self.mesh, self.policy),
+                tuple(shape), self.mesh)
+        if k is BlockKind.CACHE:
+            shape = block.shape
+            if shape is not None:
+                return self.cache_factor_by_shape.get(tuple(shape), 1.0)
+            return 1.0
+        if k is BlockKind.ACTIVATION or k is BlockKind.TEMP:
+            if block.op == "grad_upcast":     # f32 grad copies shard as grads
+                return self._param_like(block)
+            return self._activation(block)
+        return 1.0
+
+
+def _leaf_bytes(leaf) -> int:
+    shape = getattr(leaf, "shape", None)
+    dtype = getattr(leaf, "dtype", None)
+    if shape is None or dtype is None:
+        return 0
+    n = 1
+    for d in shape:
+        n *= int(d)
+    return n * dtype.itemsize
+
+
+def _heuristic_factor_fn(cfg: ModelConfig, mesh,
+                         policy: ShardingPolicy | None = None):
+    """The pre-spec scalar heuristic, preserved verbatim as an explicit
+    opt-in (``shard_factors='heuristic'``). It assumes perfect
+    divisibility and applies model*fsdp uniformly — an *underestimate*
+    whenever a vocab / kv-head / expert dim does not divide an axis;
+    kept only for comparisons and legacy pins."""
     from ..core.events import BlockKind
     policy = policy or ShardingPolicy()
     model = _axis_size(mesh, policy.model_axis)
@@ -284,3 +516,85 @@ def shard_factor_fn(cfg: ModelConfig, mesh: Mesh,
         return 1.0
 
     return factor
+
+
+def shard_factor_fn(cfg: ModelConfig, mesh,
+                    policy: ShardingPolicy | None = None, *,
+                    mode: str = "spec", params=None, opt_state=None,
+                    batch=None, cache=None):
+    """xMem hook: BlockLifecycle -> division factor for per-device sizes.
+
+    ``mode="spec"`` (default) resolves each block's factor from the
+    PartitionSpec the rule engine would actually place — honoring every
+    divisibility fallback (non-divisible vocab / kv-heads replicate
+    instead of being counted as sharded). ``params``/``opt_state``/
+    ``batch``/``cache`` are abstract pytrees used to resolve leaf specs;
+    ``params`` defaults to ``abstract_params(cfg)``.
+
+    ``mode="heuristic"`` is the pre-spec scalar path (explicit opt-in;
+    pinned by equivalence tests).
+    """
+    if mode == "heuristic":
+        return _heuristic_factor_fn(cfg, mesh, policy)
+    if mode != "spec":
+        raise ValueError(f"unknown shard_factors mode {mode!r}")
+    if params is None and cfg is not None:
+        from ..models import model as M
+        params = M.abstract_params(cfg)
+    return SpecShardFactors(mesh, policy, params=params,
+                            opt_state=opt_state, batch=batch, cache=cache)
+
+
+def mesh_collective_specs(mesh, policy: ShardingPolicy | None = None):
+    """Per-mesh-axis staging buffers for the Orchestrator's collective
+    injection (paper §6.2/6.4's "inject simulated allreduce buffers",
+    sized from the actual sharded tensors rather than a fixed factor —
+    the dynamic ``source`` field is resolved by
+    ``MemoryOrchestrator.inject_collectives`` against the composition's
+    real per-device block sizes):
+
+    * every data/batch axis — gradient all-reduce staging (largest
+      per-device gradient block) at the end of fwd/bwd; skipped on axes
+      that are ALSO fsdp axes, where ZeRO's reduce-scatter *replaces*
+      the all-reduce (emitting both would double-count grad-sync
+      staging at phase end and inflate exactly the fsdp topologies the
+      admission gate targets);
+    * every fsdp axis (ZeRO-3) — parameter all-gather working buffer
+      (largest per-device param, unsharded along the axis: scale = axis
+      size) spanning fwd/bwd, plus a gradient reduce-scatter staging
+      buffer at its end;
+    * the model axis — TP activation all-gather temporary (largest
+      per-device activation, unsharded along the axis).
+    """
+    from ..core.events import Phase
+    from ..core.orchestrator import CollectiveSpec
+    policy = policy or ShardingPolicy()
+    axis_names = _axis_names(mesh)
+    specs: list[CollectiveSpec] = []
+    fsdp_axes = set(policy.fsdp_axes) if policy.fsdp else set()
+    for a in policy.batch_axes:
+        if a in axis_names and _axis_size(mesh, a) > 1 \
+                and a not in fsdp_axes:
+            specs.append(CollectiveSpec(
+                f"grad_allreduce[{a}]", 0, Phase.FORWARD_BACKWARD,
+                at="phase_end", axis=a, collective="all_reduce",
+                source="grads"))
+    if policy.fsdp:
+        for a in policy.fsdp_axes:
+            if a in axis_names and _axis_size(mesh, a) > 1:
+                n = _axis_size(mesh, a)
+                specs.append(CollectiveSpec(
+                    f"param_allgather[{a}]", 0, Phase.FORWARD_BACKWARD,
+                    at="phase_start", axis=a, collective="all_gather",
+                    source="params", scale=float(n)))
+                specs.append(CollectiveSpec(
+                    f"grad_reducescatter[{a}]", 0, Phase.FORWARD_BACKWARD,
+                    at="phase_end", axis=a, collective="reduce_scatter",
+                    source="grads"))
+    m = policy.model_axis
+    if m in axis_names and _axis_size(mesh, m) > 1:
+        specs.append(CollectiveSpec(
+            f"tp_allgather[{m}]", 0, Phase.FORWARD_BACKWARD,
+            at="phase_start", axis=m, collective="all_gather",
+            source="activations", scale=float(_axis_size(mesh, m))))
+    return tuple(specs)

@@ -338,6 +338,56 @@ def xmem_gate(arch: str, hbm_gib: float = 0.25, seq: int = 64,
     return record
 
 
+def xmem_mesh_gate(arch: str, hbm_gib: float = 0.25, seq: int = 64,
+                   batch: int = 32, devices: tuple = (8, 16, 32),
+                   out_dir: str = "artifacts/dryrun") -> dict:
+    """Per-device admission gate over mesh topologies: every
+    (pod, data, model, fsdp) factorization of the candidate device
+    counts is estimated from ONE cached trace with spec-driven shard
+    factors and per-axis collective staging buffers — BEFORE paying any
+    XLA compile. The full-scale dry-run then only compiles mesh cells
+    the gate admits (smoke-scale configs keep this runnable anywhere)."""
+    from ..configs import get_smoke
+    from ..configs.base import smoke_shape
+    from ..configs.registry import input_specs
+    from ..core.estimator import XMemEstimator
+    from ..core.sweep import SweepService, topology_grid
+    from ..models import model as M
+    from ..train import TrainPolicy, make_estimator_hooks
+
+    cfg = get_smoke(arch)
+    tpolicy = TrainPolicy(optimizer="adamw", microbatches=1)
+    fwd_bwd, update, opt_init = make_estimator_hooks(cfg, tpolicy)
+    params = M.abstract_params(cfg)
+    batch_specs = input_specs(cfg, smoke_shape(seq_len=seq,
+                                               global_batch=batch))
+    grid = [t for n in devices for t in topology_grid(n)]
+    svc = SweepService(XMemEstimator.for_tpu())
+    result = svc.estimate_mesh_sweep(fwd_bwd, params, batch_specs, grid,
+                                     update_fn=update,
+                                     opt_init_fn=opt_init, cfg=cfg)
+    hbm = int(hbm_gib * 2**30)
+    record = {
+        "arch": cfg.name, "kind": "xmem_mesh_gate", "hbm_bytes": hbm,
+        "seq": seq, "batch": batch,
+        "sweep": result.stats,
+        "topologies": [
+            {"topology": t.label, "devices": t.n_devices,
+             "peak_bytes": rep.peak_bytes,
+             "persistent_bytes": rep.persistent_bytes,
+             "fits": rep.fits(hbm)}
+            for t, rep in result],
+    }
+    record["admitted"] = [r["topology"] for r in record["topologies"]
+                          if r["fits"]]
+    best = result.best(hbm)
+    if best is not None:
+        record["best_topology"] = best[0].label
+    os.makedirs(out_dir, exist_ok=True)
+    _write(os.path.join(out_dir, f"{arch}__xmem_mesh_gate.json"), record)
+    return record
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch")
@@ -350,9 +400,29 @@ def main():
     ap.add_argument("--xmem-gate", metavar="ARCH",
                     help="run the estimator-side batch admission sweep "
                          "for ARCH (smoke scale, no compile) and exit")
+    ap.add_argument("--xmem-mesh-gate", metavar="ARCH",
+                    help="run the estimator-side mesh-topology admission "
+                         "sweep for ARCH (smoke scale, no compile) and "
+                         "exit")
+    ap.add_argument("--devices", default="8,16,32",
+                    help="comma-separated device counts for "
+                         "--xmem-mesh-gate")
     ap.add_argument("--hbm-gib", type=float, default=0.25,
-                    help="capacity budget for --xmem-gate (smoke scale)")
+                    help="capacity budget for --xmem-gate/"
+                         "--xmem-mesh-gate (smoke scale)")
     args = ap.parse_args()
+
+    if args.xmem_mesh_gate:
+        devices = tuple(int(d) for d in args.devices.split(","))
+        r = xmem_mesh_gate(args.xmem_mesh_gate, hbm_gib=args.hbm_gib,
+                           devices=devices, out_dir=args.out)
+        s = r["sweep"]
+        print(f"[xmem-mesh-gate] {r['arch']}: "
+              f"{len(r['admitted'])}/{s['topologies']} topologies "
+              f"admitted (best {r.get('best_topology', '—')}; "
+              f"{s['trace_cache']['misses']} phases traced, "
+              f"{s['wall_s']*1e3:.0f} ms)")
+        return
 
     if args.xmem_gate:
         r = xmem_gate(args.xmem_gate, hbm_gib=args.hbm_gib,

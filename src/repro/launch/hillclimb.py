@@ -245,6 +245,63 @@ def xmem_batch_hillclimb(arch: str, hbm_bytes: int, seq: int = 64,
     return out
 
 
+def xmem_mesh_hillclimb(arch: str, hbm_bytes: int, seq: int = 64,
+                        batch: int = 32, devices: tuple = (8, 16, 32),
+                        smoke: bool = True, verbose: bool = True) -> dict:
+    """Estimator-driven mesh-topology search: evaluate every
+    (pod, data, model, fsdp) factorization of the candidate device
+    counts from ONE cached trace (``SweepService.estimate_mesh_sweep``)
+    and pick the cheapest topology whose spec-driven per-device estimate
+    fits the budget — the ROADMAP's multi-device scenario axis, with no
+    XLA compile and no re-tracing per topology."""
+    from ..configs import get_config, get_smoke
+    from ..configs.base import smoke_shape
+    from ..configs.registry import input_specs
+    from ..core.estimator import XMemEstimator
+    from ..core.sweep import SweepService, topology_grid
+    from ..models import model as M
+    from ..train import TrainPolicy, make_estimator_hooks
+
+    cfg = get_smoke(arch) if smoke else get_config(arch)
+    policy = TrainPolicy(optimizer="adamw", microbatches=1)
+    fwd_bwd, update, opt_init = make_estimator_hooks(cfg, policy)
+    params = M.abstract_params(cfg)
+    batch_specs = input_specs(cfg, smoke_shape(seq_len=seq,
+                                               global_batch=batch))
+    grid = [t for n in devices for t in topology_grid(n)]
+    svc = SweepService(XMemEstimator.for_tpu())
+    result = svc.estimate_mesh_sweep(fwd_bwd, params, batch_specs, grid,
+                                     update_fn=update,
+                                     opt_init_fn=opt_init, cfg=cfg)
+    rows = []
+    for topo, rep in result:
+        fits = rep.fits(hbm_bytes)
+        rows.append({"topology": topo.label, "devices": topo.n_devices,
+                     "peak_bytes": rep.peak_bytes, "fits": fits})
+        if verbose:
+            print(f"[xmem-mesh] {topo.label:14s} dev={topo.n_devices:4d} "
+                  f"peak={rep.peak_bytes/2**20:8.2f} MiB "
+                  f"{'fits' if fits else 'OOM '}", flush=True)
+    out = {"arch": cfg.name, "kind": "xmem_mesh", "hbm_bytes": hbm_bytes,
+           "seq": seq, "batch": batch, "topologies": rows,
+           "sweep": result.stats}
+    best = result.best(hbm_bytes)
+    if best is not None:
+        topo, rep = best
+        out.update(best_topology=topo.label, best_devices=topo.n_devices,
+                   best_peak_bytes=rep.peak_bytes)
+        if verbose:
+            print(f"[xmem-mesh] best: {topo.label} "
+                  f"({topo.n_devices} devices, "
+                  f"{rep.peak_bytes/2**20:.2f} MiB/device) — "
+                  f"{result.stats['topologies']} topologies from "
+                  f"{result.stats['trace_cache']['misses']} traces in "
+                  f"{result.stats['wall_s']*1e3:.0f} ms", flush=True)
+    elif verbose:
+        print("[xmem-mesh] no topology fits the budget", flush=True)
+    return out
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--cell", default="all")
@@ -252,9 +309,26 @@ def main():
     ap.add_argument("--xmem-batch", metavar="ARCH",
                     help="run the estimator-driven batch-size hillclimb "
                          "for ARCH (smoke scale) instead of the cells")
+    ap.add_argument("--xmem-mesh", metavar="ARCH",
+                    help="run the estimator-driven mesh-topology search "
+                         "for ARCH (smoke scale) instead of the cells")
+    ap.add_argument("--devices", default="8,16,32",
+                    help="comma-separated device counts for --xmem-mesh")
     ap.add_argument("--hbm-gib", type=float, default=0.25,
-                    help="capacity budget for --xmem-batch (smoke scale)")
+                    help="capacity budget for --xmem-batch/--xmem-mesh "
+                         "(smoke scale)")
     args = ap.parse_args()
+    if args.xmem_mesh:
+        devices = tuple(int(d) for d in args.devices.split(","))
+        r = xmem_mesh_hillclimb(args.xmem_mesh,
+                                int(args.hbm_gib * 2**30),
+                                devices=devices)
+        os.makedirs(args.out, exist_ok=True)
+        path = os.path.join(args.out, f"xmem_mesh__{args.xmem_mesh}.json")
+        with open(path, "w") as f:
+            json.dump(r, f, indent=1)
+        print(f"[xmem-mesh] wrote {path}")
+        return
     if args.xmem_batch:
         r = xmem_batch_hillclimb(args.xmem_batch,
                                  int(args.hbm_gib * 2**30))

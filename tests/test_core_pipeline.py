@@ -203,6 +203,91 @@ class TestEstimatorAccuracy:
             return jax.tree.map(lambda a, b: a - b / (n + 1), p, g), s
         assert update_grad_coupling(clip, params, grads, ())["coupling"] == "coupled"
 
+    def test_coupling_recurses_into_jitted_updates(self, shapes):
+        """Regression: a pjit-wrapped per-leaf optimizer must not be
+        mis-unioned at the call boundary into 'coupled' (which would
+        force all-grads-coexist and inflate the estimate) — the taint
+        analysis recurses into the sub-jaxpr where leaves stay apart."""
+        params, batch = shapes
+        grads = jax.eval_shape(lambda p, b: jax.grad(_loss)(p, b),
+                               params, batch)
+        jitted_sgd = jax.jit(_sgd)
+        info = update_grad_coupling(jitted_sgd, params, grads, ())
+        assert info["coupling"] == "per_leaf"
+
+        def clip(p, g, s):
+            n = jnp.sqrt(sum(jnp.sum(x * x) for x in jax.tree.leaves(g)))
+            return jax.tree.map(lambda a, b: a - b / (n + 1), p, g), s
+        # coupling inside the jitted region is still detected
+        assert update_grad_coupling(jax.jit(clip), params, grads,
+                                    ())["coupling"] == "coupled"
+
+        def upcast(p, g, s):
+            return jax.tree.map(
+                lambda a, b: (a.astype(jnp.float32)
+                              - b.astype(jnp.float32)).astype(a.dtype),
+                p, g), s
+        # grad upcasts inside the jitted region are still detected
+        p16 = jax.tree.map(
+            lambda a: jax.ShapeDtypeStruct(a.shape, jnp.bfloat16), params)
+        assert update_grad_coupling(jax.jit(upcast), p16, p16,
+                                    ())["upcasts"] is True
+
+    def test_coupling_carry_chain_reaches_fixpoint(self, shapes):
+        """A gradient rotated through 3 scan carries and then combined
+        with another gradient IS coupled — the taint fixpoint must run
+        past two passes to see it."""
+        params, batch = shapes
+        grads = jax.eval_shape(lambda p, b: jax.grad(_loss)(p, b),
+                               params, batch)
+        keys = list(jax.tree.leaves(params) and sorted(params))
+        ka, kb = keys[0], keys[-1]
+
+        def rotated(p, g, s):
+            ga = jnp.sum(g[ka])
+
+            def body(carry, _):
+                c1, c2, c3 = carry
+                return (ga, c1, c2), c3   # grad taint moves 1 slot/pass
+
+            (c1, c2, c3), _ys = jax.lax.scan(
+                body, (0.0, 0.0, 0.0), jnp.arange(3))
+            new = dict(p)
+            # c3 is grad[ka]-derived only after 3 carry hops; mixing it
+            # with grad[kb] couples the update
+            new[kb] = p[kb] - c3 * g[kb]
+            return new, s
+
+        assert update_grad_coupling(rotated, params, grads,
+                                    ())["coupling"] == "coupled"
+
+    def test_coupling_detected_in_while_condition(self, shapes):
+        """Gradient unions that happen only inside a while_loop's
+        condition (grad-norm convergence tests) still couple the
+        update."""
+        params, batch = shapes
+        grads = jax.eval_shape(lambda p, b: jax.grad(_loss)(p, b),
+                               params, batch)
+        keys = sorted(params)
+        ka, kb = keys[0], keys[-1]
+
+        def line_search(p, g, s):
+            na, nb = jnp.sum(g[ka] ** 2), jnp.sum(g[kb] ** 2)
+
+            def cond(c):
+                step, _ = c
+                return step * (na + nb) > 1e-3   # unions both grads
+
+            def body(c):
+                step, it = c
+                return step * 0.5, it + 1
+
+            step, _ = jax.lax.while_loop(cond, body, (1.0, 0))
+            return jax.tree.map(lambda a, b: a - step * b, p, g), s
+
+        assert update_grad_coupling(line_search, params, grads,
+                                    ())["coupling"] == "coupled"
+
     def test_serving_estimate(self, shapes):
         params, _ = shapes
         cache = {"kv": jax.ShapeDtypeStruct((2, 1024, D), jnp.float32)}
