@@ -1,19 +1,27 @@
 PYTHONPATH := src
 export PYTHONPATH
 
-.PHONY: test test-fast bench bench-check report
+.PHONY: test test-fast bench bench-check serve-bench report
 
 test:            ## tier-1 test suite
 	python -m pytest -x -q
 
+# test-fast includes the persistent-cache/service tests; only the
+# socket round-trip and accumulation-hillclimb cases are slow-marked
 test-fast:       ## tier-1 subset (<60 s): skips the slow smoke-arch suite
 	python -m pytest -x -q -m "not slow"
 
 bench:           ## full estimator benchmark; refreshes BENCH_estimator.json
 	python -m benchmarks.perf_estimator
 
+# gates replay throughput, mesh-sweep rate AND warm service requests/s
 bench-check:     ## perf-regression gate vs checked-in BENCH_estimator.json
 	python -m benchmarks.report --check
+
+# merges the service_* keys into BENCH_estimator.json without re-running
+# the full benchmark
+serve-bench:     ## admission-service request-throughput benchmark only
+	python -m benchmarks.perf_estimator --service-only
 
 report:          ## render artifact tables
 	python -m benchmarks.report

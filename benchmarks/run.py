@@ -152,14 +152,22 @@ def bench_rq5_scale():
         pol = ShardingPolicy(fsdp=fsdp, batch_axes=("data",))
         micro = rec.get("train_policy", {}).get("microbatches", 1)
         optname = rec.get("train_policy", {}).get("optimizer", "adamw")
+        # the hooks now run the real accumulation scan for
+        # microbatches > 1 (activations scale with the microbatch inside
+        # the scan) — hand them the FULL batch, but keep the microbatch
+        # count divisible so _split_microbatches can split it
+        full = dict(input_specs(cfg, TRAIN_4K))
+        bsz = next(iter(full.values())).shape[0]
+        micro_rec = micro
+        while micro > 1 and bsz % micro:   # largest divisor <= recorded
+            micro -= 1
+        if micro != micro_rec:
+            print(f"[rq5] {arch}: microbatches {micro_rec} does not "
+                  f"divide batch {bsz}; estimating with {micro}")
         tp = TrainPolicy(optimizer=optname, microbatches=micro)
         fwd_bwd, update, opt_init = make_estimator_hooks(cfg, tp)
         params = M.abstract_params(cfg)
-        mb = dict(input_specs(cfg, TRAIN_4K))
-        # estimator sees one microbatch (activations scale with it)
-        mb = jax.tree_util.tree_map(
-            lambda s: jax.ShapeDtypeStruct(
-                (max(s.shape[0] // micro, 1),) + s.shape[1:], s.dtype), mb)
+        mb = full
         try:
             t1 = time.perf_counter()
             rep = svc.estimate_many([SweepPoint(

@@ -401,6 +401,43 @@ class ColumnarBlocks:
         return dataclasses.replace(
             self, size=np.asarray(sizes, dtype=np.int64))
 
+    def to_json(self) -> dict:
+        """Schema-v3 columnar payload (shape column + interned table
+        included) — the persistent trace store's lifecycle format."""
+        return {
+            "block_id": self.block_id.tolist(),
+            "size": self.size.tolist(),
+            "alloc_t": self.alloc_t.tolist(),
+            "free_t": self.free_t.tolist(),
+            "iteration": self.iteration.tolist(),
+            "phase": self.phase.tolist(),
+            "op": self.op.tolist(),
+            "scope": self.scope.tolist(),
+            "block_kind": self.block_kind.tolist(),
+            "shard_factor": self.shard_factor.tolist(),
+            "op_table": self.op_table,
+            "scope_table": self.scope_table,
+            "shape": self.shape.tolist(),
+            "shape_table": _shape_table_to_json(self.shape_table),
+        }
+
+    @staticmethod
+    def from_json(d: dict) -> "ColumnarBlocks":
+        return ColumnarBlocks(
+            np.asarray(d["block_id"], dtype=np.int64),
+            np.asarray(d["size"], dtype=np.int64),
+            np.asarray(d["alloc_t"], dtype=np.int64),
+            np.asarray(d["free_t"], dtype=np.int64),
+            np.asarray(d["iteration"], dtype=np.int64),
+            np.asarray(d["phase"], dtype=np.uint8),
+            np.asarray(d["op"], dtype=np.int32),
+            np.asarray(d["scope"], dtype=np.int32),
+            np.asarray(d["block_kind"], dtype=np.uint8),
+            np.asarray(d["shard_factor"], dtype=np.float64),
+            list(d["op_table"]), list(d["scope_table"]),
+            np.asarray(d["shape"], dtype=np.int32),
+            _shape_table_from_json(d.get("shape_table")))
+
 
 def sharded_sizes_array(size: np.ndarray, shard: np.ndarray) -> np.ndarray:
     """Vectorized ``BlockLifecycle.sharded_size`` — the one place the

@@ -294,42 +294,48 @@ def iter_cells():
 # ---------------------------------------------------------------------------
 def xmem_gate(arch: str, hbm_gib: float = 0.25, seq: int = 64,
               batches: tuple = (1, 2, 4, 8, 12, 16, 24, 32, 48, 64),
-              out_dir: str = "artifacts/dryrun") -> dict:
+              out_dir: str = "artifacts/dryrun", microbatches: int = 1,
+              service=None, store_dir: str | None = None) -> dict:
     """Estimator-side admission gate for a dry-run cell family: sweep
-    the candidate batch sizes through ``SweepService.estimate_many``
-    (columnar trace interpolation + vectorized replay) BEFORE paying any
-    XLA compile, and record which settings fit the device. Smoke-scale
-    configs keep this runnable anywhere; the full-scale dry-run then
-    only compiles settings the gate admits."""
+    the candidate batch sizes through the admission service's batched
+    path (``AdmissionService.decide_sweep`` -> columnar trace
+    interpolation + vectorized replay) BEFORE paying any XLA compile,
+    and record which settings fit the device. Smoke-scale configs keep
+    this runnable anywhere; the full-scale dry-run then only compiles
+    settings the gate admits. With gradient accumulation the candidate
+    grid snaps to multiples of ``microbatches`` (non-divisible batches
+    cannot even be traced — ``_split_microbatches`` asserts)."""
     from ..configs import get_smoke
     from ..configs.base import smoke_shape
     from ..configs.registry import input_specs
-    from ..core.estimator import XMemEstimator
-    from ..core.sweep import SweepPoint, SweepService
     from ..models import model as M
+    from ..service import AdmissionRequest, AdmissionService
     from ..train import TrainPolicy, make_estimator_hooks
 
+    if service is not None and store_dir is not None:
+        raise ValueError("pass either service= or store_dir=, not both "
+                         "(a provided service keeps its own store)")
     cfg = get_smoke(arch)
-    tpolicy = TrainPolicy(optimizer="adamw", microbatches=1)
+    m = max(int(microbatches), 1)
+    batches = tuple(b for b in batches if b % m == 0) or (m,)
+    tpolicy = TrainPolicy(optimizer="adamw", microbatches=m)
     fwd_bwd, update, opt_init = make_estimator_hooks(cfg, tpolicy)
     params = M.abstract_params(cfg)
-    svc = SweepService(XMemEstimator.for_tpu())
-    points = [SweepPoint(
-        fwd_bwd, params,
-        input_specs(cfg, smoke_shape(seq_len=seq, global_batch=b)),
-        update_fn=update, opt_init_fn=opt_init) for b in batches]
-    result = svc.estimate_many(points)
+    svc = service or AdmissionService(workers=1, store_dir=store_dir)
     hbm = int(hbm_gib * 2**30)
+    reqs = [AdmissionRequest(
+        job_id=f"{cfg.name}-b{b}", fwd_bwd_fn=fwd_bwd, params=params,
+        batch=input_specs(cfg, smoke_shape(seq_len=seq, global_batch=b)),
+        update_fn=update, opt_init_fn=opt_init, capacity=hbm)
+        for b in batches]
+    decisions = svc.decide_sweep(reqs)
     record = {
         "arch": cfg.name, "kind": "xmem_gate", "hbm_bytes": hbm,
-        "seq": seq,
-        "sweep": {k: result.stats[k] for k in
-                  ("points", "traced", "interpolated", "fallback",
-                   "wall_s")},
+        "seq": seq, "microbatches": m,
+        "sweep": decisions[0].provenance["sweep"] if decisions else {},
         "settings": [
-            {"batch": b, "peak_bytes": rep.peak_bytes,
-             "fits": rep.fits(hbm)}
-            for b, rep in zip(batches, result.reports)],
+            {"batch": b, "peak_bytes": d.peak_bytes, "fits": d.admit}
+            for b, d in zip(batches, decisions)],
     }
     record["admitted"] = [s["batch"] for s in record["settings"]
                           if s["fits"]]
@@ -410,6 +416,9 @@ def main():
     ap.add_argument("--hbm-gib", type=float, default=0.25,
                     help="capacity budget for --xmem-gate/"
                          "--xmem-mesh-gate (smoke scale)")
+    ap.add_argument("--microbatches", type=int, default=1,
+                    help="gradient-accumulation factor for --xmem-gate "
+                         "(the candidate grid snaps to its multiples)")
     args = ap.parse_args()
 
     if args.xmem_mesh_gate:
@@ -426,13 +435,13 @@ def main():
 
     if args.xmem_gate:
         r = xmem_gate(args.xmem_gate, hbm_gib=args.hbm_gib,
-                      out_dir=args.out)
+                      out_dir=args.out, microbatches=args.microbatches)
         s = r["sweep"]
         print(f"[xmem-gate] {r['arch']}: admitted batches "
               f"{r['admitted']} of "
               f"{[x['batch'] for x in r['settings']]} "
-              f"({s['traced']} traced / {s['interpolated']} interpolated, "
-              f"{s['wall_s']*1e3:.0f} ms)")
+              f"({s['traced']} traced / {s['interpolated']} "
+              f"interpolated)")
         return
 
     meshes = (False, True) if (args.both_meshes or args.all) \

@@ -173,18 +173,26 @@ CELLS = {"A": cell_A, "B": cell_B, "C": cell_C}
 # ---------------------------------------------------------------------------
 def xmem_batch_hillclimb(arch: str, hbm_bytes: int, seq: int = 64,
                          max_batch: int = 512, smoke: bool = True,
-                         verbose: bool = True) -> dict:
+                         verbose: bool = True,
+                         microbatches: int = 1) -> dict:
     """Estimator-driven batch-size search: the memory-gate workload the
     estimation fast path exists for (ISSUE 1, re-based on the sweep
     service in ISSUE 2).
 
-    The doubling grid 1, 2, 4, ... max_batch is handed to
-    ``SweepService.estimate_many`` as one batch: three probe batches are
-    traced for real, the rest are synthesized from the columnar affine
-    trace model (with per-point exactness checks) and replayed through
-    the vectorized engine. The largest fitting batch wins and its exact
-    minimum feasible capacity comes from the single instrumented replay
+    The doubling grid is handed to ``SweepService.estimate_many`` as one
+    batch: three probe batches are traced for real, the rest are
+    synthesized from the columnar affine trace model (with per-point
+    exactness checks) and replayed through the vectorized engine. The
+    largest fitting batch wins and its exact minimum feasible capacity
+    comes from the single instrumented replay
     (``min_feasible_capacity``) — no per-capacity ``would_oom`` sweep.
+
+    With gradient accumulation (``microbatches > 1``) every probed
+    batch — including the sweep service's min/median/max probes and any
+    repair probe, which are all drawn from this grid — must divide by
+    the accumulation factor (``_split_microbatches`` asserts it), so
+    the grid is snapped to multiples of ``microbatches``: it starts at
+    the factor itself and doubles from there.
     """
     from ..configs import get_config, get_smoke
     from ..configs.base import smoke_shape
@@ -195,16 +203,19 @@ def xmem_batch_hillclimb(arch: str, hbm_bytes: int, seq: int = 64,
     from ..train import TrainPolicy, make_estimator_hooks
 
     cfg = get_smoke(arch) if smoke else get_config(arch)
-    policy = TrainPolicy(optimizer="adamw", microbatches=1)
+    m = max(int(microbatches), 1)
+    policy = TrainPolicy(optimizer="adamw", microbatches=m)
     fwd_bwd, update, opt_init = make_estimator_hooks(cfg, policy)
     params = M.abstract_params(cfg)
     est = XMemEstimator.for_tpu()
     svc = SweepService(est)            # hooks are closures: inline service
     grid = []
-    b = 1
+    b = m                              # snapped: every entry divides by m
     while b <= max_batch:
         grid.append(b)
         b *= 2
+    if not grid:
+        grid = [m]
     points = [SweepPoint(
         fwd_bwd, params,
         input_specs(cfg, smoke_shape(seq_len=seq, global_batch=gb)),
@@ -224,6 +235,7 @@ def xmem_batch_hillclimb(arch: str, hbm_bytes: int, seq: int = 64,
         if fits and (best is None or gb > best[0]):
             best = (gb, rep)
     out = {"arch": cfg.name, "hbm_bytes": hbm_bytes, "probes": probes,
+           "microbatches": m,
            "sweep": {k: result.stats[k] for k in
                      ("points", "traced", "interpolated", "fallback",
                       "wall_s")}}
@@ -317,6 +329,9 @@ def main():
     ap.add_argument("--hbm-gib", type=float, default=0.25,
                     help="capacity budget for --xmem-batch/--xmem-mesh "
                          "(smoke scale)")
+    ap.add_argument("--microbatches", type=int, default=1,
+                    help="gradient-accumulation factor for --xmem-batch "
+                         "(the sweep grid snaps to its multiples)")
     args = ap.parse_args()
     if args.xmem_mesh:
         devices = tuple(int(d) for d in args.devices.split(","))
@@ -331,7 +346,8 @@ def main():
         return
     if args.xmem_batch:
         r = xmem_batch_hillclimb(args.xmem_batch,
-                                 int(args.hbm_gib * 2**30))
+                                 int(args.hbm_gib * 2**30),
+                                 microbatches=args.microbatches)
         os.makedirs(args.out, exist_ok=True)
         path = os.path.join(args.out, f"xmem_batch__{args.xmem_batch}.json")
         with open(path, "w") as f:

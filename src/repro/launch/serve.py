@@ -1,8 +1,16 @@
 """Serving driver: batched prefill + decode with xMem cache budgeting.
 
 Before allocating KV caches, the xMem serving estimator sizes the peak
-(params + caches + decode transients) so the server picks the largest
-batch that fits — the serving analogue of the training admission gate.
+so the server picks the largest batch that fits — the serving analogue
+of the training admission gate. The gate covers BOTH serving phases:
+the prefill peak (full-prompt forward with the cache resident) and the
+decode-step peak. Gating on the decode step alone — the original bug —
+admits batches that OOM during prefill, before a single token decodes.
+
+Estimates route through the admission service
+(:mod:`repro.service.admission`), so repeated gate decisions are warm
+(content-addressed trace cache) and, with ``--store-dir``, survive
+restarts.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-32b --smoke \
       --max-len 64 --tokens 16
@@ -16,31 +24,88 @@ import jax
 import jax.numpy as jnp
 
 from ..configs import get_config, get_smoke
-from ..core.estimator import XMemEstimator
 from ..models import model as M
+from ..train.train_step import make_prefill_step
 
 HBM_BYTES = 16 * 2**30
 
 
-def pick_batch(cfg, max_len: int, hbm_bytes: int, candidates=(64, 32, 16,
-                                                              8, 4, 2, 1)):
-    """Largest batch whose serving estimate fits (binary-search-free)."""
+def decode_input(cfg, b: int, abstract: bool = True):
+    """One-token decode batch for ``M.decode_step``."""
+    if abstract:
+        tok = lambda *sh: jax.ShapeDtypeStruct(sh, jnp.int32)  # noqa: E731
+    else:
+        tok = lambda *sh: jnp.zeros(sh, jnp.int32)             # noqa: E731
+    if cfg.family == "audio":
+        return {"codes": tok(b, 1, cfg.num_codebooks)}
+    return {"tokens": tok(b, 1)}
+
+
+def prompt_specs(cfg, b: int, seq: int) -> dict:
+    """Full-prompt prefill batch (no labels — serving, not training)."""
+    tok = lambda *sh: jax.ShapeDtypeStruct(sh, jnp.int32)  # noqa: E731
+    if cfg.family == "vlm":
+        P = cfg.num_patches
+        return {"patch_embeds": jax.ShapeDtypeStruct((b, P, cfg.d_model),
+                                                     cfg.dtype),
+                "tokens": tok(b, max(seq - P, 8))}
+    if cfg.family == "audio":
+        return {"codes": tok(b, seq, cfg.num_codebooks)}
+    return {"tokens": tok(b, seq)}
+
+
+def make_decode_fn(cfg):
+    def decode(params, cache, batch):
+        return M.decode_step(params, cache, batch, jnp.int32(0), cfg)
+    return decode
+
+
+def make_prefill_fn(cfg):
+    """(params, cache, batch) prefill wrapper: the KV cache rides along
+    as persistent state so the prefill estimate includes it."""
+    step = make_prefill_step(cfg)
+
+    def prefill(params, cache, batch):
+        return step(params, batch), cache
+    return prefill
+
+
+def pick_batch(cfg, max_len: int, hbm_bytes: int,
+               candidates=(64, 32, 16, 8, 4, 2, 1), service=None):
+    """Largest batch whose serving estimates fit (binary-search-free).
+
+    Gates on ``max(prefill, decode)`` peak. Returns ``(batch, gate)``
+    where ``gate`` holds the admitting prefill/decode decisions, or
+    ``(None, gate)`` — an explicit no-fit result — when no candidate
+    fits (including an empty candidate list or estimates that raise;
+    the last error is carried in ``gate["error"]``)."""
+    from ..service import AdmissionService
+    svc = service or AdmissionService(workers=1)
     params = M.abstract_params(cfg)
+    decode_fn = make_decode_fn(cfg)
+    prefill_fn = make_prefill_fn(cfg)
+    gate: dict = {"candidates": [], "error": None}
     for b in candidates:
         cache = jax.eval_shape(lambda: M.init_cache(cfg, b, max_len))
-        tok = {"tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32)} \
-            if cfg.family != "audio" else \
-            {"codes": jax.ShapeDtypeStruct((b, 1, cfg.num_codebooks),
-                                           jnp.int32)}
-
-        def decode(params, cache, batch):
-            return M.decode_step(params, cache, batch, jnp.int32(0), cfg)
-
-        rep = XMemEstimator.for_tpu().estimate_serving(
-            decode, params, cache, tok)
-        if rep.peak_bytes <= hbm_bytes:
-            return b, rep
-    return 1, rep
+        try:
+            dec = svc.decide_serving(
+                f"{cfg.name}-b{b}-decode", decode_fn, params, cache,
+                decode_input(cfg, b), capacity=hbm_bytes)
+            pre = svc.decide_serving(
+                f"{cfg.name}-b{b}-prefill", prefill_fn, params, cache,
+                prompt_specs(cfg, b, max_len), capacity=hbm_bytes)
+        except Exception as e:  # noqa: BLE001 — record, try a smaller batch
+            gate["error"] = f"{type(e).__name__}: {e}"
+            continue
+        peak = max(pre.peak_bytes, dec.peak_bytes)
+        gate["candidates"].append(
+            {"batch": b, "prefill_peak": pre.peak_bytes,
+             "decode_peak": dec.peak_bytes, "peak": peak,
+             "fits": peak <= hbm_bytes})
+        if peak <= hbm_bytes:
+            gate.update(batch=b, prefill=pre, decode=dec, peak=peak)
+            return b, gate
+    return None, gate
 
 
 def main():
@@ -50,14 +115,25 @@ def main():
     ap.add_argument("--max-len", type=int, default=64)
     ap.add_argument("--tokens", type=int, default=16)
     ap.add_argument("--hbm-gib", type=float, default=16.0)
+    ap.add_argument("--store-dir", default=None,
+                    help="persistent trace store for the serving gate")
     args = ap.parse_args()
 
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
-    batch, rep = pick_batch(cfg, args.max_len,
-                            int(args.hbm_gib * 2**30))
+    from ..service import AdmissionService
+    svc = AdmissionService(workers=1, store_dir=args.store_dir)
+    batch, gate = pick_batch(cfg, args.max_len,
+                             int(args.hbm_gib * 2**30), service=svc)
+    if batch is None:
+        err = f" ({gate['error']})" if gate.get("error") else ""
+        print(f"[xmem] no serving batch fits "
+              f"{args.hbm_gib:.2f} GiB{err} -> rejected")
+        return 2
     print(f"[xmem] serving batch={batch} "
-          f"(peak {rep.peak_bytes/2**20:.1f} MiB, "
-          f"est. {rep.wall_time_s*1e3:.0f} ms)")
+          f"(peak {gate['peak']/2**20:.1f} MiB = max(prefill "
+          f"{gate['prefill'].peak_bytes/2**20:.1f}, decode "
+          f"{gate['decode'].peak_bytes/2**20:.1f}); "
+          f"gate source {gate['decode'].provenance['source']})")
 
     params = M.init_params(cfg, jax.random.key(0))
     cache = M.init_cache(cfg, batch, args.max_len)
@@ -81,7 +157,8 @@ def main():
     dt = time.perf_counter() - t0
     print(f"decoded {args.tokens} tokens x batch {batch} in {dt:.2f}s "
           f"({args.tokens * batch / dt:.1f} tok/s)")
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    raise SystemExit(main())

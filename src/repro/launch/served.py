@@ -1,0 +1,188 @@
+"""Admission-service daemon: estimation-as-a-service over line JSON.
+
+The long-running form of the admission gate (ISSUE 4): a scheduler
+connects over TCP (newline-delimited JSON, one request per line) and
+gets a priori CPU-only admission decisions without ever touching an
+accelerator. The daemon shares one content-addressed trace cache across
+all connections and (with ``--store-dir``) persists traces to disk, so
+a restarted daemon answers repeat requests without re-tracing.
+
+  PYTHONPATH=src python -m repro.launch.served --port 7777 \
+      --store-dir /tmp/xmem-store --workers 2
+
+  # one-shot mode (no socket): read a single request from stdin
+  echo '{"kind":"train","arch":"qwen3-32b","smoke":true,"batch":8}' | \
+      PYTHONPATH=src python -m repro.launch.served --once
+
+Request kinds:
+
+* ``train`` — ``{"kind":"train","arch":...,"smoke":bool,"optimizer":
+  "adamw","microbatches":1,"clip_norm":1.0,"seq":64,"batch":8,
+  "hbm_gib":0.25,"probe_min_capacity":false}``
+* ``serve`` — ``{"kind":"serve","arch":...,"smoke":bool,"max_len":64,
+  "batch":8,"hbm_gib":0.25}`` (gates on max(prefill, decode))
+* ``stats`` / ``ping`` / ``shutdown``
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import socket
+import socketserver
+import sys
+import threading
+
+
+def build_train_request(d: dict):
+    """AdmissionRequest from a wire-level train-job description.
+    ``seq``/``batch`` are honored in both smoke and full-scale modes
+    (full-scale defaults come from TRAIN_4K when absent)."""
+    import dataclasses
+    from ..configs import get_config, get_smoke
+    from ..configs.base import smoke_shape, TRAIN_4K
+    from ..configs.registry import input_specs
+    from ..service import AdmissionRequest
+    from ..train import TrainPolicy, make_estimator_hooks
+
+    arch = d["arch"]
+    smoke = bool(d.get("smoke", True))
+    cfg = get_smoke(arch) if smoke else get_config(arch)
+    policy = TrainPolicy(
+        optimizer=d.get("optimizer", "adamw"),
+        microbatches=int(d.get("microbatches", 1)),
+        clip_norm=d.get("clip_norm", 1.0))
+    fwd_bwd, update, opt_init = make_estimator_hooks(cfg, policy)
+    if smoke:
+        shape = smoke_shape(int(d.get("seq", 64)), int(d.get("batch", 8)))
+    else:
+        shape = dataclasses.replace(
+            TRAIN_4K,
+            seq_len=int(d.get("seq", TRAIN_4K.seq_len)),
+            global_batch=int(d.get("batch", TRAIN_4K.global_batch)))
+    from ..models import model as M
+    return AdmissionRequest(
+        job_id=str(d.get("id", f"{arch}-b{shape.global_batch}")),
+        fwd_bwd_fn=fwd_bwd, params=M.abstract_params(cfg),
+        batch=input_specs(cfg, shape), update_fn=update,
+        opt_init_fn=opt_init,
+        capacity=int(float(d.get("hbm_gib", 16.0)) * 2**30),
+        probe_min_capacity=bool(d.get("probe_min_capacity", False)))
+
+
+def handle_request(service, d: dict) -> dict:
+    """One wire request -> one JSON-safe response dict."""
+    kind = d.get("kind", "train")
+    try:
+        if kind == "ping":
+            return {"ok": True, "pong": True}
+        if kind == "stats":
+            return {"ok": True, "stats": service.stats()}
+        if kind == "shutdown":
+            return {"ok": True, "shutdown": True}
+        if kind == "train":
+            decision = service.decide(build_train_request(d))
+            return {"ok": True, **decision.to_json()}
+        if kind == "serve":
+            from ..configs import get_config, get_smoke
+            from .serve import pick_batch
+            arch = d["arch"]
+            cfg = (get_smoke(arch) if d.get("smoke", True)
+                   else get_config(arch))
+            hbm = int(float(d.get("hbm_gib", 16.0)) * 2**30)
+            cand = (int(d["batch"]),) if "batch" in d \
+                else (64, 32, 16, 8, 4, 2, 1)
+            batch, gate = pick_batch(cfg, int(d.get("max_len", 64)),
+                                     hbm, candidates=cand, service=service)
+            resp = {"ok": True, "admit": batch is not None,
+                    "batch": batch, "candidates": gate["candidates"]}
+            if batch is not None:
+                resp.update(peak_bytes=gate["peak"],
+                            prefill_peak=gate["prefill"].peak_bytes,
+                            decode_peak=gate["decode"].peak_bytes,
+                            source=gate["decode"].provenance["source"])
+            elif gate.get("error"):
+                resp["error"] = gate["error"]
+            return resp
+        return {"ok": False, "error": f"unknown request kind {kind!r}"}
+    except Exception as e:  # noqa: BLE001 — a bad request must not kill the daemon
+        return {"ok": False, "error": f"{type(e).__name__}: {e}"}
+
+
+class _Handler(socketserver.StreamRequestHandler):
+    def handle(self):
+        for raw in self.rfile:
+            line = raw.strip()
+            if not line:
+                continue
+            try:
+                d = json.loads(line)
+            except ValueError as e:
+                resp = {"ok": False, "error": f"bad JSON: {e}"}
+            else:
+                resp = handle_request(self.server.service, d)
+            self.wfile.write((json.dumps(resp) + "\n").encode())
+            self.wfile.flush()
+            if resp.get("shutdown"):
+                threading.Thread(target=self.server.shutdown,
+                                 daemon=True).start()
+                return
+
+
+class AdmissionServer(socketserver.ThreadingTCPServer):
+    """Line-JSON TCP front of an :class:`AdmissionService`."""
+
+    allow_reuse_address = True
+    daemon_threads = True
+
+    def __init__(self, addr, service):
+        super().__init__(addr, _Handler)
+        self.service = service
+
+
+def request_once(host: str, port: int, d: dict, timeout: float = 60.0) -> dict:
+    """Client helper: one request/response round trip (used by tests
+    and the concurrent-client benchmark)."""
+    with socket.create_connection((host, port), timeout=timeout) as s:
+        f = s.makefile("rwb")
+        f.write((json.dumps(d) + "\n").encode())
+        f.flush()
+        return json.loads(f.readline())
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=7777)
+    ap.add_argument("--workers", type=int, default=2,
+                    help="service worker threads")
+    ap.add_argument("--store-dir", default=None,
+                    help="persistent trace store directory (content-"
+                         "addressed; traces survive daemon restarts)")
+    ap.add_argument("--store-max-entries", type=int, default=256)
+    ap.add_argument("--once", action="store_true",
+                    help="serve one request from stdin and exit")
+    args = ap.parse_args()
+
+    from ..service import AdmissionService
+    service = AdmissionService(workers=args.workers,
+                               store_dir=args.store_dir,
+                               store_max_entries=args.store_max_entries)
+    if args.once:
+        d = json.loads(sys.stdin.readline())
+        print(json.dumps(handle_request(service, d)))
+        return 0
+    with AdmissionServer((args.host, args.port), service) as server:
+        host, port = server.server_address[:2]
+        store = f", store={args.store_dir}" if args.store_dir else ""
+        print(f"[served] admission daemon on {host}:{port} "
+              f"({args.workers} workers{store})", flush=True)
+        try:
+            server.serve_forever()
+        except KeyboardInterrupt:
+            pass
+    service.close()
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

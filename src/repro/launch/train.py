@@ -35,47 +35,64 @@ HBM_BYTES = 16 * 2**30     # v5e
 
 def admission_check(cfg, policy: TrainPolicy, shape: ShapeSpec,
                     hbm_bytes: int = HBM_BYTES, shard_factor_fn=None,
-                    verbose: bool = True, est: XMemEstimator | None = None):
+                    verbose: bool = True, est: XMemEstimator | None = None,
+                    service=None):
     """xMem gate: estimate peak device memory a priori (CPU-only).
 
-    Pass ``est`` to amortize across repeated gate decisions — estimators
-    share the process-global trace cache, so a gate serving many jobs
-    (or a replan loop re-gating one job) skips re-tracing whenever the
-    job structure repeats (estimation fast path)."""
+    Decisions route through the admission service
+    (:mod:`repro.service.admission`): estimator hooks are re-created per
+    decision, but the content-addressed trace cache makes structurally
+    identical jobs warm (and, with a persistent store, warm across
+    process restarts). Pass ``service`` to amortize across repeated
+    gate decisions; ``est`` builds a one-off service around an existing
+    estimator's cache (back-compat)."""
+    from ..service import AdmissionRequest, AdmissionService
     fwd_bwd, update, opt_init = make_estimator_hooks(cfg, policy)
     from ..configs.registry import input_specs
     params = M.abstract_params(cfg)
     batch = input_specs(cfg, shape)
-    est = est or XMemEstimator.for_tpu()
-    rep = est.estimate_training(fwd_bwd, params, batch, update_fn=update,
-                                opt_init_fn=opt_init,
-                                shard_factor_fn=shard_factor_fn)
-    ok = rep.peak_bytes <= hbm_bytes
+    if service is None:
+        service = AdmissionService(
+            workers=1, cache=est.trace_cache if est is not None else None)
+    decision = service.decide(AdmissionRequest(
+        job_id=f"{cfg.name}/{shape.name}/mb{policy.microbatches}",
+        fwd_bwd_fn=fwd_bwd, params=params, batch=batch,
+        update_fn=update, opt_init_fn=opt_init,
+        shard_factor_fn=shard_factor_fn, capacity=hbm_bytes))
+    rep = decision.report
+    ok = decision.admit
     if verbose:
-        cs = rep.cache_stats
-        cache_note = (f", trace cache {cs['hits']}h/{cs['misses']}m"
-                      if cs else "")
+        tc = decision.provenance.get("trace_cache", {})
+        cache_note = (f", trace cache {tc.get('hits', 0)}h/"
+                      f"{tc.get('misses', 0)}m"
+                      f" [{decision.provenance['source']}]")
         print(f"[xmem] estimated peak {rep.peak_bytes/2**30:.2f} GiB "
               f"(persistent {rep.persistent_bytes/2**30:.2f}) vs HBM "
               f"{hbm_bytes/2**30:.0f} GiB -> "
               f"{'ADMIT' if ok else 'REJECT'} "
-              f"({rep.wall_time_s:.2f}s estimation{cache_note})")
+              f"({decision.wall_s:.2f}s estimation{cache_note})")
     return ok, rep
 
 
 def replan_if_needed(cfg, policy: TrainPolicy, shape, hbm_bytes,
-                     shard_factor_fn=None):
-    """Auto-replan: double microbatches until the estimate fits."""
+                     shard_factor_fn=None, service=None):
+    """Auto-replan: double microbatches until the estimate fits.
+
+    Doubling stops when the next factor would no longer divide the
+    global batch — ``_split_microbatches`` requires even splits, and a
+    non-divisible probe would crash the gate instead of re-gating."""
+    from ..service import AdmissionService
     p = policy
-    est = XMemEstimator.for_tpu()    # one estimator across the loop
+    service = service or AdmissionService(workers=1)  # warm across loop
     for _ in range(4):
         ok, rep = admission_check(cfg, p, shape, hbm_bytes,
-                                  shard_factor_fn, est=est)
+                                  shard_factor_fn, service=service)
         if ok:
             return p, rep
-        if shape.global_batch // (p.microbatches * 2) < 1:
+        nxt = p.microbatches * 2
+        if nxt > shape.global_batch or shape.global_batch % nxt:
             break
-        p = dataclasses.replace(p, microbatches=p.microbatches * 2)
+        p = dataclasses.replace(p, microbatches=nxt)
         print(f"[xmem] replanning: microbatches -> {p.microbatches}")
     return p, rep
 

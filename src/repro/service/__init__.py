@@ -1,0 +1,24 @@
+"""Estimation-as-a-service subsystem (ISSUE 4).
+
+The paper's point is that a-priori CPU-only estimates let a cluster
+scheduler make admission decisions without burning GPU time. This
+package turns the one-shot estimator into that scheduler-facing
+service:
+
+* :mod:`repro.service.store` — disk-backed, content-addressed trace
+  store layered under ``core/cache.py`` (schema-v3 columnar payloads,
+  LRU + version invalidation) so warm estimates survive process
+  restarts and are shared across workers;
+* :mod:`repro.service.admission` — ``AdmissionRequest`` ->
+  ``AdmissionDecision`` over a worker pool that reuses ``SweepService``;
+* :mod:`repro.service.cluster` — a cluster-admission simulator that
+  replays a job-arrival trace through the service and scores
+  OOM/underutilization outcomes with the ``core/metrics.py`` two-round
+  machinery;
+* ``repro.launch.served`` — the line-JSON TCP daemon exposing the
+  service to schedulers.
+"""
+from .admission import (AdmissionDecision, AdmissionRequest,  # noqa: F401
+                        AdmissionService)
+from .cluster import ClusterSimulator, JobArrival  # noqa: F401
+from .store import TraceStore  # noqa: F401

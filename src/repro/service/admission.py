@@ -1,0 +1,286 @@
+"""Admission service: request/response estimation over a worker pool.
+
+The scheduler-facing API of the estimator (ISSUE 4 tentpole). An
+:class:`AdmissionRequest` names one training (or serving) job by the
+exact callables the runtime would execute; the service answers with an
+:class:`AdmissionDecision` carrying the estimate, the safe threshold
+(Eq. 5: the estimate usable as max-runnable-memory), the per-device
+breakdown and cache provenance (memory-warm / disk-warm / traced).
+
+Estimates are produced by the same ``XMemEstimator`` pipeline as the
+one-shot CLIs — the equivalence test pins the service bit-identical to
+direct calls. What the service adds:
+
+* a shared thread-safe :class:`~repro.core.cache.TraceCache`, optionally
+  layered over a persistent :class:`~repro.service.store.TraceStore`
+  (content-addressed keys, so re-created but structurally identical
+  step functions are warm — across decisions AND process restarts);
+* concurrent serving: ``submit`` fans decisions out over a thread pool,
+  one estimator per worker thread (the orchestrator mutates per-call
+  policy state, so estimator instances are not shared across threads;
+  the trace cache is);
+* batched decisions: ``decide_sweep`` routes a family of requests that
+  differ in one scalar (the batch-size admission sweep) through
+  ``SweepService.estimate_many`` — probe traces + affine interpolation
+  + vectorized replay instead of N full estimates.
+"""
+from __future__ import annotations
+
+import copy
+import dataclasses
+import threading
+import time
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import Any, Callable, Sequence
+
+from ..core.cache import GLOBAL_TRACE_CACHE, TraceCache
+from ..core.estimator import EstimateReport, XMemEstimator
+from ..core.sweep import SweepPoint, SweepService
+
+
+@dataclasses.dataclass
+class AdmissionRequest:
+    """One job to gate: the ``estimate_training`` argument tuple plus
+    the device capacity the scheduler would place it on."""
+
+    job_id: str
+    fwd_bwd_fn: Callable
+    params: Any
+    batch: Any
+    update_fn: Callable | None = None
+    opt_init_fn: Callable | None = None
+    shard_factor_fn: Callable | None = None
+    collective_specs: Sequence = ()
+    capacity: int = 16 * 2**30          # device HBM bytes
+    probe_min_capacity: bool = False    # also compute min feasible capacity
+    meta: dict = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass
+class AdmissionDecision:
+    """The service's answer. ``safe_threshold`` is the estimate itself —
+    the value round 2 of the paper's protocol validates as a max-
+    runnable-memory cap (Eq. 5). ``provenance["source"]`` records where
+    stage 1 came from: "memory" (warm cache), "disk" (persistent store
+    after a restart), or "traced" (cold)."""
+
+    job_id: str
+    admit: bool
+    capacity: int
+    peak_bytes: int
+    peak_tensor_bytes: int
+    persistent_bytes: int
+    safe_threshold: int
+    breakdown: dict
+    provenance: dict
+    wall_s: float
+    min_feasible_capacity: int | None = None
+    report: EstimateReport | None = None     # full report (in-process use)
+
+    def to_json(self) -> dict:
+        d = {k: getattr(self, k) for k in (
+            "job_id", "admit", "capacity", "peak_bytes",
+            "peak_tensor_bytes", "persistent_bytes", "safe_threshold",
+            "provenance", "wall_s", "min_feasible_capacity")}
+        d["breakdown"] = {k: v for k, v in self.breakdown.items()
+                          if k in ("phase_peaks", "num_blocks",
+                                   "liveness_peak")}
+        return d
+
+
+def _provenance(cache: TraceCache | None, before: dict) -> dict:
+    """Provenance from the calling thread's OWN counter deltas —
+    concurrent decisions on other threads do not bleed into this
+    request's hits/misses (``TraceCache.thread_stats``)."""
+    if cache is None:
+        return {"source": "traced", "trace_cache": {}}
+    after = cache.thread_stats()
+    hits = after["hits"] - before["hits"]
+    misses = after["misses"] - before["misses"]
+    store_hits = after["store_hits"] - before["store_hits"]
+    source = ("traced" if misses else
+              "disk" if store_hits else "memory")
+    return {"source": source,
+            "trace_cache": {"hits": hits, "misses": misses,
+                            "store_hits": store_hits}}
+
+
+class AdmissionService:
+    """Long-running estimation service (see module docstring).
+
+    ``store_dir`` enables the persistent trace store; ``workers`` sizes
+    the thread pool behind ``submit``; ``processes`` is forwarded to the
+    underlying ``SweepService`` replay fan-out.
+    """
+
+    def __init__(self, estimator_factory: Callable[..., XMemEstimator]
+                 | None = None, *, store_dir: str | None = None,
+                 workers: int = 2, processes: int = 0,
+                 cache: TraceCache | None = None,
+                 store_max_entries: int = 256):
+        self._factory = estimator_factory or XMemEstimator.for_tpu
+        store = None
+        if store_dir is not None:
+            from .store import TraceStore
+            store = TraceStore(store_dir, max_entries=store_max_entries)
+        if cache is not None and store is not None:
+            # attaching the service's store to a caller-owned (possibly
+            # process-global) cache would silently make every estimator
+            # in the process disk-backed — refuse instead
+            raise ValueError(
+                "pass either cache= (bring your own, optionally with its "
+                "own store) or store_dir=, not both")
+        if cache is not None:
+            self.cache = cache
+        elif store is not None:
+            self.cache = TraceCache(store=store)
+        else:
+            # no explicit cache/store: share the process-global cache so
+            # one-off service instances (per-gate construction) stay warm
+            self.cache = GLOBAL_TRACE_CACHE
+        self.workers = max(int(workers), 1)
+        self._pool: ThreadPoolExecutor | None = None
+        self._tls = threading.local()
+        self._lock = threading.Lock()
+        # decide_sweep runs on ONE estimator (SweepService is stateful)
+        # — serialize it; decide()/submit() stay concurrent
+        self._sweep_lock = threading.Lock()
+        self.requests_served = 0
+        self.sweep = SweepService(self._make_estimator(),
+                                  processes=processes)
+
+    # -- estimator plumbing --------------------------------------------------
+    def _make_estimator(self) -> XMemEstimator:
+        est = self._factory(trace_cache=self.cache)
+        if est.trace_cache is not self.cache:
+            raise ValueError("admission service needs a fastpath "
+                             "estimator sharing the service cache")
+        return est
+
+    @property
+    def estimator(self) -> XMemEstimator:
+        """Per-thread estimator over the shared trace cache."""
+        est = getattr(self._tls, "est", None)
+        if est is None:
+            est = self._tls.est = self._make_estimator()
+        return est
+
+    def _get_pool(self) -> ThreadPoolExecutor:
+        with self._lock:
+            if self._pool is None:
+                self._pool = ThreadPoolExecutor(
+                    max_workers=self.workers,
+                    thread_name_prefix="xmem-admit")
+            return self._pool
+
+    def close(self) -> None:
+        with self._lock:
+            pool, self._pool = self._pool, None
+        if pool is not None:
+            pool.shutdown()
+        self.sweep.close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+    # -- decisions -----------------------------------------------------------
+    def decide(self, req: AdmissionRequest) -> AdmissionDecision:
+        """Synchronous decision for one request."""
+        t0 = time.perf_counter()
+        est = self.estimator
+        cache = est.trace_cache
+        before = cache.thread_stats()
+        rep = est.estimate_training(
+            req.fwd_bwd_fn, req.params, req.batch,
+            update_fn=req.update_fn, opt_init_fn=req.opt_init_fn,
+            shard_factor_fn=req.shard_factor_fn,
+            collective_specs=req.collective_specs)
+        min_cap = None
+        if req.probe_min_capacity:
+            min_cap = est.min_feasible_capacity(
+                req.fwd_bwd_fn, req.params, req.batch, report=rep)
+        with self._lock:
+            self.requests_served += 1
+        return self._decision(req, rep, _provenance(cache, before),
+                              time.perf_counter() - t0, min_cap)
+
+    def decide_serving(self, job_id: str, decode_fn: Callable, params,
+                       cache_tree, batch, *, capacity: int,
+                       shard_factor_fn=None) -> AdmissionDecision:
+        """Single-phase serving decision (decode / prefill step with a
+        persistent KV cache) — the ``launch/serve.py`` gate."""
+        t0 = time.perf_counter()
+        est = self.estimator
+        cache = est.trace_cache
+        before = cache.thread_stats()
+        rep = est.estimate_serving(decode_fn, params, cache_tree, batch,
+                                   shard_factor_fn=shard_factor_fn)
+        req = AdmissionRequest(job_id, decode_fn, params, batch,
+                               capacity=capacity)
+        with self._lock:
+            self.requests_served += 1
+        return self._decision(req, rep, _provenance(cache, before),
+                              time.perf_counter() - t0, None)
+
+    def _decision(self, req: AdmissionRequest, rep: EstimateReport,
+                  provenance: dict, wall_s: float,
+                  min_cap: int | None) -> AdmissionDecision:
+        return AdmissionDecision(
+            job_id=req.job_id,
+            admit=rep.peak_bytes <= req.capacity,
+            capacity=req.capacity,
+            peak_bytes=rep.peak_bytes,
+            peak_tensor_bytes=rep.peak_tensor_bytes,
+            persistent_bytes=rep.persistent_bytes,
+            safe_threshold=rep.peak_bytes,
+            breakdown=rep.breakdown,
+            provenance=provenance,
+            wall_s=wall_s,
+            min_feasible_capacity=min_cap,
+            report=rep)
+
+    def submit(self, req: AdmissionRequest) -> "Future[AdmissionDecision]":
+        """Concurrent decision: runs on the service's worker pool."""
+        return self._get_pool().submit(self.decide, req)
+
+    def decide_many(self, reqs: Sequence[AdmissionRequest]
+                    ) -> list[AdmissionDecision]:
+        """Fan a batch of independent requests over the worker pool."""
+        return [f.result() for f in [self.submit(r) for r in reqs]]
+
+    def decide_sweep(self, reqs: Sequence[AdmissionRequest]
+                     ) -> list[AdmissionDecision]:
+        """Batched decisions through ``SweepService.estimate_many`` —
+        requests sharing structure (a batch-size admission sweep) pay
+        three probe traces, the rest interpolate."""
+        t0 = time.perf_counter()
+        cache = self.cache
+        points = [SweepPoint(
+            r.fwd_bwd_fn, r.params, r.batch, update_fn=r.update_fn,
+            opt_init_fn=r.opt_init_fn, shard_factor_fn=r.shard_factor_fn,
+            collective_specs=r.collective_specs, label=r.job_id)
+            for r in reqs]
+        with self._sweep_lock:
+            before = cache.thread_stats()
+            result = self.sweep.estimate_many(points)
+            prov = _provenance(cache, before)
+        prov["sweep"] = {k: result.stats[k] for k in
+                         ("points", "traced", "interpolated", "fallback",
+                          "pooled")}
+        # per-decision wall_s is the AMORTIZED share of the batched
+        # sweep (summing per-job costs must not over-count the sweep N
+        # times); each decision gets its own provenance copy so callers
+        # mutating one cannot alter siblings
+        wall = (time.perf_counter() - t0) / max(len(reqs), 1)
+        with self._lock:
+            self.requests_served += len(reqs)
+        return [self._decision(r, rep, copy.deepcopy(prov), wall, None)
+                for r, rep in zip(reqs, result.reports)]
+
+    def stats(self) -> dict:
+        return {"requests_served": self.requests_served,
+                "workers": self.workers,
+                "trace_cache": self.cache.stats()}

@@ -1,0 +1,122 @@
+"""Cluster-admission simulator: replay a job-arrival trace through the
+admission service and score outcomes (ISSUE 4 tentpole).
+
+The paper validates estimates with a two-round protocol (§4.1.4): round
+1 checks the OOM prediction on a full-capacity device (Eq. 1/4), round 2
+re-runs with max runnable memory = the estimate (Eq. 5) and scores the
+memory conserved (Eq. 7/8). This module replays a synthetic cluster's
+arrival trace through :class:`~repro.service.admission.AdmissionService`
+and aggregates exactly those metrics via ``core/metrics.py`` — the
+scheduler-integration experiment a GPU cluster would run, done entirely
+on CPU.
+
+Each :class:`JobArrival` carries the job's callables, the capacity of
+the device the scheduler would place it on, and optionally the "true"
+peak (an oracle measurement, or a perturbed estimate for sensitivity
+studies). Without a truth the estimator is scored against itself —
+useful for exercising the admission logic (OOM rejections,
+underutilization accounting) deterministically.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Sequence
+
+from ..core import metrics
+from .admission import AdmissionDecision, AdmissionRequest, AdmissionService
+
+
+@dataclasses.dataclass
+class JobArrival:
+    """One job in the arrival trace."""
+
+    job_id: str
+    fwd_bwd_fn: Callable
+    params: Any
+    batch: Any
+    update_fn: Callable | None = None
+    opt_init_fn: Callable | None = None
+    capacity: int = 16 * 2**30
+    truth_bytes: int | None = None      # oracle peak; None -> estimate
+    family: str = "workload"
+    device: str = "sim"
+    arrival_s: float = 0.0
+
+    def request(self) -> AdmissionRequest:
+        return AdmissionRequest(
+            self.job_id, self.fwd_bwd_fn, self.params, self.batch,
+            update_fn=self.update_fn, opt_init_fn=self.opt_init_fn,
+            capacity=self.capacity)
+
+
+@dataclasses.dataclass
+class ClusterOutcome:
+    """Decisions + two-round records + headline summary."""
+
+    decisions: list[AdmissionDecision]
+    records: list[metrics.RunRecord]
+    summary: dict
+
+    def __iter__(self):
+        return iter(zip(self.decisions, self.records))
+
+
+class ClusterSimulator:
+    """Replays arrivals through a service and scores the outcomes."""
+
+    def __init__(self, service: AdmissionService,
+                 truth_fn: Callable[[AdmissionDecision], int] | None = None):
+        self.service = service
+        self.truth_fn = truth_fn
+
+    def replay(self, arrivals: Sequence[JobArrival]) -> ClusterOutcome:
+        t0 = time.perf_counter()
+        decisions: list[AdmissionDecision] = []
+        records: list[metrics.RunRecord] = []
+        for job in arrivals:
+            d = self.service.decide(job.request())
+            truth = job.truth_bytes
+            if truth is None and self.truth_fn is not None:
+                truth = self.truth_fn(d)
+            if truth is None:
+                truth = d.peak_bytes
+            decisions.append(d)
+            records.append(metrics.RunRecord(
+                config=job.job_id, family=job.family,
+                estimator="admission_service", device=job.device,
+                capacity=job.capacity, estimate=d.peak_bytes,
+                truth=int(truth), runtime_s=d.wall_s))
+        wall = time.perf_counter() - t0
+        summary = score(records)
+        summary.update(
+            wall_s=wall,
+            requests_per_s=(len(arrivals) / wall if wall > 0
+                            and arrivals else 0.0))
+        return ClusterOutcome(decisions, records, summary)
+
+
+def score(records: Sequence[metrics.RunRecord]) -> dict:
+    """Two-round scoring of an admission run (Eq. 3/6/8 plus scheduler
+    outcome counts). ``oom_admitted`` are round-1 failures where the
+    service admitted a job whose true peak exceeds the device
+    (catastrophic for a scheduler); ``underutilized_rejected`` are jobs
+    the service bounced although they would have fit (wasted capacity);
+    ``round2_oom`` are admitted jobs whose true peak exceeds the
+    estimate-as-threshold (Eq. 5 failures)."""
+    admitted = [r for r in records if not r.oom_pred]
+    rejected = [r for r in records if r.oom_pred]
+    return {
+        "jobs": len(records),
+        "admitted": len(admitted),
+        "rejected": len(rejected),
+        "oom_admitted": sum(1 for r in admitted if r.oom_actual),
+        "underutilized_rejected": sum(
+            1 for r in rejected if not r.oom_actual),
+        "round2_oom": sum(1 for r in admitted
+                          if not r.oom_actual and r.oom_round2),
+        "mre": metrics.mre(records),
+        "pef": metrics.pef(records),
+        "mcp_gb": metrics.mcp(records) / 1e9 if records else 0.0,
+        "mean_runtime_s": metrics.mean_runtime(records),
+    }

@@ -1,0 +1,283 @@
+"""Disk-backed, content-addressed trace store (ISSUE 4 tentpole).
+
+Layered *under* ``core/cache.py``: a :class:`~repro.core.cache.TraceCache`
+constructed with ``store=TraceStore(dir)`` looks content-addressed keys
+up on disk after a memory miss and writes fresh traces through, so warm
+estimates survive process restarts and are shared across workers (the
+admission daemon's workers, sweep pool parents, separate gate
+processes).
+
+On-disk format: one JSON file per entry, named by the stable sha256 of
+the full trace key (function content digest + avals + treedefs + kinds +
+scan cap + phase + tag — see ``cache.stable_key_digest``). The payload
+is the schema-v3 **columnar** trace format (``ColumnarTrace`` /
+``ColumnarBlocks`` ``to_json``, shape tables included), plus the
+input/output block summaries, the abstract output pytree and the
+memoized coupling verdict. ``closed_jaxpr`` is never persisted — the
+coupling verdict is resolved *before* writing (exactly like sweep pool
+payloads), so a restored update phase needs no jaxpr.
+
+Invalidation: every file records ``store_version`` and the trace schema
+version; a mismatch on load deletes the file and reports a miss. LRU:
+the store keeps at most ``max_entries`` files, evicting by mtime (loads
+touch the file's mtime, so recently served entries survive).
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+import threading
+import time
+
+import numpy as np
+
+from ..core.cache import BlockInfo, TracedPhase, stable_key_digest
+from ..core.events import (BlockKind, ColumnarBlocks, ColumnarTrace, Trace,
+                           TRACE_SCHEMA_VERSION)
+
+#: Bump to invalidate every persisted entry (payload layout changes).
+STORE_VERSION = 1
+
+_PREFIX = "xm_"
+
+
+class StoreUnserializable(Exception):
+    """Entry contains values the store cannot round-trip losslessly."""
+
+
+# -- abstract output pytree <-> JSON -----------------------------------------
+def _tree_to_json(tree):
+    """Serialize an abstract output pytree built from dicts / tuples /
+    lists / None with ShapeDtypeStruct-like leaves. Anything else raises
+    ``StoreUnserializable`` (the entry is then simply not persisted)."""
+    if tree is None:
+        return {"t": "none"}
+    if isinstance(tree, dict):
+        items = []
+        for k, v in tree.items():
+            if isinstance(k, str):
+                kj = ["s", k]
+            elif isinstance(k, int):
+                kj = ["i", k]
+            else:
+                raise StoreUnserializable(f"dict key {k!r}")
+            items.append([kj, _tree_to_json(v)])
+        return {"t": "dict", "items": items}
+    if isinstance(tree, tuple):
+        return {"t": "tuple", "items": [_tree_to_json(v) for v in tree]}
+    if isinstance(tree, list):
+        return {"t": "list", "items": [_tree_to_json(v) for v in tree]}
+    shape = getattr(tree, "shape", None)
+    dtype = getattr(tree, "dtype", None)
+    if shape is not None and dtype is not None:
+        return {"t": "leaf", "shape": [int(d) for d in shape],
+                "dtype": str(dtype)}
+    raise StoreUnserializable(f"pytree node {type(tree)!r}")
+
+
+def _tree_from_json(d):
+    import jax
+    t = d["t"]
+    if t == "none":
+        return None
+    if t == "dict":
+        out = {}
+        for (kt, k), vj in d["items"]:
+            out[k if kt == "s" else int(k)] = _tree_from_json(vj)
+        return out
+    if t == "tuple":
+        return tuple(_tree_from_json(v) for v in d["items"])
+    if t == "list":
+        return [_tree_from_json(v) for v in d["items"]]
+    return jax.ShapeDtypeStruct(tuple(d["shape"]), np.dtype(d["dtype"]))
+
+
+def _blocks_to_json(blocks) -> list:
+    return [[b.bid, b.size, b.kind.value,
+             None if b.shape is None else list(b.shape)] for b in blocks]
+
+
+def _blocks_from_json(rows) -> tuple:
+    return tuple(BlockInfo(int(bid), int(size), BlockKind(kind),
+                           None if shape is None else tuple(shape))
+                 for bid, size, kind, shape in rows)
+
+
+def phase_to_json(entry: TracedPhase) -> dict:
+    """Payload dict for one ``TracedPhase`` (coupling must already be
+    resolved for update phases — the store does that in ``save``)."""
+    meta = {k: v for k, v in entry.trace.meta.items() if k != "_columns"}
+    try:
+        json.dumps(meta)
+    except (TypeError, ValueError):
+        meta = {}
+    return {
+        "trace": {
+            "columns": entry.trace.columnar().to_json(),
+            "num_iterations": entry.trace.num_iterations,
+            "meta": meta,
+        },
+        "lifecycles": ColumnarBlocks.from_lifecycles(
+            entry.lifecycles).to_json(),
+        "input_blocks": _blocks_to_json(entry.input_blocks),
+        "output_blocks": _blocks_to_json(entry.output_blocks),
+        "out_shape": _tree_to_json(entry.out_shape),
+        "arg_leaf_counts": list(entry.arg_leaf_counts),
+        "coupling": entry.coupling,
+    }
+
+
+def phase_from_json(d: dict) -> TracedPhase:
+    trace = Trace.from_columnar(
+        ColumnarTrace.from_json(d["trace"]["columns"]),
+        num_iterations=d["trace"]["num_iterations"],
+        meta=d["trace"].get("meta", {}))
+    return TracedPhase(
+        trace=trace,
+        lifecycles=tuple(
+            ColumnarBlocks.from_json(d["lifecycles"]).to_lifecycles()),
+        input_blocks=_blocks_from_json(d["input_blocks"]),
+        output_blocks=_blocks_from_json(d["output_blocks"]),
+        out_shape=_tree_from_json(d["out_shape"]),
+        closed_jaxpr=None,          # never persisted
+        arg_leaf_counts=tuple(d["arg_leaf_counts"]),
+        coupling=d.get("coupling"),
+    )
+
+
+class TraceStore:
+    """Content-addressed persistent trace store (see module docstring).
+
+    Duck-typed for ``TraceCache(store=...)``: ``load(key)``,
+    ``save(key, entry)``, ``stats()``.
+    """
+
+    def __init__(self, directory: str, max_entries: int = 256):
+        self.directory = directory
+        self.max_entries = max_entries
+        self._lock = threading.RLock()
+        self.loads = 0
+        self.saves = 0
+        self.load_misses = 0
+        self.invalidated = 0
+        os.makedirs(directory, exist_ok=True)
+
+    # -- paths ---------------------------------------------------------------
+    def path_for(self, key: tuple) -> str:
+        return os.path.join(self.directory,
+                            _PREFIX + stable_key_digest(key) + ".json")
+
+    def _entries(self) -> list[str]:
+        try:
+            names = os.listdir(self.directory)
+        except OSError:
+            return []
+        return [os.path.join(self.directory, n) for n in names
+                if n.startswith(_PREFIX) and n.endswith(".json")]
+
+    def __len__(self) -> int:
+        return len(self._entries())
+
+    # -- load / save ---------------------------------------------------------
+    def load(self, key: tuple) -> TracedPhase | None:
+        # the file read + JSON parse + columnar decode run WITHOUT the
+        # lock (concurrent workers warming from disk must not serialize
+        # behind each other); only counters and file removal lock
+        path = self.path_for(key)
+        try:
+            with open(path) as f:
+                d = json.load(f)
+        except (OSError, ValueError):
+            with self._lock:
+                self.load_misses += 1
+            return None
+        if (d.get("store_version") != STORE_VERSION
+                or d.get("trace_schema") != TRACE_SCHEMA_VERSION):
+            with self._lock:
+                self._remove(path)
+                self.invalidated += 1
+                self.load_misses += 1
+            return None
+        try:
+            entry = phase_from_json(d["phase"])
+        except Exception:   # noqa: BLE001 — corrupt/foreign payload
+            with self._lock:
+                self._remove(path)
+                self.invalidated += 1
+                self.load_misses += 1
+            return None
+        try:
+            os.utime(path)          # LRU touch
+        except OSError:
+            pass
+        with self._lock:
+            self.loads += 1
+        return entry
+
+    def save(self, key: tuple, entry: TracedPhase) -> None:
+        # resolve the coupling verdict NOW, while the jaxpr is still
+        # around — a restored update phase has no jaxpr to analyze
+        if entry.coupling is None and entry.closed_jaxpr is not None \
+                and key[1] == "upd":
+            from ..core.estimator import _coupling_from_jaxpr
+            entry.coupling = _coupling_from_jaxpr(
+                entry.closed_jaxpr.jaxpr, entry.arg_leaf_counts[0],
+                entry.arg_leaf_counts[1])
+        try:
+            payload = phase_to_json(entry)
+        except StoreUnserializable:
+            return
+        d = {
+            "store_version": STORE_VERSION,
+            "trace_schema": TRACE_SCHEMA_VERSION,
+            "saved_at": time.time(),
+            "tag": key[1],
+            "phase": payload,
+        }
+        path = self.path_for(key)
+        with self._lock:
+            tmp = None
+            try:
+                fd, tmp = tempfile.mkstemp(dir=self.directory,
+                                           suffix=".tmp")
+                with os.fdopen(fd, "w") as f:
+                    json.dump(d, f)
+                os.replace(tmp, path)
+            except OSError:
+                if tmp is not None:
+                    self._remove(tmp)   # no orphaned .tmp accumulation
+                return
+            self.saves += 1
+            self._evict_lru()
+
+    def _remove(self, path: str) -> None:
+        try:
+            os.remove(path)
+        except OSError:
+            pass
+
+    def _evict_lru(self) -> None:
+        entries = self._entries()
+        if len(entries) <= self.max_entries:
+            return
+        def mtime(p):
+            try:
+                return os.path.getmtime(p)
+            except OSError:
+                return 0.0
+        entries.sort(key=mtime)
+        for p in entries[:len(entries) - self.max_entries]:
+            self._remove(p)
+
+    def clear(self) -> None:
+        with self._lock:
+            for p in self._entries():
+                self._remove(p)
+
+    def stats(self) -> dict:
+        return {"dir": self.directory, "entries": len(self),
+                "max_entries": self.max_entries, "loads": self.loads,
+                "load_misses": self.load_misses, "saves": self.saves,
+                "invalidated": self.invalidated,
+                "store_version": STORE_VERSION}

@@ -33,10 +33,35 @@ class TrainPolicy:
     opt_kwargs: tuple = ()
 
 
-def make_fwd_bwd(cfg: ModelConfig) -> Callable:
+def make_fwd_bwd(cfg: ModelConfig, microbatches: int = 1) -> Callable:
+    """(params, batch) -> (loss, grads), optionally with gradient
+    accumulation over ``microbatches`` — the same scan the real train
+    step runs, so the estimator sees accumulation's memory profile
+    (activations scale with the microbatch, f32 accumulators persist
+    across the scan). ``batch`` leading dims must divide evenly."""
     def fwd_bwd(params, batch):
         return jax.value_and_grad(M.loss_fn)(params, batch, cfg)
-    return fwd_bwd
+    if microbatches <= 1:
+        return fwd_bwd
+    n = microbatches
+
+    def fwd_bwd_accum(params, batch):
+        mb = _split_microbatches(batch, n)
+
+        def acc_body(carry, micro):
+            loss_sum, g_acc = carry
+            loss, grads = fwd_bwd(params, micro)
+            g_acc = jax.tree_util.tree_map(
+                lambda a, g: a + g.astype(a.dtype), g_acc, grads)
+            return (loss_sum + loss, g_acc), None
+
+        g0 = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (loss_sum, g_acc), _ = jax.lax.scan(acc_body, (0.0, g0), mb)
+        grads = jax.tree_util.tree_map(lambda g: g / n, g_acc)
+        return loss_sum / n, grads
+
+    return fwd_bwd_accum
 
 
 def _split_microbatches(batch: dict, n: int) -> dict:
@@ -57,33 +82,14 @@ def make_train_step(cfg: ModelConfig, policy: TrainPolicy
     update_fn = opt.update
     if policy.clip_norm is not None:
         update_fn = clip_by_global_norm(update_fn, policy.clip_norm)
-    fwd_bwd = make_fwd_bwd(cfg)
-
-    if policy.microbatches <= 1:
-        def train_step(params, opt_state, batch):
-            loss, grads = fwd_bwd(params, batch)
-            new_params, new_state = update_fn(params, grads, opt_state)
-            return loss, new_params, new_state
-        return train_step, opt
-
-    n = policy.microbatches
+    # the accumulation scan lives in make_fwd_bwd so the estimator hooks
+    # and the real step share it by construction (identical code paths)
+    fwd_bwd = make_fwd_bwd(cfg, policy.microbatches)
 
     def train_step(params, opt_state, batch):
-        mb = _split_microbatches(batch, n)
-
-        def acc_body(carry, micro):
-            loss_sum, g_acc = carry
-            loss, grads = fwd_bwd(params, micro)
-            g_acc = jax.tree_util.tree_map(
-                lambda a, g: a + g.astype(a.dtype), g_acc, grads)
-            return (loss_sum + loss, g_acc), None
-
-        g0 = jax.tree_util.tree_map(
-            lambda p: jnp.zeros(p.shape, jnp.float32), params)
-        (loss_sum, g_acc), _ = jax.lax.scan(acc_body, (0.0, g0), mb)
-        grads = jax.tree_util.tree_map(lambda g: g / n, g_acc)
+        loss, grads = fwd_bwd(params, batch)
         new_params, new_state = update_fn(params, grads, opt_state)
-        return loss_sum / n, new_params, new_state
+        return loss, new_params, new_state
 
     return train_step, opt
 
@@ -111,10 +117,14 @@ def make_serve_step(cfg: ModelConfig, cache_len: int) -> Callable:
 # ---------------------------------------------------------------------------
 def make_estimator_hooks(cfg: ModelConfig, policy: TrainPolicy):
     """The (fwd_bwd, update, opt_init) triple xMem estimates from —
-    identical code paths to the real step (first-class integration)."""
+    identical code paths to the real step (first-class integration).
+    ``policy.microbatches`` is honored: the estimator's forward phase
+    runs the same accumulation scan the real step would, so replanning
+    a rejected job onto more microbatches actually changes (shrinks)
+    the estimate."""
     opt = get_optimizer(policy.optimizer, lr=policy.learning_rate,
                         **dict(policy.opt_kwargs))
     update_fn = opt.update
     if policy.clip_norm is not None:
         update_fn = clip_by_global_norm(update_fn, policy.clip_norm)
-    return make_fwd_bwd(cfg), update_fn, opt.init
+    return (make_fwd_bwd(cfg, policy.microbatches), update_fn, opt.init)

@@ -114,7 +114,10 @@ class TestTraceCache:
                        Phase.FORWARD_BACKWARD)
         assert len({k1, k2, k3}) == 3
 
-    def test_stale_identity_is_a_miss(self, shapes):
+    def test_recreated_identical_fn_is_warm(self, shapes):
+        # ISSUE 4: content-addressed keys — hillclimb/dryrun rebuild the
+        # train step per policy, so structurally identical but re-created
+        # closures must hit, not miss on function-identity churn
         cache = TraceCache()
         est = XMemEstimator.for_tpu(trace_cache=cache)
 
@@ -124,8 +127,33 @@ class TestTraceCache:
         params, batch = shapes
         est.estimate_training(fn, params, batch, update_fn=_adam,
                               opt_init_fn=_adam_init)
-        # a different function object with (possibly) a recycled id must
-        # not hit the old entry
+        fn2 = make_fn()
+        assert fn2 is not fn
+        r = est.estimate_training(fn2, params, batch, update_fn=_adam,
+                                  opt_init_fn=_adam_init)
+        assert r.cache_stats["misses"] == 0
+        assert r.cache_stats["hits"] == 3
+
+    def test_stale_identity_is_a_miss_for_uncanonical_fns(self, shapes):
+        # functions whose closures cannot be content-hashed fall back to
+        # weak id() keys: a different function object with (possibly) a
+        # recycled id must not hit the old entry
+        import threading
+        cache = TraceCache()
+        est = XMemEstimator.for_tpu(trace_cache=cache)
+
+        def make_fn():
+            lock = threading.Lock()    # closure cell defeats hashing
+            def fn(p, b):
+                assert lock is not None
+                return jax.value_and_grad(_loss)(p, b)
+            return fn
+        from repro.core.cache import fn_identity
+        fn = make_fn()
+        assert fn_identity(fn)[0] == "id"
+        params, batch = shapes
+        est.estimate_training(fn, params, batch, update_fn=_adam,
+                              opt_init_fn=_adam_init)
         fn2 = make_fn()
         r = est.estimate_training(fn2, params, batch, update_fn=_adam,
                                   opt_init_fn=_adam_init)
@@ -220,20 +248,35 @@ class TestSteadyStateEquivalence:
             periodic_breakdown_peaks(pb)
 
     def test_cache_evicts_on_fn_death(self):
+        # id-keyed entries (uncanonical fns) die with their function —
+        # the weakref callback fires. Content-keyed entries survive: any
+        # structurally identical future fn can still hit them (ISSUE 4).
         import gc
+        import threading
         cache = TraceCache()
         est = XMemEstimator.for_tpu(trace_cache=cache)
         params = {"w": jax.ShapeDtypeStruct((8, 8), jnp.float32)}
         batch = {"x": jax.ShapeDtypeStruct((4, 8), jnp.float32)}
 
         def make():
-            return lambda p, b: (jnp.sum(b["x"] @ p["w"]), p)
+            lock = threading.Lock()    # closure defeats content hashing
+            def fn(p, b):
+                assert lock is not None
+                return (jnp.sum(b["x"] @ p["w"]), p)
+            return fn
         fn = make()
         est.estimate_training(fn, params, batch)
         assert len(cache) == 1
         del fn
         gc.collect()
         assert len(cache) == 0                # weakref callback fired
+
+        fn2 = (lambda p, b: (jnp.sum(b["x"] @ p["w"]), p))
+        est.estimate_training(fn2, params, batch)
+        assert len(cache) == 1
+        del fn2
+        gc.collect()
+        assert len(cache) == 1                # content entry persists
 
     def test_materialize_matches_peak_live(self):
         cyc = [BlockLifecycle(1, 100, 10, 14, 1, Phase.FORWARD_BACKWARD),

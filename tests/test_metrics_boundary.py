@@ -1,0 +1,142 @@
+"""Boundary-semantics tests for ``core/metrics.py`` (ISSUE 4 satellite).
+
+The two-round protocol's edges: ``estimate == capacity`` on Eq. 1
+(OOM prediction is a strict ``>``) and Eq. 5 (the estimate used as the
+round-2 threshold succeeds when ``truth == estimate``), zero
+within-group variance in the ANOVA F statistic, and empty-group Monte
+Carlo aggregation.
+"""
+import math
+
+import pytest
+
+from repro.core import metrics
+from repro.core.metrics import (RunRecord, anova_oneway, capacity_sweep,
+                                f_critical_approx, mcp, mem_conserved_at,
+                                mre, pef, summarize)
+
+
+def rec(estimate, truth, capacity, **kw):
+    kw.setdefault("config", "c")
+    kw.setdefault("family", "f")
+    kw.setdefault("estimator", "e")
+    kw.setdefault("device", "d")
+    return RunRecord(capacity=capacity, estimate=estimate, truth=truth,
+                     **kw)
+
+
+# ---------------------------------------------------------------------------
+class TestEq1Boundary:
+    def test_estimate_equals_capacity_predicts_no_oom(self):
+        # Eq. 1: OOM_pred iff estimate > capacity — equality fits exactly
+        r = rec(estimate=100, truth=100, capacity=100)
+        assert not r.oom_pred
+        assert not r.oom_actual
+        assert r.c1
+
+    def test_one_byte_over_predicts_oom(self):
+        r = rec(estimate=101, truth=101, capacity=100)
+        assert r.oom_pred and r.oom_actual and r.c1
+        assert r.c2                       # correctly predicted OOM job
+        assert r.mem_saved == 100         # whole device conserved (Eq. 7)
+
+    def test_mismatched_boundary_fails_round1(self):
+        # estimate says fits-exactly, reality is one byte over
+        r = rec(estimate=100, truth=101, capacity=100)
+        assert not r.oom_pred and r.oom_actual and not r.c1
+        assert not r.c2
+        assert r.mem_saved == -100        # Eq. 7 failure penalty
+
+
+class TestEq5Boundary:
+    def test_truth_equals_estimate_is_round2_success(self):
+        # round 2 runs with max runnable memory = estimate; success iff
+        # truth <= estimate — equality succeeds (Eq. 5)
+        r = rec(estimate=100, truth=100, capacity=200)
+        assert r.c1 and not r.oom_round2 and r.c2
+        assert r.rel_error == 0.0
+        assert r.mem_saved == 100         # capacity - estimate
+
+    def test_truth_one_byte_over_estimate_fails_round2(self):
+        r = rec(estimate=100, truth=101, capacity=200)
+        assert r.c1                       # round 1 both say "fits"
+        assert r.oom_round2 and not r.c2
+        assert r.mem_saved == -200
+
+    def test_pef_counts_round2_failures(self):
+        ok = rec(estimate=100, truth=100, capacity=200)
+        bad = rec(estimate=100, truth=101, capacity=200)
+        assert pef([ok, bad]) == pytest.approx(0.5)
+
+    def test_rel_error_undefined_on_oom_and_zero_truth(self):
+        assert rec(estimate=10, truth=300, capacity=200).rel_error is None
+        assert rec(estimate=10, truth=0, capacity=200).rel_error is None
+
+
+# ---------------------------------------------------------------------------
+class TestAnovaBoundaries:
+    def test_zero_within_group_variance_is_infinite_F(self):
+        # constant groups with different means: ss_within == 0 -> F = inf
+        out = anova_oneway([[1.0, 1.0, 1.0], [2.0, 2.0, 2.0]])
+        assert out["ss_within"] == 0.0
+        assert math.isinf(out["F"])
+        assert out["eta_sq"] == pytest.approx(1.0)
+
+    def test_zero_between_zero_within(self):
+        # identical constant groups: 0/0 resolves to inf under the
+        # current ms_w==0 branch; eta_sq degrades to 0 (no variance)
+        out = anova_oneway([[3.0, 3.0], [3.0, 3.0]])
+        assert out["ss_between"] == pytest.approx(0.0)
+        assert out["ss_within"] == 0.0
+        assert out["eta_sq"] == 0.0
+
+    def test_empty_and_single_groups_are_nan(self):
+        out = anova_oneway([])
+        assert math.isnan(out["F"])
+        out = anova_oneway([[1.0, 2.0]])          # k < 2
+        assert math.isnan(out["F"])
+        out = anova_oneway([[1.0, 2.0], []])      # empty group filtered
+        assert math.isnan(out["F"])
+
+    def test_f_critical_positive(self):
+        assert f_critical_approx(3, 20) > 1.0
+        assert math.isnan(f_critical_approx(0, 5))
+
+
+# ---------------------------------------------------------------------------
+class TestEmptyAggregation:
+    def test_empty_records(self):
+        assert mre([]) is None
+        assert pef([]) == 0.0
+        assert mcp([]) == 0.0
+        assert metrics.mean_runtime([]) == 0.0
+        assert summarize([]) == {}
+        assert metrics.quadrant([]) == "n/a"
+
+    def test_summarize_groups_by_estimator(self):
+        records = [rec(100, 100, 200, estimator="xmem"),
+                   rec(150, 100, 200, estimator="base")]
+        s = summarize(records)
+        assert set(s) == {"xmem", "base"}
+        assert s["xmem"]["mre"] == pytest.approx(0.0)
+        assert s["base"]["mre"] == pytest.approx(0.5)
+
+    def test_improvement_empty_cases(self):
+        assert metrics.improvement_vs_best_baseline([]) == {}
+        only_ours = [rec(100, 100, 200, estimator="xmem")]
+        assert metrics.improvement_vs_best_baseline(only_ours) == {}
+
+
+class TestCapacitySweepBoundaries:
+    def test_empty_capacities(self):
+        assert capacity_sweep(100, []) == {}
+
+    def test_boundary_capacity_is_feasible(self):
+        out = capacity_sweep(100, [99, 100, 101])
+        assert out == {99: False, 100: True, 101: True}
+
+    def test_mem_conserved_at_boundary(self):
+        # min_capacity == capacity: admitted, conserves capacity-estimate
+        assert mem_conserved_at(100, 100, estimate=100) == 0
+        # one byte short: correctly rejected, whole device conserved
+        assert mem_conserved_at(101, 100, estimate=100) == 100

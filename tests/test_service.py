@@ -1,0 +1,492 @@
+"""Admission service tests (ISSUE 4).
+
+Pins the tentpole guarantees:
+
+* service decisions are bit-identical to direct ``XMemEstimator`` calls;
+* content-addressed trace keys make re-created but structurally
+  identical functions warm (cache-stats pinned);
+* a restarted service answers a repeat request from the persistent
+  store with ZERO re-traces, bit-identically;
+* store LRU eviction and version invalidation;
+* concurrent serving, batched sweep decisions, the cluster-admission
+  simulator, the line-JSON daemon;
+* the serving/sweep admission-path bugfixes: ``pick_batch`` gates on
+  max(prefill, decode) and returns an explicit no-fit result; batch
+  sweeps snap to gradient-accumulation multiples.
+"""
+import dataclasses
+import json
+import threading
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.cache import TraceCache, fn_digest, fn_identity
+from repro.core.estimator import XMemEstimator
+from repro.service import (AdmissionRequest, AdmissionService,
+                           ClusterSimulator, JobArrival, TraceStore)
+from repro.service.store import STORE_VERSION
+
+# ---------------------------------------------------------------------------
+L, D, H, B = 4, 32, 64, 8
+
+
+def _make_hooks():
+    """Re-creates the full closure set per call — the admission-gate
+    function-identity-churn pattern."""
+    def loss(p, b):
+        h = b["x"]
+        for i in range(L):
+            h = jnp.tanh(h @ p[f"w{i}"])
+        return jnp.mean((h - b["y"]) ** 2)
+
+    def fwd_bwd(p, b):
+        return jax.value_and_grad(loss)(p, b)
+
+    def adam_init(p):
+        return jax.tree.map(
+            lambda x: (jnp.zeros_like(x), jnp.zeros_like(x)), p)
+
+    def adam(p, g, s):
+        def upd(pp, gg, ss):
+            m, v = ss
+            m = 0.9 * m + 0.1 * gg
+            v = 0.999 * v + 0.001 * gg * gg
+            return pp - 1e-3 * m / (jnp.sqrt(v) + 1e-8), (m, v)
+        out = jax.tree.map(upd, p, g, s,
+                           is_leaf=lambda x: isinstance(x, tuple))
+        return {k: out[k][0] for k in out}, {k: out[k][1] for k in out}
+
+    return fwd_bwd, adam, adam_init
+
+
+def _shapes(batch=B):
+    params = {f"w{i}": jax.ShapeDtypeStruct(
+        (D, H) if i % 2 == 0 else (H, D), jnp.float32) for i in range(L)}
+    data = {"x": jax.ShapeDtypeStruct((batch, D), jnp.float32),
+            "y": jax.ShapeDtypeStruct((batch, D), jnp.float32)}
+    return params, data
+
+
+def _request(job_id="job", batch=B, capacity=1 << 30, **kw):
+    fwd_bwd, adam, adam_init = _make_hooks()
+    params, data = _shapes(batch)
+    return AdmissionRequest(job_id, fwd_bwd, params, data,
+                            update_fn=adam, opt_init_fn=adam_init,
+                            capacity=capacity, **kw)
+
+
+def _assert_identical(decision, ref):
+    assert decision.peak_bytes == ref.peak_bytes
+    assert decision.peak_tensor_bytes == ref.peak_tensor_bytes
+    assert decision.persistent_bytes == ref.persistent_bytes
+    assert decision.breakdown == ref.breakdown
+    assert decision.report.num_events == ref.num_events
+    assert decision.report.sim.peak_reserved == ref.sim.peak_reserved
+
+
+@pytest.fixture
+def reference():
+    fwd_bwd, adam, adam_init = _make_hooks()
+    params, data = _shapes()
+    return XMemEstimator.for_tpu(trace_cache=TraceCache()).estimate_training(
+        fwd_bwd, params, data, update_fn=adam, opt_init_fn=adam_init)
+
+
+# ---------------------------------------------------------------------------
+class TestContentAddressing:
+    def test_recreated_hooks_share_digest(self):
+        f1, u1, i1 = _make_hooks()
+        f2, u2, i2 = _make_hooks()
+        assert f1 is not f2
+        assert fn_digest(f1) == fn_digest(f2) is not None
+        assert fn_digest(u1) == fn_digest(u2) is not None
+        assert fn_digest(i1) == fn_digest(i2) is not None
+
+    def test_different_structure_different_digest(self):
+        f1, _, _ = _make_hooks()
+
+        def other(p, b):
+            return jax.value_and_grad(
+                lambda pp, bb: jnp.mean(bb["x"] @ pp["w0"]))(p, b)
+        assert fn_digest(f1) != fn_digest(other)
+
+    def test_closure_values_distinguish(self):
+        def make(scale):
+            return lambda x: x * scale
+        assert fn_digest(make(2.0)) != fn_digest(make(3.0))
+        assert fn_digest(make(2.0)) == fn_digest(make(2.0))
+
+    def test_uncanonical_falls_back_to_id(self):
+        lock = threading.Lock()
+
+        def make():
+            captured = lock
+            return lambda x: (captured, x)[1]
+        fn = make()
+        ident = fn_identity(fn)
+        assert ident[0] == "id" and ident[1] == id(fn)
+
+    def test_service_warm_on_identity_churn(self):
+        # satellite: hillclimb/dryrun rebuild the step per policy — the
+        # content keys must make the rebuilt fns warm
+        svc = AdmissionService(workers=1, cache=TraceCache())
+        d1 = svc.decide(_request("a"))
+        assert d1.provenance["source"] == "traced"
+        d2 = svc.decide(_request("b"))     # fresh closures, same structure
+        assert d2.provenance["source"] == "memory"
+        assert d2.provenance["trace_cache"]["misses"] == 0
+        assert d2.provenance["trace_cache"]["hits"] == 3
+        _assert_identical(d2, d1.report)
+
+
+class TestServiceEquivalence:
+    def test_bit_identical_to_direct_estimator(self, reference):
+        svc = AdmissionService(workers=1, cache=TraceCache())
+        decision = svc.decide(_request())
+        _assert_identical(decision, reference)
+
+    def test_admit_threshold(self):
+        svc = AdmissionService(workers=1, cache=TraceCache())
+        d = svc.decide(_request(capacity=1 << 40))
+        assert d.admit and d.safe_threshold == d.peak_bytes
+        # estimate == capacity is an admit (Eq. 1 uses strict >)
+        d_eq = svc.decide(_request(capacity=d.peak_bytes))
+        assert d_eq.admit
+        d_no = svc.decide(_request(capacity=d.peak_bytes - 1))
+        assert not d_no.admit
+
+    def test_concurrent_decisions_identical(self, reference):
+        svc = AdmissionService(workers=4, cache=TraceCache())
+        decisions = svc.decide_many(
+            [_request(f"j{i}") for i in range(8)])
+        assert len(decisions) == 8
+        for d in decisions:
+            _assert_identical(d, reference)
+        assert svc.stats()["requests_served"] == 8
+
+    def test_provenance_is_per_thread_under_concurrency(self):
+        # warm decisions racing a cold trace on another worker must not
+        # inherit the cold thread's misses (thread-local counters)
+        svc = AdmissionService(workers=4, cache=TraceCache())
+        svc.decide(_request("warmup"))
+        cold = _request("cold", batch=B + 3)   # new avals: re-traces fwd
+        warm = [_request(f"warm{i}") for i in range(6)]
+        futs = [svc.submit(cold)] + [svc.submit(r) for r in warm]
+        decisions = [f.result() for f in futs]
+        assert decisions[0].provenance["trace_cache"]["misses"] >= 1
+        for d in decisions[1:]:
+            assert d.provenance["source"] == "memory"
+            assert d.provenance["trace_cache"]["misses"] == 0
+
+    def test_cache_and_store_dir_conflict(self, tmp_path):
+        with pytest.raises(ValueError):
+            AdmissionService(cache=TraceCache(),
+                             store_dir=str(tmp_path))
+
+    def test_decide_sweep_matches_decide(self):
+        svc = AdmissionService(workers=1, cache=TraceCache())
+        reqs = [_request(f"b{b}", batch=b) for b in (2, 4, 6, 8, 12, 16)]
+        sweep = svc.decide_sweep(reqs)
+        ref_svc = AdmissionService(workers=1, cache=TraceCache())
+        for req, d in zip(reqs, sweep):
+            ref = ref_svc.decide(dataclasses.replace(req))
+            assert d.peak_bytes == ref.peak_bytes
+            assert d.persistent_bytes == ref.persistent_bytes
+            assert d.admit == ref.admit
+        assert sweep[0].provenance["sweep"]["points"] == len(reqs)
+
+
+# ---------------------------------------------------------------------------
+class TestPersistentStore:
+    def test_restart_zero_retrace_bit_identical(self, tmp_path, reference):
+        store_dir = str(tmp_path / "store")
+        svc = AdmissionService(workers=1, store_dir=store_dir)
+        d1 = svc.decide(_request("cold"))
+        assert d1.provenance["source"] == "traced"
+        _assert_identical(d1, reference)
+
+        # "restart": fresh cache + fresh store object over the same dir
+        svc2 = AdmissionService(
+            workers=1, cache=TraceCache(store=TraceStore(store_dir)))
+        d2 = svc2.decide(_request("warm-after-restart"))
+        assert d2.provenance["source"] == "disk"
+        assert d2.provenance["trace_cache"]["misses"] == 0   # zero re-traces
+        assert d2.provenance["trace_cache"]["store_hits"] == 3
+        _assert_identical(d2, reference)
+        # grad-coupling verdict was persisted with the update phase
+        # (no jaxpr survives the store, so it must have been)
+        assert d2.report.oom == d1.report.oom
+
+    def test_store_roundtrip_preserves_phase(self, tmp_path):
+        from repro.core.cache import trace_key
+        from repro.core.events import BlockKind, Phase
+        from repro.service.store import phase_from_json, phase_to_json
+        cache = TraceCache()
+        est = XMemEstimator.for_tpu(trace_cache=cache)
+        fwd_bwd, adam, adam_init = _make_hooks()
+        params, data = _shapes()
+        fwd, upd, init = est.trace_phases(fwd_bwd, params, data,
+                                          adam, adam_init)
+        for entry in (fwd, upd, init):
+            d = json.loads(json.dumps(phase_to_json(entry)))
+            back = phase_from_json(d)
+            assert back.num_events == entry.num_events
+            assert back.input_blocks == entry.input_blocks
+            assert back.output_blocks == entry.output_blocks
+            assert len(back.lifecycles) == len(entry.lifecycles)
+            assert back.lifecycles == tuple(entry.lifecycles)
+            assert (jax.tree_util.tree_structure(back.out_shape)
+                    == jax.tree_util.tree_structure(entry.out_shape))
+            assert ([(tuple(l.shape), str(l.dtype))
+                     for l in jax.tree_util.tree_leaves(back.out_shape)]
+                    == [(tuple(l.shape), str(l.dtype))
+                        for l in jax.tree_util.tree_leaves(entry.out_shape)])
+
+    def test_lru_eviction_on_disk(self, tmp_path):
+        store = TraceStore(str(tmp_path), max_entries=4)
+        cache = TraceCache(store=store)
+        svc = AdmissionService(workers=1, cache=cache)
+        for i, b in enumerate((2, 4, 6, 8, 10, 12)):
+            svc.decide(_request(f"j{i}", batch=b))
+        # 6 batches x (1 fwd each) + shared upd/init; capped at 4 files
+        assert len(store) == 4
+
+    def test_version_invalidation(self, tmp_path):
+        store_dir = str(tmp_path)
+        svc = AdmissionService(workers=1,
+                               cache=TraceCache(store=TraceStore(store_dir)))
+        svc.decide(_request("seed"))
+        store = TraceStore(store_dir)
+        assert len(store) == 3
+        # corrupt the version field of every entry on disk
+        import os
+        for name in os.listdir(store_dir):
+            p = os.path.join(store_dir, name)
+            with open(p) as f:
+                d = json.load(f)
+            d["store_version"] = STORE_VERSION + 1
+            with open(p, "w") as f:
+                json.dump(d, f)
+        svc2 = AdmissionService(
+            workers=1, cache=TraceCache(store=TraceStore(store_dir)))
+        d = svc2.decide(_request("after-bump"))
+        assert d.provenance["source"] == "traced"     # miss, not stale hit
+        assert svc2.cache.store.invalidated == 3
+        # invalidated files were deleted, fresh ones written back
+        assert len(svc2.cache.store) == 3
+
+    def test_corrupt_file_is_a_miss(self, tmp_path):
+        store = TraceStore(str(tmp_path))
+        svc = AdmissionService(workers=1, cache=TraceCache(store=store))
+        svc.decide(_request("seed"))
+        import os
+        for name in os.listdir(str(tmp_path)):
+            with open(os.path.join(str(tmp_path), name), "w") as f:
+                f.write("{not json")
+        svc2 = AdmissionService(
+            workers=1, cache=TraceCache(store=TraceStore(str(tmp_path))))
+        d = svc2.decide(_request("after-corruption"))
+        assert d.provenance["source"] == "traced"
+
+
+# ---------------------------------------------------------------------------
+class TestClusterSimulator:
+    def test_outcomes_scored_with_two_round_machinery(self):
+        svc = AdmissionService(workers=1, cache=TraceCache())
+        probe = svc.decide(_request(capacity=1 << 40))
+        peak = probe.peak_bytes
+
+        def arrival(i, capacity, truth=None):
+            r = _request(f"job{i}", capacity=capacity)
+            return JobArrival(f"job{i}", r.fwd_bwd_fn, r.params, r.batch,
+                              update_fn=r.update_fn,
+                              opt_init_fn=r.opt_init_fn,
+                              capacity=capacity, truth_bytes=truth)
+
+        arrivals = [
+            arrival(0, peak + 100),            # fits, truth == estimate
+            arrival(1, peak - 1),              # correctly rejected
+            arrival(2, peak + 100, truth=peak + 200),  # admitted, OOMs
+            arrival(3, peak - 1, truth=peak - 50),     # rejected, fits
+        ]
+        out = ClusterSimulator(svc).replay(arrivals)
+        s = out.summary
+        assert s["jobs"] == 4
+        assert s["admitted"] == 2 and s["rejected"] == 2
+        assert s["oom_admitted"] == 1
+        assert s["underutilized_rejected"] == 1
+        # two-round: jobs 2 and 3 fail Eq. 5 -> PEF = 2/4
+        assert s["pef"] == pytest.approx(0.5)
+        recs = out.records
+        assert recs[0].c2 and recs[1].c2
+        assert not recs[2].c1 and not recs[3].c1
+
+    def test_boundary_estimate_equals_capacity(self):
+        svc = AdmissionService(workers=1, cache=TraceCache())
+        probe = svc.decide(_request(capacity=1 << 40))
+        peak = probe.peak_bytes
+        r = _request("edge", capacity=peak)
+        out = ClusterSimulator(svc).replay(
+            [JobArrival("edge", r.fwd_bwd_fn, r.params, r.batch,
+                        update_fn=r.update_fn, opt_init_fn=r.opt_init_fn,
+                        capacity=peak)])
+        rec = out.records[0]
+        assert not rec.oom_pred        # Eq. 1: strict >
+        assert rec.c1 and rec.c2
+        assert rec.mem_saved == 0      # capacity fully utilized
+
+
+# ---------------------------------------------------------------------------
+class TestDaemon:
+    def test_handle_request_train_and_errors(self):
+        from repro.launch.served import handle_request
+        svc = AdmissionService(workers=1, cache=TraceCache())
+        resp = handle_request(svc, {"kind": "ping"})
+        assert resp == {"ok": True, "pong": True}
+        resp = handle_request(svc, {"kind": "wat"})
+        assert not resp["ok"]
+        resp = handle_request(svc, {"kind": "train", "arch": "nope"})
+        assert not resp["ok"] and "error" in resp
+
+    @pytest.mark.slow
+    def test_socket_round_trip(self):
+        from repro.launch.served import AdmissionServer, request_once
+        svc = AdmissionService(workers=2, cache=TraceCache())
+        server = AdmissionServer(("127.0.0.1", 0), svc)
+        t = threading.Thread(target=server.serve_forever, daemon=True)
+        t.start()
+        try:
+            host, port = server.server_address[:2]
+            assert request_once(host, port, {"kind": "ping"})["pong"]
+            r = request_once(host, port, {
+                "kind": "train", "arch": "starcoder2-3b", "smoke": True,
+                "seq": 32, "batch": 4, "hbm_gib": 0.25})
+            assert r["ok"] and isinstance(r["admit"], bool)
+            r2 = request_once(host, port, {
+                "kind": "train", "arch": "starcoder2-3b", "smoke": True,
+                "seq": 32, "batch": 4, "hbm_gib": 0.25})
+            assert r2["peak_bytes"] == r["peak_bytes"]
+            assert r2["provenance"]["source"] == "memory"   # churn-warm
+        finally:
+            server.shutdown()
+            server.server_close()
+
+
+# ---------------------------------------------------------------------------
+class TestServeGate:
+    """launch/serve.py pick_batch bugfixes (satellite 1)."""
+
+    @pytest.fixture(scope="class")
+    def smoke(self):
+        from repro.configs import get_smoke
+        return get_smoke("starcoder2-3b")
+
+    def test_no_fit_is_explicit(self, smoke):
+        from repro.launch.serve import pick_batch
+        svc = AdmissionService(workers=1, cache=TraceCache())
+        batch, gate = pick_batch(smoke, 32, hbm_bytes=0, candidates=(),
+                                 service=svc)
+        assert batch is None and gate["candidates"] == []
+        batch, gate = pick_batch(smoke, 32, hbm_bytes=64,
+                                 candidates=(2, 1), service=svc)
+        assert batch is None      # nothing fits 64 bytes; no NameError
+        assert all(not c["fits"] for c in gate["candidates"])
+
+    def test_gates_on_prefill_peak(self, smoke):
+        from repro.launch.serve import pick_batch
+        svc = AdmissionService(workers=1, cache=TraceCache())
+        # find the real prefill/decode peaks at batch 4
+        _, gate = pick_batch(smoke, 32, hbm_bytes=1 << 40,
+                             candidates=(4,), service=svc)
+        pre = gate["prefill"].peak_bytes
+        dec = gate["decode"].peak_bytes
+        assert pre > dec          # the bug's precondition: prefill dominates
+        # budget admits the decode step but not the prefill: the old
+        # decode-only gate would have admitted batch 4 and OOMed in
+        # prefill; the fixed gate must reject it
+        budget = (pre + dec) // 2
+        batch, gate = pick_batch(smoke, 32, hbm_bytes=budget,
+                                 candidates=(4,), service=svc)
+        assert batch is None
+        row = gate["candidates"][0]
+        assert row["decode_peak"] <= budget < row["prefill_peak"]
+
+    def test_estimate_error_skips_candidate(self, smoke):
+        from repro.launch import serve as serve_mod
+        svc = AdmissionService(workers=1, cache=TraceCache())
+        calls = []
+        real = svc.decide_serving
+
+        def flaky(job_id, *a, **kw):
+            calls.append(job_id)
+            if len(calls) <= 1:
+                raise RuntimeError("transient trace failure")
+            return real(job_id, *a, **kw)
+        svc.decide_serving = flaky
+        batch, gate = serve_mod.pick_batch(
+            smoke, 32, hbm_bytes=1 << 40, candidates=(4, 2), service=svc)
+        assert batch == 2                     # first candidate skipped
+        assert "transient trace failure" in gate["error"] or batch == 2
+
+
+# ---------------------------------------------------------------------------
+class TestAccumulationSweeps:
+    """Batch sweeps vs gradient accumulation (satellite 2)."""
+
+    def test_hooks_honor_microbatches(self):
+        from repro.configs import get_smoke
+        from repro.configs.base import smoke_shape
+        from repro.configs.registry import input_specs
+        from repro.models import model as M
+        from repro.train import TrainPolicy, make_estimator_hooks
+        cfg = get_smoke("starcoder2-3b")
+        params = M.abstract_params(cfg)
+        batch = input_specs(cfg, smoke_shape(seq_len=32, global_batch=8))
+        est = XMemEstimator.for_tpu(trace_cache=TraceCache())
+        peaks = {}
+        for m in (1, 4):
+            fwd, upd, init = make_estimator_hooks(
+                cfg, TrainPolicy(optimizer="adamw", microbatches=m))
+            rep = est.estimate_training(fwd, params, batch,
+                                        update_fn=upd, opt_init_fn=init)
+            peaks[m] = rep.peak_bytes
+        # accumulation must change the estimate (activations scale with
+        # the microbatch) — before the fix microbatches were ignored
+        assert peaks[4] != peaks[1]
+
+    def test_indivisible_batch_still_asserts(self):
+        from repro.train.train_step import _split_microbatches
+        with pytest.raises(AssertionError):
+            _split_microbatches(
+                {"x": jnp.zeros((6, 2))}, 4)
+
+    @pytest.mark.slow
+    def test_sweep_over_accumulation_regression(self):
+        # the old grid (1, 2, 4, ...) tripped _split_microbatches'
+        # divisibility assert on probe batches; the snapped grid must
+        # run end to end and only contain multiples of microbatches
+        from repro.launch.hillclimb import xmem_batch_hillclimb
+        r = xmem_batch_hillclimb("starcoder2-3b", hbm_bytes=1 << 28,
+                                 seq=32, max_batch=16, smoke=True,
+                                 verbose=False, microbatches=4)
+        batches = [p["batch"] for p in r["probes"]]
+        assert batches == [4, 8, 16]
+        assert all(b % 4 == 0 for b in batches)
+        assert r["microbatches"] == 4
+
+    def test_replan_respects_divisibility(self):
+        # replan_if_needed must stop doubling when the next factor no
+        # longer divides the global batch (6 % 4 != 0)
+        from repro.configs import get_smoke
+        from repro.configs.base import smoke_shape
+        from repro.launch.train import replan_if_needed
+        from repro.train import TrainPolicy
+        cfg = get_smoke("starcoder2-3b")
+        shape = smoke_shape(seq_len=32, global_batch=6)
+        svc = AdmissionService(workers=1, cache=TraceCache())
+        policy, rep = replan_if_needed(cfg, TrainPolicy(microbatches=1),
+                                       shape, hbm_bytes=1, service=svc)
+        assert policy.microbatches in (1, 2)   # never 4: 6 % 4 != 0
+        assert rep.peak_bytes > 1
