@@ -14,7 +14,8 @@ test-fast:       ## tier-1 subset (<60 s): skips the slow smoke-arch suite
 bench:           ## full estimator benchmark; refreshes BENCH_estimator.json
 	python -m benchmarks.perf_estimator
 
-# gates replay throughput, mesh-sweep rate AND warm service requests/s
+# gates replay throughput, mesh-sweep rate, warm service requests/s AND
+# planner trace frugality
 bench-check:     ## perf-regression gate vs checked-in BENCH_estimator.json
 	python -m benchmarks.report --check
 
@@ -22,6 +23,11 @@ bench-check:     ## perf-regression gate vs checked-in BENCH_estimator.json
 # the full benchmark
 serve-bench:     ## admission-service request-throughput benchmark only
 	python -m benchmarks.perf_estimator --service-only
+
+# merges the planner_* keys (plans/s + asserted trace budget) into
+# BENCH_estimator.json without re-running the full benchmark
+plan-bench:      ## remediation-planner benchmark only
+	python -m benchmarks.perf_estimator --planner-only
 
 report:          ## render artifact tables
 	python -m benchmarks.report

@@ -33,6 +33,10 @@ cites), iterations=3 unless noted:
   for both arms. ISSUE 2 gates >= 4x wall-clock.
 * ``largeN_*`` — iterations=64: fast-path composition + replay cost
   must stay ~flat in N (columnar: tiled arrays; object: steady-state).
+* ``planner_*`` — ISSUE 5 remediation planner: one search over >=30
+  candidate plans (batch x microbatch x remat x >=8 topologies) must
+  perform <= ``PLANNER_TRACE_BUDGET`` fresh traces (ASSERTED), repeat
+  searches must be zero-trace, and plans/s is recorded for the gate.
 
 Targets (committed in BENCH_estimator.json, tracked across PRs):
   warm repeated-call speedup >= 5x, cold iterations=3 speedup >= 2x,
@@ -297,6 +301,9 @@ def run_benchmark(warm_calls: int = 10, cold_samples: int = 5) -> dict:
     # cold vs warm vs restart-warm vs concurrent clients
     service = measure_service()
 
+    # remediation planner (ISSUE 5): plans/s + trace frugality
+    planner = measure_planner()
+
     # large-N: composition + replay must stay ~flat for the fast path
     largeN_fast = _median(lambda: estimate(XMemEstimator.for_tpu(
         iterations=64, trace_cache=warm_est.trace_cache)), 3)
@@ -343,6 +350,7 @@ def run_benchmark(warm_calls: int = 10, cold_samples: int = 5) -> dict:
         "mesh_sweep_traces": mesh_stats["trace_cache"]["misses"],
         "mesh_sweep_identical": mesh_identical,
         **service,
+        **planner,
         "largeN_iterations": 64,
         "largeN_fast_s": round(largeN_fast, 5),
         "largeN_slow_s": round(largeN_slow, 5),
@@ -536,6 +544,103 @@ def measure_service(warm_requests: int = 20,
     }
 
 
+PLANNER_TRACE_BUDGET = 6        # fresh traces allowed per plan search
+
+
+def _planner_workload():
+    """The planner benchmark job: a smoke config whose remat="none"
+    training step misses a 12 MiB budget, searched coordinate-wise over
+    31 candidate plans (7 batches + 2 microbatch factors + 1 remat rung
+    + 21 topologies; one knob varies per offer) — the ISSUE 5
+    acceptance shape."""
+    import dataclasses
+
+    from repro.configs import get_smoke
+    from repro.configs.base import smoke_shape
+    from repro.plan import PlanSpace
+    from repro.train import TrainPolicy
+    cfg = dataclasses.replace(get_smoke("starcoder2-3b"), remat="none")
+    policy = TrainPolicy(optimizer="adamw", microbatches=1)
+    shape = smoke_shape(48, 32)
+    space = PlanSpace(batches=(28, 24, 20, 16, 12, 8, 4),
+                      microbatches=(2, 4), remat=("full",),
+                      devices=(4, 8, 16))
+    return cfg, policy, shape, space, 12 << 20
+
+
+def measure_planner(reps: int = 3) -> dict:
+    """Remediation-planner throughput + trace frugality (ISSUE 5).
+
+    One search covers >=30 candidate plans; the trace budget (<=6 fresh
+    traces per search) is ASSERTED, not just recorded — the planner's
+    whole value is that the search is nearly free next to re-estimating
+    every candidate from scratch. ``planner_plans_per_s`` is candidates
+    evaluated per second of search wall time (baseline decision
+    excluded), measured warm the way a long-running service runs it.
+    """
+    from repro.core.cache import TraceCache
+    from repro.plan import RemediationPlanner
+    from repro.service import AdmissionService
+
+    cfg, policy, shape, space, capacity = _planner_workload()
+    svc = AdmissionService(workers=1, cache=TraceCache())
+    planner = RemediationPlanner(svc)
+    t0 = time.perf_counter()
+    res = planner.plan(cfg, policy, shape, capacity=capacity,
+                       space=space, job_id="bench")
+    cold_s = time.perf_counter() - t0
+    s = res.stats
+    assert s["candidates"] >= 30, s
+    assert s["axes"]["topology"] >= 8, s
+    assert s["fresh_traces"] <= PLANNER_TRACE_BUDGET, (
+        f"trace-frugality regression: {s['fresh_traces']} fresh traces "
+        f"> budget {PLANNER_TRACE_BUDGET}")
+    assert res.offers, "planner found no feasible plan"
+    warm_best = 1e9
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        warm = planner.plan(cfg, policy, shape, capacity=capacity,
+                            space=space, job_id="bench-warm")
+        warm_best = min(warm_best, time.perf_counter() - t0)
+    assert warm.stats["fresh_traces"] == 0, warm.stats
+    identical = [o.peak_bytes for o in warm.offers] \
+        == [o.peak_bytes for o in res.offers]
+    return {
+        "planner_candidates": s["candidates"],
+        "planner_offers": len(res.offers),
+        "planner_fresh_traces": s["fresh_traces"],
+        "planner_trace_budget": PLANNER_TRACE_BUDGET,
+        "planner_cold_search_s": round(cold_s, 4),
+        "planner_warm_search_s": round(warm_best, 4),
+        "planner_plans_per_s": round(s["candidates"] / warm_best, 2),
+        "planner_warm_zero_traces": warm.stats["fresh_traces"] == 0,
+        "planner_identical": bool(identical),
+        "meets_planner_trace_budget":
+            s["fresh_traces"] <= PLANNER_TRACE_BUDGET,
+    }
+
+
+def quick_planner_snapshot() -> dict:
+    """Trace-frugality-only planner measurement for the perf gate
+    (benchmarks/report.py --check): one cold search, assert-free —
+    the gate compares against the recorded budget."""
+    from repro.core.cache import TraceCache
+    from repro.plan import RemediationPlanner
+    from repro.service import AdmissionService
+
+    cfg, policy, shape, space, capacity = _planner_workload()
+    svc = AdmissionService(workers=1, cache=TraceCache())
+    t0 = time.perf_counter()
+    res = RemediationPlanner(svc).plan(cfg, policy, shape,
+                                       capacity=capacity, space=space)
+    return {
+        "planner_candidates": res.stats["candidates"],
+        "planner_fresh_traces": res.stats["fresh_traces"],
+        "planner_offers": len(res.offers),
+        "planner_cold_search_s": round(time.perf_counter() - t0, 4),
+    }
+
+
 def quick_service_snapshot() -> dict:
     """Warm-request-throughput-only measurement for the perf gate
     (benchmarks/report.py --check). Seconds, not minutes."""
@@ -588,6 +693,23 @@ def quick_replay_snapshot() -> dict:
             "events": n_events}
 
 
+def _merge_into(out_path: str, measurements: dict, label: str) -> None:
+    """Print + merge a partial measurement set into the benchmark
+    record without re-running the full suite (make serve-bench /
+    plan-bench)."""
+    for k, v in measurements.items():
+        print(f"{k}: {v}")
+    merged = {}
+    if os.path.exists(out_path):
+        with open(out_path) as f:
+            merged = json.load(f)
+    merged.update(measurements)
+    with open(out_path, "w") as f:
+        json.dump(merged, f, indent=1)
+        f.write("\n")
+    print(f"merged {label} measurements into {out_path}")
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", default="BENCH_estimator.json")
@@ -599,23 +721,23 @@ def main() -> int:
                     help="measure only the admission-service request "
                          "throughput and merge it into --out "
                          "(make serve-bench)")
+    ap.add_argument("--planner-only", action="store_true",
+                    help="measure only the remediation planner (plans/s,"
+                         " trace frugality) and merge it into --out "
+                         "(make plan-bench)")
     args = ap.parse_args()
     if args.cold_probe:
         print(f"{_estimate_once(args.cold_probe):.6f}")
         return 0
+    if args.planner_only:
+        planner = measure_planner()
+        _merge_into(args.out, planner, "planner")
+        return 0 if (planner["meets_planner_trace_budget"]
+                     and planner["planner_identical"]
+                     and planner["planner_warm_zero_traces"]) else 1
     if args.service_only:
         service = measure_service()
-        for k, v in service.items():
-            print(f"{k}: {v}")
-        merged = {}
-        if os.path.exists(args.out):
-            with open(args.out) as f:
-                merged = json.load(f)
-        merged.update(service)
-        with open(args.out, "w") as f:
-            json.dump(merged, f, indent=1)
-            f.write("\n")
-        print(f"merged service measurements into {args.out}")
+        _merge_into(args.out, service, "service")
         return 0 if (service["service_identical"]
                      and service["service_restart_zero_retrace"]
                      and service["meets_service_warm_target"]) else 1
@@ -635,7 +757,9 @@ def main() -> int:
           and out["meets_mesh_sweep_target"]
           and out["service_identical"]
           and out["service_restart_zero_retrace"]
-          and out["meets_service_warm_target"])
+          and out["meets_service_warm_target"]
+          and out["meets_planner_trace_budget"]
+          and out["planner_identical"])
     return 0 if ok else 1
 
 

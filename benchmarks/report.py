@@ -185,6 +185,26 @@ def perf_check(baseline_path: str = "BENCH_estimator.json",
     else:
         print("[bench-check] baseline predates mesh sweep; skipping "
               "that check (refresh BENCH_estimator.json)")
+    rec_budget = baseline.get("planner_trace_budget")
+    if rec_budget is not None:
+        from benchmarks.perf_estimator import quick_planner_snapshot
+        snap = quick_planner_snapshot()
+        # trace frugality is a CORRECTNESS-of-design gate, not a timing
+        # gate: a fresh >=30-candidate search must stay within the
+        # recorded per-search trace budget
+        pok = (snap["planner_fresh_traces"] <= rec_budget
+               and snap["planner_candidates"] >= 30
+               and snap["planner_offers"] >= 1)
+        print(f"[bench-check] planner trace frugality: "
+              f"{snap['planner_fresh_traces']} fresh traces for "
+              f"{snap['planner_candidates']} candidates "
+              f"(budget {rec_budget}, "
+              f"{snap['planner_cold_search_s']*1e3:.0f} ms) -> "
+              f"{'OK' if pok else 'REGRESSION'}")
+        ok = ok and pok
+    else:
+        print("[bench-check] baseline predates the remediation planner; "
+              "skipping that check (refresh BENCH_estimator.json)")
     rec_service = baseline.get("service_warm_rps")
     if rec_service:
         from benchmarks.perf_estimator import quick_service_snapshot

@@ -73,8 +73,14 @@ def analytic_flops(cfg: ModelConfig, shape: ShapeSpec, *,
 def analytic_bytes(cfg: ModelConfig, shape: ShapeSpec, *,
                    n_devices: int, model_shards: int, fsdp_shards: int,
                    microbatches: int = 1, opt_state_mult: float = 2.0,
-                   act_tensors_per_layer: float = 14.0) -> float:
-    """Per-device HBM traffic (bytes) for one step."""
+                   act_tensors_per_layer: float = 14.0,
+                   act_passes: float = 3.0) -> float:
+    """Per-device HBM traffic (bytes) for one step.
+
+    ``act_passes`` is the number of HBM passes over the materialized
+    activations: 3.0 under full remat (write + refwd rewrite + read),
+    2.0 with no remat (write + read) — the remediation planner's cost
+    model varies it per ``cfg.remat`` candidate."""
     dtype_b = cfg.dtype.itemsize
     p_dev = cfg.param_count() * dtype_b / (model_shards * fsdp_shards)
     dp = max(n_devices // model_shards, 1)
@@ -88,7 +94,8 @@ def analytic_bytes(cfg: ModelConfig, shape: ShapeSpec, *,
         opt_traffic = 2.0 * opt_b + 3.0 * p_dev  # read+write opt, rw grads
         # activations: materialized tensors written+read (+refwd rewrite)
         act = tokens_dev * cfg.d_model * dtype_b \
-            * act_tensors_per_layer * cfg.n_layers * 3.0 / microbatches \
+            * act_tensors_per_layer * cfg.n_layers * act_passes \
+            / microbatches \
             * microbatches  # per-microbatch traffic sums back to total
         return param_traffic + opt_traffic + act
     if shape.kind == "prefill":

@@ -410,6 +410,16 @@ def main():
                     help="run the estimator-side mesh-topology admission "
                          "sweep for ARCH (smoke scale, no compile) and "
                          "exit")
+    ap.add_argument("--xmem-plan", metavar="ARCH",
+                    help="run the remediation planner for ARCH (smoke "
+                         "scale, no compile): a job that misses the "
+                         "--hbm-gib budget is answered with ranked "
+                         "feasible counter-offers, written as an "
+                         "artifact")
+    ap.add_argument("--plan-batch", type=int, default=32,
+                    help="rejected job's global batch for --xmem-plan")
+    ap.add_argument("--plan-seq", type=int, default=48,
+                    help="sequence length for --xmem-plan")
     ap.add_argument("--devices", default="8,16,32",
                     help="comma-separated device counts for "
                          "--xmem-mesh-gate")
@@ -420,6 +430,25 @@ def main():
                     help="gradient-accumulation factor for --xmem-gate "
                          "(the candidate grid snaps to its multiples)")
     args = ap.parse_args()
+
+    if args.xmem_plan:
+        from ..plan import run_plan_search
+        devices = tuple(int(d) for d in args.devices.split(","))
+        r = run_plan_search(args.xmem_plan, int(args.hbm_gib * 2**30),
+                            seq=args.plan_seq, batch=args.plan_batch,
+                            microbatches=args.microbatches,
+                            devices=devices)
+        os.makedirs(args.out, exist_ok=True)
+        _write(os.path.join(args.out, f"{args.xmem_plan}__xmem_plan.json"),
+               r)
+        s = r["stats"]
+        if r["admit"]:
+            print(f"[xmem-plan] {r['arch']}: already fits")
+        else:
+            print(f"[xmem-plan] {r['arch']}: {len(r['counter_offers'])} "
+                  f"offers from {s['candidates']} candidates "
+                  f"({s['fresh_traces']} fresh traces)")
+        return
 
     if args.xmem_mesh_gate:
         devices = tuple(int(d) for d in args.devices.split(","))

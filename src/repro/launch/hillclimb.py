@@ -324,6 +324,18 @@ def main():
     ap.add_argument("--xmem-mesh", metavar="ARCH",
                     help="run the estimator-driven mesh-topology search "
                          "for ARCH (smoke scale) instead of the cells")
+    ap.add_argument("--xmem-plan", metavar="ARCH",
+                    help="run the remediation planner for ARCH (smoke "
+                         "scale): rank counter-offers (batch/microbatch/"
+                         "remat/topology) for a job that misses the "
+                         "--hbm-gib budget")
+    ap.add_argument("--batch", type=int, default=32,
+                    help="rejected job's global batch for --xmem-plan")
+    ap.add_argument("--seq", type=int, default=48,
+                    help="sequence length for --xmem-plan")
+    ap.add_argument("--remat", default=None,
+                    help="rejected job's remat policy for --xmem-plan "
+                         "(full|dots|none; default: the config's)")
     ap.add_argument("--devices", default="8,16,32",
                     help="comma-separated device counts for --xmem-mesh")
     ap.add_argument("--hbm-gib", type=float, default=0.25,
@@ -333,6 +345,19 @@ def main():
                     help="gradient-accumulation factor for --xmem-batch "
                          "(the sweep grid snaps to its multiples)")
     args = ap.parse_args()
+    if args.xmem_plan:
+        from ..plan import run_plan_search
+        devices = tuple(int(d) for d in args.devices.split(","))
+        r = run_plan_search(args.xmem_plan, int(args.hbm_gib * 2**30),
+                            seq=args.seq, batch=args.batch,
+                            microbatches=args.microbatches,
+                            remat=args.remat, devices=devices)
+        os.makedirs(args.out, exist_ok=True)
+        path = os.path.join(args.out, f"xmem_plan__{args.xmem_plan}.json")
+        with open(path, "w") as f:
+            json.dump(r, f, indent=1)
+        print(f"[xmem-plan] wrote {path}")
+        return
     if args.xmem_mesh:
         devices = tuple(int(d) for d in args.devices.split(","))
         r = xmem_mesh_hillclimb(args.xmem_mesh,

@@ -21,6 +21,12 @@ Request kinds:
   "hbm_gib":0.25,"probe_min_capacity":false}``
 * ``serve`` — ``{"kind":"serve","arch":...,"smoke":bool,"max_len":64,
   "batch":8,"hbm_gib":0.25}`` (gates on max(prefill, decode))
+* ``plan`` — the same job fields as ``train`` plus the remediation
+  search space: ``{"kind":"plan","arch":...,"batch":32,"hbm_gib":0.01,
+  "devices":[4,8],"batch_grid":[16,8],"microbatch_grid":[2,4],
+  "remat_grid":["full"],"pad_vocab_multiple":16,"max_offers":5}`` —
+  answers a non-fitting job with ranked feasible counter-offers
+  (ISSUE 5); grid keys are optional (defaults derive from the job)
 * ``stats`` / ``ping`` / ``shutdown``
 """
 from __future__ import annotations
@@ -33,25 +39,24 @@ import sys
 import threading
 
 
-def build_train_request(d: dict):
-    """AdmissionRequest from a wire-level train-job description.
+def _train_job(d: dict):
+    """(cfg, policy, shape) from a wire-level train-job description.
     ``seq``/``batch`` are honored in both smoke and full-scale modes
     (full-scale defaults come from TRAIN_4K when absent)."""
     import dataclasses
     from ..configs import get_config, get_smoke
     from ..configs.base import smoke_shape, TRAIN_4K
-    from ..configs.registry import input_specs
-    from ..service import AdmissionRequest
-    from ..train import TrainPolicy, make_estimator_hooks
+    from ..train import TrainPolicy
 
     arch = d["arch"]
     smoke = bool(d.get("smoke", True))
     cfg = get_smoke(arch) if smoke else get_config(arch)
+    if d.get("remat"):
+        cfg = dataclasses.replace(cfg, remat=str(d["remat"]))
     policy = TrainPolicy(
         optimizer=d.get("optimizer", "adamw"),
         microbatches=int(d.get("microbatches", 1)),
         clip_norm=d.get("clip_norm", 1.0))
-    fwd_bwd, update, opt_init = make_estimator_hooks(cfg, policy)
     if smoke:
         shape = smoke_shape(int(d.get("seq", 64)), int(d.get("batch", 8)))
     else:
@@ -59,14 +64,40 @@ def build_train_request(d: dict):
             TRAIN_4K,
             seq_len=int(d.get("seq", TRAIN_4K.seq_len)),
             global_batch=int(d.get("batch", TRAIN_4K.global_batch)))
+    return cfg, policy, shape
+
+
+def build_train_request(d: dict):
+    """AdmissionRequest from a wire-level train-job description."""
+    from ..configs.registry import input_specs
     from ..models import model as M
+    from ..service import AdmissionRequest
+    from ..train import make_estimator_hooks
+
+    cfg, policy, shape = _train_job(d)
+    fwd_bwd, update, opt_init = make_estimator_hooks(cfg, policy)
     return AdmissionRequest(
-        job_id=str(d.get("id", f"{arch}-b{shape.global_batch}")),
+        job_id=str(d.get("id", f"{d['arch']}-b{shape.global_batch}")),
         fwd_bwd_fn=fwd_bwd, params=M.abstract_params(cfg),
         batch=input_specs(cfg, shape), update_fn=update,
         opt_init_fn=opt_init,
         capacity=int(float(d.get("hbm_gib", 16.0)) * 2**30),
         probe_min_capacity=bool(d.get("probe_min_capacity", False)))
+
+
+def build_plan_space(d: dict):
+    """PlanSpace from the optional wire-level grid keys."""
+    from ..plan import PlanSpace
+    return PlanSpace(
+        batches=(tuple(int(b) for b in d["batch_grid"])
+                 if "batch_grid" in d else None),
+        microbatches=(tuple(int(m) for m in d["microbatch_grid"])
+                      if "microbatch_grid" in d else None),
+        remat=(tuple(str(r) for r in d["remat_grid"])
+               if "remat_grid" in d else None),
+        devices=tuple(int(n) for n in d.get("devices", ())),
+        pad_vocab_multiple=d.get("pad_vocab_multiple"),
+        max_offers=int(d.get("max_offers", 5)))
 
 
 def handle_request(service, d: dict) -> dict:
@@ -82,6 +113,16 @@ def handle_request(service, d: dict) -> dict:
         if kind == "train":
             decision = service.decide(build_train_request(d))
             return {"ok": True, **decision.to_json()}
+        if kind == "plan":
+            from ..plan import RemediationPlanner
+            cfg, policy, shape = _train_job(d)
+            planner = RemediationPlanner(service)
+            res = planner.plan(
+                cfg, policy, shape,
+                capacity=int(float(d.get("hbm_gib", 16.0)) * 2**30),
+                space=build_plan_space(d),
+                job_id=str(d.get("id", f"{d['arch']}-plan")))
+            return {"ok": True, **res.to_json()}
         if kind == "serve":
             from ..configs import get_config, get_smoke
             from .serve import pick_batch

@@ -36,7 +36,7 @@ HBM_BYTES = 16 * 2**30     # v5e
 def admission_check(cfg, policy: TrainPolicy, shape: ShapeSpec,
                     hbm_bytes: int = HBM_BYTES, shard_factor_fn=None,
                     verbose: bool = True, est: XMemEstimator | None = None,
-                    service=None):
+                    service=None, return_decision: bool = False):
     """xMem gate: estimate peak device memory a priori (CPU-only).
 
     Decisions route through the admission service
@@ -71,30 +71,47 @@ def admission_check(cfg, policy: TrainPolicy, shape: ShapeSpec,
               f"{hbm_bytes/2**30:.0f} GiB -> "
               f"{'ADMIT' if ok else 'REJECT'} "
               f"({decision.wall_s:.2f}s estimation{cache_note})")
+    if return_decision:
+        return ok, rep, decision
     return ok, rep
 
 
 def replan_if_needed(cfg, policy: TrainPolicy, shape, hbm_bytes,
                      shard_factor_fn=None, service=None):
-    """Auto-replan: double microbatches until the estimate fits.
+    """Auto-replan a rejected job through the remediation planner.
 
-    Doubling stops when the next factor would no longer divide the
-    global batch — ``_split_microbatches`` requires even splits, and a
-    non-divisible probe would crash the gate instead of re-gating."""
+    The planner's microbatch axis replaces the old ad-hoc doubling
+    loop: candidates are the accumulation factors that still divide the
+    global batch (``_split_microbatches`` requires even splits), they
+    are probed cheapest-modeled-cost first, and ``early_stop`` bails at
+    the first feasible offer — the same trace count as the doubling
+    loop, but the chosen plan comes back with its modeled slowdown and
+    is reproducible via ``CounterOffer.admission_request``."""
+    from ..plan import PlanSpace, RemediationPlanner
     from ..service import AdmissionService
-    p = policy
-    service = service or AdmissionService(workers=1)  # warm across loop
-    for _ in range(4):
-        ok, rep = admission_check(cfg, p, shape, hbm_bytes,
-                                  shard_factor_fn, service=service)
-        if ok:
-            return p, rep
-        nxt = p.microbatches * 2
-        if nxt > shape.global_batch or shape.global_batch % nxt:
-            break
-        p = dataclasses.replace(p, microbatches=nxt)
-        print(f"[xmem] replanning: microbatches -> {p.microbatches}")
-    return p, rep
+    service = service or AdmissionService(workers=1)  # warm across probes
+    ok, rep, decision = admission_check(cfg, policy, shape, hbm_bytes,
+                                        shard_factor_fn, service=service,
+                                        return_decision=True)
+    if ok:
+        return policy, rep
+    # microbatch axis only: batch size and remat belong to the caller,
+    # mirroring the replaced doubling loop's contract; the gate's own
+    # rejection is the baseline, so the planner does not re-estimate it
+    space = PlanSpace(batches=(), remat=(), devices=(), mb_doublings=3,
+                      early_stop=True, max_offers=1)
+    res = RemediationPlanner(service).plan(
+        cfg, policy, shape, capacity=hbm_bytes, space=space,
+        job_id=f"{cfg.name}/{shape.name}", baseline=decision,
+        shard_factor_fn=shard_factor_fn)
+    offer = res.best()
+    if offer is not None:
+        p = dataclasses.replace(policy, microbatches=offer.microbatches)
+        print(f"[xmem] replanning: microbatches -> {p.microbatches} "
+              f"(peak {offer.peak_bytes/2**30:.2f} GiB, modeled "
+              f"slowdown x{offer.slowdown:.2f})")
+        return p, offer.report
+    return policy, rep
 
 
 def train_loop(cfg, shape, policy: TrainPolicy, *, steps: int,

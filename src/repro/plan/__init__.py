@@ -1,0 +1,29 @@
+"""Remediation-planner subsystem (ISSUE 5).
+
+xMem's estimates are only as valuable as what a scheduler can *do* with
+them. Before this package, ``AdmissionService.decide`` answered a job
+that does not fit with a bare rejection even though every knob needed
+to make it fit already existed in the codebase (microbatches, remat,
+batch size, mesh topology, vocab padding). The planner closes that
+loop: given a rejected request and a capacity it searches the plan
+space — trace-frugally, on CPU — and returns ranked
+:class:`CounterOffer`\\ s, each carrying its per-device peak estimate,
+its safe threshold (Eq. 5) and a throughput cost from the analytic
+roofline terms, so "cheapest feasible" means lowest modeled slowdown.
+
+Entry points:
+
+* :class:`RemediationPlanner` — the search engine (shares the admission
+  service's trace cache / sweep paths);
+* :class:`PlanContext` — attach to ``AdmissionRequest.meta["plan"]``
+  and rejections come back with ``counter_offers`` populated;
+* ``CounterOffer.admission_request`` — rebuilds the exact request an
+  offer promises will fit (decisions reproduce bit-identically);
+* :func:`run_plan_search` — the ``--xmem-plan`` CLI / bench entry.
+"""
+from .cost import plan_cost  # noqa: F401
+from .planner import (CounterOffer, PlanContext, PlanResult,  # noqa: F401
+                      PlanSpace, RemediationPlanner, run_plan_search)
+
+__all__ = ["CounterOffer", "PlanContext", "PlanResult", "PlanSpace",
+           "RemediationPlanner", "plan_cost", "run_plan_search"]

@@ -1,0 +1,66 @@
+"""Throughput cost model for remediation plans (ISSUE 5).
+
+"Cheapest feasible" must mean *lowest modeled slowdown*, not smallest
+memory — a counter-offer that fits by quartering the batch is worthless
+if a microbatch split would have fit at a fraction of the cost. The
+planner therefore scores every candidate plan with the same analytic
+roofline terms the launch CLIs print (``launch/analytic.py``):
+
+* compute time = analytic FLOPs / peak FLOPs (remat-aware: full remat
+  pays the re-forward);
+* memory time = analytic HBM traffic / HBM bandwidth (microbatch-aware:
+  every microbatch re-reads the parameters; remat-aware: fewer
+  activation passes without remat);
+* step time = max of the two (the roofline);
+* **cost = device-seconds per trained token** — step time x device
+  count / tokens per step.  Device-seconds keeps topology offers honest
+  (a bigger mesh lowers per-device time but is not free hardware) and
+  batch offers honest (a smaller batch amortizes the fixed
+  parameter/optimizer traffic over fewer tokens).
+
+Offers are ranked by this cost; ``slowdown`` is the ratio against the
+rejected plan's cost, so ``slowdown=1.12`` reads as "12% more
+device-time per token than what you asked for".
+"""
+from __future__ import annotations
+
+from ..configs.base import ModelConfig, ShapeSpec
+from ..launch.analytic import analytic_bytes, analytic_flops
+
+# v5e-class chip constants — identical to launch/hillclimb.py (not
+# imported from there: that module sets XLA_FLAGS at import time)
+PEAK_FLOPS, HBM_BW = 197e12, 819e9
+
+# HBM passes over materialized activations per remat policy: full remat
+# writes, rewrites on the re-forward, and reads; no remat writes + reads
+ACT_PASSES = {"full": 3.0, "dots": 2.5, "none": 2.0}
+
+
+def plan_cost(cfg: ModelConfig, shape: ShapeSpec, *,
+              microbatches: int = 1, topology=None) -> dict:
+    """Roofline terms + device-seconds-per-token for one plan.
+
+    ``topology`` is a ``MeshTopology`` (or None for the single-device
+    plan); ``cfg.remat`` selects the re-forward FLOPs and activation
+    traffic; ``microbatches`` multiplies the parameter re-reads.
+    """
+    n_dev = topology.n_devices if topology is not None else 1
+    model_shards = topology.model if topology is not None else 1
+    fsdp_shards = (topology.pod * topology.data
+                   if topology is not None and topology.fsdp else 1)
+    refwd = cfg.remat == "full"
+    flops_dev = analytic_flops(cfg, shape, remat_refwd=refwd) / n_dev
+    bytes_dev = analytic_bytes(
+        cfg, shape, n_devices=n_dev, model_shards=model_shards,
+        fsdp_shards=max(fsdp_shards, 1),
+        microbatches=max(int(microbatches), 1),
+        act_passes=ACT_PASSES.get(cfg.remat, 3.0))
+    t_compute = flops_dev / PEAK_FLOPS
+    t_memory = bytes_dev / HBM_BW
+    t_step = max(t_compute, t_memory)
+    return {
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "step_time_s": t_step,
+        "device_s_per_token": n_dev * t_step / max(shape.tokens, 1),
+    }

@@ -1,0 +1,528 @@
+"""Remediation planner: rejections become cheapest-feasible counter-offers.
+
+Given a job the admission service just bounced, search the plan space —
+per-replica batch size, gradient-accumulation microbatches, remat
+policy, mesh topology, optional vocab padding — and return a ranked
+list of :class:`CounterOffer`\\ s that *do* fit the capacity, each
+scored by the analytic roofline cost model (``plan/cost.py``) so the
+first offer is the cheapest modeled slowdown, not merely the smallest
+memory.
+
+The search is **trace-frugal** by construction: every knob is routed
+through the cheapest estimation machinery that is exact for it.
+
+* **topology** — program structure is topology-independent, so the
+  whole (pod, data, model, fsdp) grid replays from ONE cached trace
+  (``SweepService.estimate_mesh_sweep``): zero fresh traces.
+* **batch size** — only avals change, so candidates ride
+  ``AdmissionService.decide_sweep``'s exact-or-bust affine
+  interpolation; the rejected batch itself is swept along as the warm
+  max-probe anchor, leaving ~2 fresh probe traces for the whole axis.
+* **microbatches / remat / pad_vocab** — these change the traced
+  program, so each distinct candidate costs one fresh forward trace
+  (optimizer phases stay warm through the content-addressed cache);
+  the default space keeps these axes small.
+
+A default search over ≥30 candidate plans costs ≤6 fresh traces
+(bench-asserted in ``benchmarks/perf_estimator.py``).
+
+Every offer is *reproducible*: ``CounterOffer.admission_request``
+rebuilds the exact (hooks, params, batch, shard factors, collective
+specs) tuple, and a direct ``AdmissionService.decide`` on it yields the
+offer's estimate bit-identically (pinned by tests/test_planner.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any
+
+from ..configs.base import ModelConfig, ShapeSpec
+from ..core.sweep import MeshTopology, topology_grid
+from ..service.admission import (AdmissionDecision, AdmissionRequest,
+                                 AdmissionService)
+from ..train.train_step import TrainPolicy, make_estimator_hooks
+from .cost import plan_cost
+
+_REMAT_ORDER = ("none", "dots", "full")     # ascending memory savings
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanSpace:
+    """Which knobs the planner may turn, and how far.
+
+    ``None`` means "derive a default grid from the rejected plan";
+    an empty tuple switches the axis off.
+    """
+
+    batches: tuple | None = None        # explicit per-replica batch grid
+    microbatches: tuple | None = None   # explicit accumulation factors
+    remat: tuple | None = None          # explicit remat rungs to try
+    devices: tuple = ()                 # device counts for the mesh grid
+    pods: tuple = (1,)                  # pod counts forwarded to the grid
+    base_topology: MeshTopology | None = None  # fixed mesh for ALL plans
+    pad_vocab_multiple: int | None = None      # padded-vocab mesh variants
+    batch_halvings: int = 3             # default batch grid depth
+    mb_doublings: int = 2               # default microbatch grid depth
+    max_offers: int = 5                 # ranked offers returned
+    early_stop: bool = False            # stop fresh-trace singles at the
+    #                                     first feasible offer (replan path)
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanContext:
+    """The structured job description a planner search needs — attach as
+    ``AdmissionRequest.meta["plan"]`` and a rejection comes back with
+    ``counter_offers`` populated."""
+
+    cfg: ModelConfig
+    policy: TrainPolicy
+    shape: ShapeSpec
+    space: PlanSpace = PlanSpace()
+
+
+@dataclasses.dataclass
+class CounterOffer:
+    """One feasible alternative plan for a rejected job."""
+
+    job_id: str
+    knob: str                       # axis that produced it
+    global_batch: int
+    microbatches: int
+    remat: str
+    topology: MeshTopology | None
+    pad_vocab_multiple: int | None
+    capacity: int
+    peak_bytes: int
+    safe_threshold: int             # Eq. 5: the estimate as memory cap
+    cost: dict                      # roofline terms (plan/cost.py)
+    slowdown: float                 # cost ratio vs the rejected plan
+    source: str                     # estimate provenance
+    report: Any = None              # EstimateReport (in-process use)
+
+    @property
+    def n_devices(self) -> int:
+        return self.topology.n_devices if self.topology is not None else 1
+
+    @property
+    def headroom_bytes(self) -> int:
+        return self.capacity - self.peak_bytes
+
+    def to_json(self) -> dict:
+        return {
+            "knob": self.knob,
+            "global_batch": self.global_batch,
+            "microbatches": self.microbatches,
+            "remat": self.remat,
+            "topology": (self.topology.label
+                         if self.topology is not None else None),
+            "n_devices": self.n_devices,
+            "pad_vocab_multiple": self.pad_vocab_multiple,
+            "peak_bytes": self.peak_bytes,
+            "safe_threshold": self.safe_threshold,
+            "headroom_bytes": self.headroom_bytes,
+            "slowdown": round(self.slowdown, 4),
+            "device_s_per_token": self.cost["device_s_per_token"],
+            "source": self.source,
+        }
+
+    # -- reproduction --------------------------------------------------------
+    def apply(self, cfg: ModelConfig, policy: TrainPolicy,
+              shape: ShapeSpec) -> tuple[ModelConfig, TrainPolicy,
+                                         ShapeSpec]:
+        """The offered (cfg, policy, shape) — the rejected job's tuple
+        with this offer's knobs applied."""
+        if self.remat != cfg.remat:
+            cfg = dataclasses.replace(cfg, remat=self.remat)
+        if self.pad_vocab_multiple != cfg.pad_vocab_multiple \
+                and self.pad_vocab_multiple is not None:
+            cfg = dataclasses.replace(
+                cfg, pad_vocab_multiple=self.pad_vocab_multiple)
+        if self.microbatches != policy.microbatches:
+            policy = dataclasses.replace(
+                policy, microbatches=self.microbatches)
+        if self.global_batch != shape.global_batch:
+            shape = dataclasses.replace(
+                shape, global_batch=self.global_batch)
+        return cfg, policy, shape
+
+    def admission_request(self, cfg: ModelConfig, policy: TrainPolicy,
+                          shape: ShapeSpec, *, capacity: int | None = None,
+                          job_id: str | None = None, shard_factor_fn=None,
+                          collective_specs=()) -> AdmissionRequest:
+        """The exact admission request this offer promises will fit —
+        ``AdmissionService.decide`` on it reproduces ``peak_bytes``
+        bit-identically (topology offers carry the same spec-driven
+        shard factors and collective specs the mesh sweep used; pass
+        ``shard_factor_fn``/``collective_specs`` when the original
+        request pinned its own execution model)."""
+        from ..configs.registry import input_specs
+        from ..models import model as M
+        cfg2, policy2, shape2 = self.apply(cfg, policy, shape)
+        fwd, upd, init = make_estimator_hooks(cfg2, policy2)
+        params = M.abstract_params(cfg2)
+        batch = input_specs(cfg2, shape2)
+        kw = _factor_kwargs(cfg2, params, batch, self.topology, init,
+                            shard_factor_fn, collective_specs)
+        return AdmissionRequest(
+            job_id or f"{self.job_id}+offer", fwd, params, batch,
+            update_fn=upd, opt_init_fn=init,
+            capacity=self.capacity if capacity is None else capacity,
+            **kw)
+
+
+@dataclasses.dataclass
+class PlanResult:
+    """Ranked offers + the rejecting baseline + search accounting."""
+
+    offers: list
+    baseline: AdmissionDecision
+    stats: dict
+
+    def best(self) -> CounterOffer | None:
+        return self.offers[0] if self.offers else None
+
+    def __iter__(self):
+        return iter(self.offers)
+
+    def __len__(self):
+        return len(self.offers)
+
+    def to_json(self) -> dict:
+        return {
+            "admit": self.baseline.admit,
+            "peak_bytes": self.baseline.peak_bytes,
+            "capacity": self.baseline.capacity,
+            "counter_offers": [o.to_json() for o in self.offers],
+            "stats": self.stats,
+        }
+
+
+# ---------------------------------------------------------------------------
+def _factor_kwargs(cfg, params, batch, topo: MeshTopology | None,
+                   opt_init_fn, custom_factor_fn=None,
+                   custom_collectives=(), opt_state=None) -> dict:
+    """shard_factor_fn / collective_specs for a plan's mesh — built the
+    way ``estimate_mesh_sweep`` builds them (spec mode, opt state from
+    ``eval_shape``), so direct decisions reproduce sweep estimates.
+    A caller-supplied factor fn / collective specs (the rejected
+    request's own execution model) override the mesh derivation;
+    ``opt_state`` short-circuits the per-candidate ``eval_shape`` (the
+    optimizer shapes are batch-invariant)."""
+    if custom_factor_fn is not None or custom_collectives:
+        kw = {}
+        if custom_factor_fn is not None:
+            kw["shard_factor_fn"] = custom_factor_fn
+        if custom_collectives:
+            kw["collective_specs"] = tuple(custom_collectives)
+        return kw
+    if topo is None:
+        return {}
+    import jax
+    from ..distributed.sharding import (mesh_collective_specs,
+                                        shard_factor_fn)
+    pol = topo.sharding_policy()
+    if opt_state is None and opt_init_fn is not None:
+        opt_state = jax.eval_shape(opt_init_fn, params)
+    return {
+        "shard_factor_fn": shard_factor_fn(
+            cfg, topo.axis_sizes, pol, params=params,
+            opt_state=opt_state, batch=batch),
+        "collective_specs": mesh_collective_specs(topo.axis_sizes, pol),
+    }
+
+
+def _batch_candidates(space: PlanSpace, b0: int, m0: int) -> tuple:
+    if space.batches is not None:
+        return tuple(b for b in space.batches
+                     if 0 < b < b0 and b % m0 == 0)
+    out, b = [], b0 // 2
+    for _ in range(space.batch_halvings):
+        if b < max(m0, 1) or b % m0:
+            break
+        out.append(b)
+        b //= 2
+    return tuple(out)
+
+
+def _mb_candidates(space: PlanSpace, b0: int, m0: int) -> tuple:
+    if space.microbatches is not None:
+        return tuple(m for m in space.microbatches
+                     if m > m0 and b0 % m == 0)
+    out, m = [], m0 * 2
+    for _ in range(space.mb_doublings):
+        if m > b0 or b0 % m:
+            break
+        out.append(m)
+        m *= 2
+    return tuple(out)
+
+
+def _remat_candidates(space: PlanSpace, cfg: ModelConfig) -> tuple:
+    cur = (_REMAT_ORDER.index(cfg.remat)
+           if cfg.remat in _REMAT_ORDER else len(_REMAT_ORDER) - 1)
+    if space.remat is not None:
+        return tuple(r for r in space.remat
+                     if r in _REMAT_ORDER and _REMAT_ORDER.index(r) > cur)
+    # default: only the strongest rung — each rung is one fresh trace
+    return ("full",) if cur < _REMAT_ORDER.index("full") else ()
+
+
+def _topologies(space: PlanSpace) -> tuple:
+    if space.base_topology is not None or not space.devices:
+        return ()
+    return tuple(t for n in space.devices
+                 for t in topology_grid(n, pods=space.pods))
+
+
+# ---------------------------------------------------------------------------
+class RemediationPlanner:
+    """Search the plan space around a rejected admission request.
+
+    Shares the service's content-addressed trace cache, its batched
+    sweep path and its mesh-sweep path, so repeated planner runs (and a
+    planner run right after the rejection that triggered it) stay warm.
+    """
+
+    def __init__(self, service: AdmissionService | None = None):
+        self.service = service or AdmissionService(workers=1)
+
+    # -- request plumbing ----------------------------------------------------
+    def _request(self, job_id, fwd, params, batch, upd, init, capacity,
+                 factor_kwargs) -> AdmissionRequest:
+        return AdmissionRequest(job_id, fwd, params, batch,
+                                update_fn=upd, opt_init_fn=init,
+                                capacity=capacity, **factor_kwargs)
+
+    # -- the search ----------------------------------------------------------
+    def plan(self, cfg: ModelConfig, policy: TrainPolicy,
+             shape: ShapeSpec, *, capacity: int,
+             space: PlanSpace | None = None, job_id: str = "job",
+             baseline: AdmissionDecision | None = None,
+             shard_factor_fn=None, collective_specs=()) -> PlanResult:
+        """Ranked counter-offers for (cfg, policy, shape) at ``capacity``.
+
+        ``baseline`` short-circuits the initial decision when the caller
+        already holds the rejection (the ``AdmissionService.decide``
+        wiring); ``shard_factor_fn`` / ``collective_specs`` pin the
+        rejected request's own execution model on every candidate — the
+        mesh axes (``devices`` / ``pad_vocab_multiple``) are disabled in
+        that case, since a topology offer under a foreign execution
+        model would quote a peak for the wrong sharding.
+        ``stats["fresh_traces"]``
+        counts trace-cache misses of the search itself (the baseline
+        decision, when the planner has to make it, is accounted
+        separately as ``baseline_traces``).
+        """
+        from ..configs.registry import input_specs
+        from ..models import model as M
+        space = space or PlanSpace()
+        svc = self.service
+        cache = svc.cache
+        t0 = time.perf_counter()
+        b0, m0 = shape.global_batch, max(policy.microbatches, 1)
+        base_topo = space.base_topology
+        fwd, upd, init = make_estimator_hooks(cfg, policy)
+        params = M.abstract_params(cfg)
+        batch0 = input_specs(cfg, shape)
+        # optimizer shapes are batch-invariant: resolve once for every
+        # candidate's spec factors instead of per-request
+        opt_state0 = None
+        if base_topo is not None and shard_factor_fn is None \
+                and init is not None:
+            import jax
+            opt_state0 = jax.eval_shape(init, params)
+
+        def factor_kw(c, b):
+            return _factor_kwargs(c, params, b, base_topo, init,
+                                  shard_factor_fn, collective_specs,
+                                  opt_state=opt_state0)
+
+        base_kw = factor_kw(cfg, batch0)
+        before = cache.thread_stats()
+        if baseline is None:
+            baseline = svc.decide(self._request(
+                f"{job_id}/baseline", fwd, params, batch0, upd, init,
+                capacity, base_kw))
+        baseline_traces = cache.thread_stats()["misses"] \
+            - before["misses"]
+
+        stats = {"capacity": capacity, "candidates": 0, "feasible": 0,
+                 "axes": {}, "baseline_traces": baseline_traces,
+                 "already_fits": bool(baseline.admit)}
+        if baseline.admit:
+            stats.update(fresh_traces=0, offers=0,
+                         wall_s=time.perf_counter() - t0)
+            return PlanResult([], baseline, stats)
+
+        before = cache.thread_stats()
+        base_cost = plan_cost(cfg, shape, microbatches=m0,
+                              topology=base_topo)
+        offers: list[CounterOffer] = []
+
+        def add(knob, peak, source, report, *, gb=b0, mb=m0, topo=base_topo,
+                cfg2=None, pad=None):
+            stats["candidates"] += 1
+            if peak > capacity:
+                return
+            stats["feasible"] += 1
+            c2 = cfg2 if cfg2 is not None else cfg
+            shape2 = (dataclasses.replace(shape, global_batch=gb)
+                      if gb != shape.global_batch else shape)
+            cost = plan_cost(c2, shape2, microbatches=mb, topology=topo)
+            offers.append(CounterOffer(
+                job_id=job_id, knob=knob, global_batch=gb,
+                microbatches=mb, remat=c2.remat, topology=topo,
+                pad_vocab_multiple=pad if pad is not None
+                else c2.pad_vocab_multiple,
+                capacity=capacity, peak_bytes=peak, safe_threshold=peak,
+                cost=cost,
+                slowdown=(cost["device_s_per_token"]
+                          / max(base_cost["device_s_per_token"], 1e-30)),
+                source=source, report=report))
+
+        # --- topology axis: trace-free replays of the cached phases ----
+        # a caller-pinned execution model (custom factors / collectives)
+        # describes the job's CURRENT placement; the planner cannot
+        # reason about how it composes with a different mesh, so the
+        # mesh axes are disabled rather than answered under the wrong
+        # model (enforces the documented mutual exclusivity)
+        custom_model = shard_factor_fn is not None \
+            or bool(collective_specs)
+        topos = () if custom_model else _topologies(space)
+        if topos:
+            res = svc.mesh_sweep(fwd, params, batch0, topos,
+                                 update_fn=upd, opt_init_fn=init, cfg=cfg)
+            for topo, rep in res:
+                add("topology", rep.peak_bytes, "mesh-sweep", rep,
+                    topo=topo)
+            stats["axes"]["topology"] = len(topos)
+
+        # --- padded-vocab mesh variants (only useful with model>1) -----
+        if (space.pad_vocab_multiple and not custom_model
+                and cfg.pad_vocab_multiple is None
+                and cfg.vocab % space.pad_vocab_multiple):
+            mp = tuple(t for t in topos if t.model > 1)
+            if mp:
+                cfgp = dataclasses.replace(
+                    cfg, pad_vocab_multiple=space.pad_vocab_multiple)
+                fwdp, updp, initp = make_estimator_hooks(cfgp, policy)
+                paramsp = M.abstract_params(cfgp)
+                batchp = input_specs(cfgp, shape)
+                resp = svc.mesh_sweep(fwdp, paramsp, batchp, mp,
+                                      update_fn=updp, opt_init_fn=initp,
+                                      cfg=cfgp)
+                for topo, rep in resp:
+                    add("pad_vocab", rep.peak_bytes, "mesh-sweep", rep,
+                        topo=topo, cfg2=cfgp,
+                        pad=space.pad_vocab_multiple)
+                stats["axes"]["pad_vocab"] = len(mp)
+
+        # --- batch axis: interpolated sweep, rejected batch as warm
+        # max-probe anchor (excluded from the offers) -------------------
+        batches = _batch_candidates(space, b0, m0)
+        if batches:
+            grid = (b0,) + batches
+            reqs = []
+            for b in grid:
+                shape_b = dataclasses.replace(shape, global_batch=b)
+                batch_b = input_specs(cfg, shape_b)
+                reqs.append(self._request(
+                    f"{job_id}/b{b}", fwd, params, batch_b, upd, init,
+                    capacity, factor_kw(cfg, batch_b)))
+            decisions = svc.decide_sweep(reqs)
+            for b, d in zip(grid, decisions):
+                if b == b0:
+                    continue
+                add("batch", d.peak_bytes, d.provenance["source"],
+                    d.report, gb=b)
+            stats["axes"]["batch"] = len(batches)
+            stats["sweep"] = decisions[0].provenance.get("sweep", {})
+
+        # --- microbatch / remat singles: each changes the traced
+        # program, so each candidate is one fresh forward trace ---------
+        singles: list[tuple] = []
+        for m in _mb_candidates(space, b0, m0):
+            singles.append(("microbatch", cfg,
+                            dataclasses.replace(policy, microbatches=m),
+                            {"mb": m}))
+        for r in _remat_candidates(space, cfg):
+            singles.append(("remat", dataclasses.replace(cfg, remat=r),
+                            policy, {}))
+        stats["axes"]["microbatch"] = sum(
+            1 for s in singles if s[0] == "microbatch")
+        stats["axes"]["remat"] = sum(1 for s in singles
+                                     if s[0] == "remat")
+        singles.sort(key=lambda s: plan_cost(
+            s[1], shape, microbatches=s[3].get("mb", m0),
+            topology=base_topo)["device_s_per_token"])
+        for knob, cfg2, pol2, meta in singles:
+            if space.early_stop and offers:
+                break
+            f2, u2, i2 = make_estimator_hooks(cfg2, pol2)
+            d = svc.decide(self._request(
+                f"{job_id}/{knob}{meta.get('mb', cfg2.remat)}", f2,
+                params, batch0, u2, i2, capacity, factor_kw(cfg2, batch0)))
+            add(knob, d.peak_bytes, d.provenance["source"], d.report,
+                mb=meta.get("mb", m0), cfg2=cfg2)
+
+        after = cache.thread_stats()
+        offers.sort(key=lambda o: (o.cost["device_s_per_token"],
+                                   o.n_devices, o.peak_bytes,
+                                   o.knob, o.global_batch))
+        offers = offers[:max(space.max_offers, 0)]
+        stats.update(offers=len(offers),
+                     fresh_traces=after["misses"] - before["misses"],
+                     wall_s=time.perf_counter() - t0)
+        return PlanResult(offers, baseline, stats)
+
+
+# ---------------------------------------------------------------------------
+def run_plan_search(arch: str, hbm_bytes: int, *, seq: int = 48,
+                    batch: int = 32, microbatches: int = 1,
+                    remat: str | None = None,
+                    devices: tuple = (4, 8, 16), smoke: bool = True,
+                    space: PlanSpace | None = None,
+                    service: AdmissionService | None = None,
+                    verbose: bool = True) -> dict:
+    """CLI/bench entry: plan a smoke-scale training job of ``arch`` that
+    does not fit ``hbm_bytes`` and print/return the ranked offers —
+    shared by ``hillclimb --xmem-plan`` and ``dryrun --xmem-plan``."""
+    from ..configs import get_config, get_smoke
+    from ..configs.base import smoke_shape
+    cfg = get_smoke(arch) if smoke else get_config(arch)
+    if remat is not None:
+        cfg = dataclasses.replace(cfg, remat=remat)
+    policy = TrainPolicy(optimizer="adamw",
+                         microbatches=max(int(microbatches), 1))
+    shape = smoke_shape(seq_len=seq, global_batch=batch)
+    space = space or PlanSpace(devices=tuple(devices))
+    planner = RemediationPlanner(service)
+    res = planner.plan(cfg, policy, shape, capacity=hbm_bytes,
+                       job_id=f"{cfg.name}-plan", space=space)
+    record = {"arch": cfg.name, "kind": "xmem_plan",
+              "hbm_bytes": hbm_bytes, "seq": seq, "batch": batch,
+              "microbatches": policy.microbatches, "remat": cfg.remat,
+              **res.to_json()}
+    if verbose:
+        if res.baseline.admit:
+            print(f"[xmem-plan] {cfg.name}: already fits "
+                  f"({res.baseline.peak_bytes/2**20:.2f} MiB <= "
+                  f"{hbm_bytes/2**20:.2f} MiB) — nothing to remediate",
+                  flush=True)
+        else:
+            print(f"[xmem-plan] {cfg.name}: rejected at "
+                  f"{res.baseline.peak_bytes/2**20:.2f} MiB vs "
+                  f"{hbm_bytes/2**20:.2f} MiB — "
+                  f"{res.stats['candidates']} candidates, "
+                  f"{res.stats['feasible']} feasible, "
+                  f"{res.stats['fresh_traces']} fresh traces, "
+                  f"{res.stats['wall_s']*1e3:.0f} ms", flush=True)
+            for i, o in enumerate(res.offers):
+                topo = o.topology.label if o.topology else "1dev"
+                print(f"[xmem-plan]   #{i+1} {o.knob:10s} "
+                      f"b={o.global_batch:<4d} mb={o.microbatches:<3d} "
+                      f"remat={o.remat:5s} {topo:12s} "
+                      f"peak={o.peak_bytes/2**20:7.2f} MiB "
+                      f"slowdown=x{o.slowdown:.2f}", flush=True)
+    return record

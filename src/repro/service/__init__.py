@@ -17,6 +17,14 @@ service:
   machinery;
 * ``repro.launch.served`` — the line-JSON TCP daemon exposing the
   service to schedulers.
+
+Rejections are not dead ends: a request carrying a structured
+``meta["plan"]`` context (``repro.plan.PlanContext``) and decided via
+``decide``/``submit`` comes back with ranked feasible counter-offers
+(ISSUE 5; the batched ``decide_sweep`` path does not plan — one search
+per rejected point would defeat the batching), and the cluster
+simulator's ``retry_rejections`` round re-admits bounced jobs on their
+best offer.
 """
 from .admission import (AdmissionDecision, AdmissionRequest,  # noqa: F401
                         AdmissionService)

@@ -76,6 +76,9 @@ class AdmissionDecision:
     wall_s: float
     min_feasible_capacity: int | None = None
     report: EstimateReport | None = None     # full report (in-process use)
+    # ranked feasible alternatives (ISSUE 5) — populated on rejection
+    # when the request carries a ``meta["plan"]`` PlanContext
+    counter_offers: list | None = None
 
     def to_json(self) -> dict:
         d = {k: getattr(self, k) for k in (
@@ -85,6 +88,9 @@ class AdmissionDecision:
         d["breakdown"] = {k: v for k, v in self.breakdown.items()
                           if k in ("phase_peaks", "num_blocks",
                                    "liveness_peak")}
+        if self.counter_offers is not None:
+            d["counter_offers"] = [o.to_json()
+                                   for o in self.counter_offers]
         return d
 
 
@@ -204,8 +210,33 @@ class AdmissionService:
                 req.fwd_bwd_fn, req.params, req.batch, report=rep)
         with self._lock:
             self.requests_served += 1
-        return self._decision(req, rep, _provenance(cache, before),
-                              time.perf_counter() - t0, min_cap)
+        decision = self._decision(req, rep, _provenance(cache, before),
+                                  time.perf_counter() - t0, min_cap)
+        return self._attach_counter_offers(req, decision)
+
+    def _attach_counter_offers(self, req: AdmissionRequest,
+                               decision: AdmissionDecision
+                               ) -> AdmissionDecision:
+        """ISSUE 5: a rejection whose request carries a structured plan
+        context (``meta["plan"]`` = ``repro.plan.PlanContext``) comes
+        back with ranked counter-offers instead of a bare no. Planner-
+        internal probe requests carry no context, so this cannot
+        recurse."""
+        ctx = req.meta.get("plan") if req.meta else None
+        if ctx is None or decision.admit:
+            return decision
+        from ..plan import RemediationPlanner
+        # candidates must be estimated under the request's OWN execution
+        # model — a per-device rejection (custom shard factors /
+        # collective specs) must not be answered with whole-model offers
+        result = RemediationPlanner(self).plan(
+            ctx.cfg, ctx.policy, ctx.shape, capacity=req.capacity,
+            space=ctx.space, job_id=req.job_id, baseline=decision,
+            shard_factor_fn=req.shard_factor_fn,
+            collective_specs=req.collective_specs)
+        decision.counter_offers = result.offers
+        decision.provenance["plan"] = result.stats
+        return decision
 
     def decide_serving(self, job_id: str, decode_fn: Callable, params,
                        cache_tree, batch, *, capacity: int,
@@ -255,7 +286,10 @@ class AdmissionService:
                      ) -> list[AdmissionDecision]:
         """Batched decisions through ``SweepService.estimate_many`` —
         requests sharing structure (a batch-size admission sweep) pay
-        three probe traces, the rest interpolate."""
+        three probe traces, the rest interpolate. ``meta["plan"]``
+        contexts are ignored on this path (a planner search per
+        rejected point would defeat the batching); route individual
+        rejections through ``decide`` for counter-offers."""
         t0 = time.perf_counter()
         cache = self.cache
         points = [SweepPoint(
@@ -279,6 +313,24 @@ class AdmissionService:
             self.requests_served += len(reqs)
         return [self._decision(r, rep, copy.deepcopy(prov), wall, None)
                 for r, rep in zip(reqs, result.reports)]
+
+    def mesh_sweep(self, fwd_bwd_fn, params, batch, topologies, *,
+                   update_fn=None, opt_init_fn=None, cfg=None,
+                   shard_factors: str = "spec", collectives: bool = True,
+                   capacity: int | None = None):
+        """Per-device estimates over a mesh-topology grid from ONE
+        cached trace (``SweepService.estimate_mesh_sweep``), serialized
+        on the service's single sweep estimator like ``decide_sweep`` —
+        the remediation planner's trace-free topology axis."""
+        with self._sweep_lock:
+            result = self.sweep.estimate_mesh_sweep(
+                fwd_bwd_fn, params, batch, topologies,
+                update_fn=update_fn, opt_init_fn=opt_init_fn, cfg=cfg,
+                shard_factors=shard_factors, collectives=collectives,
+                capacity=capacity)
+        with self._lock:
+            self.requests_served += len(result)
+        return result
 
     def stats(self) -> dict:
         return {"requests_served": self.requests_served,

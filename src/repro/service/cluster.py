@@ -42,12 +42,16 @@ class JobArrival:
     family: str = "workload"
     device: str = "sim"
     arrival_s: float = 0.0
+    # structured job description (repro.plan.PlanContext) — enables
+    # counter-offers on rejection and the simulator's retry round
+    plan: Any | None = None
 
     def request(self) -> AdmissionRequest:
         return AdmissionRequest(
             self.job_id, self.fwd_bwd_fn, self.params, self.batch,
             update_fn=self.update_fn, opt_init_fn=self.opt_init_fn,
-            capacity=self.capacity)
+            capacity=self.capacity,
+            meta={"plan": self.plan} if self.plan is not None else {})
 
 
 @dataclasses.dataclass
@@ -57,6 +61,9 @@ class ClusterOutcome:
     decisions: list[AdmissionDecision]
     records: list[metrics.RunRecord]
     summary: dict
+    # (job_id, CounterOffer) per job that was re-admitted on a
+    # counter-offer during the retry round (ISSUE 5)
+    retries: list = dataclasses.field(default_factory=list)
 
     def __iter__(self):
         return iter(zip(self.decisions, self.records))
@@ -70,13 +77,41 @@ class ClusterSimulator:
         self.service = service
         self.truth_fn = truth_fn
 
-    def replay(self, arrivals: Sequence[JobArrival]) -> ClusterOutcome:
+    def replay(self, arrivals: Sequence[JobArrival],
+               retry_rejections: bool = False) -> ClusterOutcome:
+        """Replay the arrival trace; with ``retry_rejections`` every
+        rejection that came back with counter-offers (the arrival must
+        carry a ``plan`` context) is re-submitted on its best offer, and
+        the retry decision is what gets scored — the two-round metrics
+        then quantify planning vs. plain rejection on the same trace.
+
+        Truth accounting: ``truth_bytes`` describes the job *as
+        requested*; a job re-admitted on a counter-offer runs a
+        different plan, so its truth falls back to ``truth_fn`` (called
+        on the retry decision) or to the offer's own estimate."""
         t0 = time.perf_counter()
         decisions: list[AdmissionDecision] = []
         records: list[metrics.RunRecord] = []
+        retries: list = []
         for job in arrivals:
-            d = self.service.decide(job.request())
-            truth = job.truth_bytes
+            req = job.request()
+            if not retry_rejections:
+                # plain-rejection round: do not pay for a planner search
+                # whose offers would be discarded anyway
+                req.meta.pop("plan", None)
+            d = self.service.decide(req)
+            offer = None
+            if retry_rejections and not d.admit and d.counter_offers \
+                    and job.plan is not None:
+                best = d.counter_offers[0]
+                retry = self.service.decide(best.admission_request(
+                    job.plan.cfg, job.plan.policy, job.plan.shape,
+                    capacity=job.capacity,
+                    job_id=f"{job.job_id}+offer"))
+                if retry.admit:
+                    d, offer = retry, best
+                    retries.append((job.job_id, best))
+            truth = job.truth_bytes if offer is None else None
             if truth is None and self.truth_fn is not None:
                 truth = self.truth_fn(d)
             if truth is None:
@@ -91,9 +126,10 @@ class ClusterSimulator:
         summary = score(records)
         summary.update(
             wall_s=wall,
+            replanned=len(retries),
             requests_per_s=(len(arrivals) / wall if wall > 0
                             and arrivals else 0.0))
-        return ClusterOutcome(decisions, records, summary)
+        return ClusterOutcome(decisions, records, summary, retries)
 
 
 def score(records: Sequence[metrics.RunRecord]) -> dict:

@@ -2,13 +2,15 @@
 elasticity."""
 from .checkpoint import CheckpointManager
 from .data import DataConfig, SyntheticDataset
-from .elastic import MeshPlan, StragglerMonitor, replan_mesh
+from .elastic import (ElasticReplan, MeshPlan, StragglerMonitor,
+                      replan_mesh, shrink_and_replan)
 from .optimizer import OPTIMIZERS, Optimizer, clip_by_global_norm, get_optimizer
 from .train_step import (TrainPolicy, make_estimator_hooks, make_fwd_bwd,
                          make_prefill_step, make_serve_step, make_train_step)
 
 __all__ = ["CheckpointManager", "DataConfig", "SyntheticDataset", "MeshPlan",
-           "StragglerMonitor", "replan_mesh", "OPTIMIZERS", "Optimizer",
+           "ElasticReplan", "StragglerMonitor", "replan_mesh",
+           "shrink_and_replan", "OPTIMIZERS", "Optimizer",
            "clip_by_global_norm", "get_optimizer", "TrainPolicy",
            "make_estimator_hooks", "make_fwd_bwd", "make_prefill_step",
            "make_serve_step", "make_train_step"]

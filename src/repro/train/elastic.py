@@ -50,6 +50,12 @@ def replan_mesh(current: MeshPlan, available_devices: int,
     # prefer keeping pods balanced: largest pod count that divides
     pod = math.gcd(current.pod, replicas) or 1
     data = replicas // pod
+    if pod * data < replicas:
+        # unreachable while the carve is a gcd (a gcd of replicas always
+        # divides it) — kept as a hard floor so any future pod-selection
+        # change that picks a non-divisor falls back to a flat data axis
+        # instead of silently stranding replicas
+        pod, data = 1, replicas
     return MeshPlan(pod=pod, data=data, model=model)
 
 
@@ -59,6 +65,62 @@ def reshard_batch_size(global_batch: int, old: MeshPlan, new: MeshPlan
     divisible, round up per-replica and trim in the data pipeline)."""
     replicas = new.pod * new.data
     return -(-global_batch // replicas)
+
+
+@dataclasses.dataclass
+class ElasticReplan:
+    """Outcome of a shrink event: the re-carved mesh, the admission
+    decision on it, and — when the old policy no longer fits — the
+    planner's counter-offer already applied to (cfg, policy, shape)."""
+
+    plan: MeshPlan                  # the re-carved mesh
+    topology: object                # MeshTopology used for admission
+    decision: object                # AdmissionDecision on the new mesh
+    offer: object | None            # applied CounterOffer (or None)
+    cfg: object
+    policy: object
+    shape: object
+
+    @property
+    def admitted(self) -> bool:
+        return bool(self.decision.admit or self.offer is not None)
+
+
+def shrink_and_replan(cfg, policy, shape, current: MeshPlan,
+                      available_devices: int, hbm_bytes: int, *,
+                      fsdp: bool | None = None, min_model: int = 1,
+                      service=None, space=None) -> ElasticReplan:
+    """Shrink event -> planner (ISSUE 5): after ``replan_mesh``
+    re-carves the mesh, re-admit the job on the new topology with
+    spec-driven per-device factors instead of assuming the old policy
+    still fits; on rejection, search microbatch/batch remediations *on
+    that mesh* (``PlanSpace.base_topology``) and apply the best
+    counter-offer. Returns the updated (cfg, policy, shape) alongside
+    the decision, so the training driver can restart from checkpoint
+    with a plan that actually fits the smaller fleet."""
+    import dataclasses as dc
+
+    from ..core.sweep import MeshTopology
+    from ..plan import PlanSpace, RemediationPlanner
+
+    new = replan_mesh(current, available_devices, min_model=min_model)
+    if fsdp is None:
+        fsdp = cfg.param_count() > 8e9
+    topo = MeshTopology(pod=new.pod, data=new.data, model=new.model,
+                        fsdp=bool(fsdp) and new.pod * new.data > 1)
+    space = space or PlanSpace(remat=())
+    space = dc.replace(space, base_topology=topo, devices=())
+    planner = RemediationPlanner(service)
+    res = planner.plan(cfg, policy, shape, capacity=hbm_bytes,
+                       space=space, job_id=f"{cfg.name}/shrink")
+    offer = None
+    cfg2, policy2, shape2 = cfg, policy, shape
+    if not res.baseline.admit and res.offers:
+        offer = res.offers[0]
+        cfg2, policy2, shape2 = offer.apply(cfg, policy, shape)
+    return ElasticReplan(plan=new, topology=topo, decision=res.baseline,
+                         offer=offer, cfg=cfg2, policy=policy2,
+                         shape=shape2)
 
 
 class StragglerMonitor:
