@@ -1,7 +1,8 @@
 PYTHONPATH := src
 export PYTHONPATH
 
-.PHONY: test test-fast bench bench-check serve-bench report
+.PHONY: test test-fast chaos-test bench bench-check serve-bench \
+	plan-bench degrade-bench report
 
 test:            ## tier-1 test suite
 	python -m pytest -x -q
@@ -10,6 +11,11 @@ test:            ## tier-1 test suite
 # socket round-trip and accumulation-hillclimb cases are slow-marked
 test-fast:       ## tier-1 subset (<60 s): skips the slow smoke-arch suite
 	python -m pytest -x -q -m "not slow"
+
+# the ISSUE 6 fault matrix: degradation ladder, deadline budgets, store
+# corruption/quarantine recovery, chaos replays, daemon hardening
+chaos-test:      ## fault-injection + chaos acceptance suite
+	python -m pytest -x -q tests/test_faults.py
 
 bench:           ## full estimator benchmark; refreshes BENCH_estimator.json
 	python -m benchmarks.perf_estimator
@@ -28,6 +34,11 @@ serve-bench:     ## admission-service request-throughput benchmark only
 # BENCH_estimator.json without re-running the full benchmark
 plan-bench:      ## remediation-planner benchmark only
 	python -m benchmarks.perf_estimator --planner-only
+
+# merges the degradation-ladder keys (degraded-rung rps, ladder
+# overhead, deadline rescue) into BENCH_estimator.json
+degrade-bench:   ## degradation-ladder benchmark only
+	python -m benchmarks.perf_estimator --degrade-only
 
 report:          ## render artifact tables
 	python -m benchmarks.report

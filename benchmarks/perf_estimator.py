@@ -304,6 +304,10 @@ def run_benchmark(warm_calls: int = 10, cold_samples: int = 5) -> dict:
     # remediation planner (ISSUE 5): plans/s + trace frugality
     planner = measure_planner()
 
+    # degradation ladder (ISSUE 6): degraded-rung throughput + the
+    # ladder's cost to the fault-free warm path
+    degradation = measure_degradation()
+
     # large-N: composition + replay must stay ~flat for the fast path
     largeN_fast = _median(lambda: estimate(XMemEstimator.for_tpu(
         iterations=64, trace_cache=warm_est.trace_cache)), 3)
@@ -351,6 +355,7 @@ def run_benchmark(warm_calls: int = 10, cold_samples: int = 5) -> dict:
         "mesh_sweep_identical": mesh_identical,
         **service,
         **planner,
+        **degradation,
         "largeN_iterations": 64,
         "largeN_fast_s": round(largeN_fast, 5),
         "largeN_slow_s": round(largeN_slow, 5),
@@ -544,6 +549,101 @@ def measure_service(warm_requests: int = 20,
     }
 
 
+def measure_degradation(requests: int = 40) -> dict:
+    """Degradation-ladder costs (ISSUE 6): what a degraded answer costs
+    (rung-2 sweep-log and rung-3 analytic decisions are pure CPU
+    arithmetic — they must be far FASTER than exact replay, that is the
+    point of degrading under deadline pressure), and what the ladder
+    machinery costs the fault-free path (inline fast path vs the
+    deadline-engaged ladder path on the same warm workload)."""
+    from repro.core.cache import TraceCache
+    from repro.service import (AdmissionService, FaultPlan, FaultSpec,
+                               plan_raising_at)
+
+    # fault-free inline fast path (the PR-5 code path, unchanged)
+    svc = AdmissionService(workers=2, cache=TraceCache())
+    svc.decide(_service_request(0))
+    t0 = time.perf_counter()
+    for i in range(requests):
+        svc.decide(_service_request(i + 1))
+    inline_rps = requests / (time.perf_counter() - t0)
+
+    # same warm workload with the ladder engaged (deadline set): pays a
+    # side thread + deadline bookkeeping per decide
+    svc_l = AdmissionService(workers=2, cache=TraceCache(),
+                             deadline_s=120.0)
+    svc_l.decide(_service_request(0))
+    t0 = time.perf_counter()
+    for i in range(requests):
+        d = svc_l.decide(_service_request(i + 1))
+    ladder_rps = requests / (time.perf_counter() - t0)
+    ladder_ok = not d.degraded
+
+    # rung 2: decision log is warm, replay permanently down
+    with svc_l.inject_faults(plan_raising_at("replay")):
+        t0 = time.perf_counter()
+        for i in range(requests):
+            d = svc_l.decide(_service_request(1000 + i))
+        sweep_rps = requests / (time.perf_counter() - t0)
+        sweep_ok = d.rung == "sweep" and d.margin > 1.0
+
+    # rung 3: cold service, tracer permanently down -> analytic bound
+    svc3 = AdmissionService(workers=1, cache=TraceCache())
+    with svc3.inject_faults(plan_raising_at("tracer")):
+        t0 = time.perf_counter()
+        for i in range(requests):
+            d = svc3.decide(_service_request(2000 + i))
+        analytic_rps = requests / (time.perf_counter() - t0)
+        analytic_ok = d.rung == "analytic" and d.margin > 1.0
+
+    # deadline rescue: a hung trace answered degraded within budget
+    svc4 = AdmissionService(workers=1, cache=TraceCache())
+    plan = FaultPlan([FaultSpec("tracer", "hang", hang_s=30.0,
+                                times=None)])
+    with svc4.inject_faults(plan):
+        req = _service_request(3000)
+        req.deadline_s = 0.25
+        t0 = time.perf_counter()
+        d = svc4.decide(req)
+        rescue_s = time.perf_counter() - t0
+    rescue_ok = d.degraded and rescue_s < 5.0
+    for s in (svc, svc_l, svc3, svc4):
+        s.close()
+    return {
+        "service_inline_warm_rps": round(inline_rps, 2),
+        "service_ladder_warm_rps": round(ladder_rps, 2),
+        # <1.0 means the ladder machinery slowed the warm path
+        "ladder_overhead_ratio": round(ladder_rps / inline_rps, 3),
+        "degraded_sweep_rps": round(sweep_rps, 2),
+        "degraded_analytic_rps": round(analytic_rps, 2),
+        "deadline_rescue_s": round(rescue_s, 4),
+        "degradation_ok": bool(ladder_ok and sweep_ok and analytic_ok
+                               and rescue_ok),
+        # degraded answers must be much cheaper than exact replay
+        "meets_degraded_fast_target": (sweep_rps > inline_rps
+                                       and analytic_rps > inline_rps),
+    }
+
+
+def quick_degrade_snapshot() -> dict:
+    """Degraded-rung-throughput-only measurement for the perf gate
+    (``report.py --check``): rung-3 decisions on a cold service with the
+    tracer down — pure CPU arithmetic, no tracing, no replay."""
+    from repro.core.cache import TraceCache
+    from repro.service import AdmissionService, plan_raising_at
+
+    svc = AdmissionService(workers=1, cache=TraceCache())
+    n = 30
+    with svc.inject_faults(plan_raising_at("tracer")):
+        svc.decide(_service_request(0))     # warm imports/jit-free path
+        t0 = time.perf_counter()
+        for i in range(n):
+            svc.decide(_service_request(i + 1))
+        rps = n / (time.perf_counter() - t0)
+    svc.close()
+    return {"degraded_analytic_rps": round(rps, 2)}
+
+
 PLANNER_TRACE_BUDGET = 6        # fresh traces allowed per plan search
 
 
@@ -725,6 +825,10 @@ def main() -> int:
                     help="measure only the remediation planner (plans/s,"
                          " trace frugality) and merge it into --out "
                          "(make plan-bench)")
+    ap.add_argument("--degrade-only", action="store_true",
+                    help="measure only the degradation ladder (degraded-"
+                         "rung rps, ladder overhead, deadline rescue) "
+                         "and merge it into --out")
     args = ap.parse_args()
     if args.cold_probe:
         print(f"{_estimate_once(args.cold_probe):.6f}")
@@ -735,6 +839,11 @@ def main() -> int:
         return 0 if (planner["meets_planner_trace_budget"]
                      and planner["planner_identical"]
                      and planner["planner_warm_zero_traces"]) else 1
+    if args.degrade_only:
+        degradation = measure_degradation()
+        _merge_into(args.out, degradation, "degradation")
+        return 0 if (degradation["degradation_ok"]
+                     and degradation["meets_degraded_fast_target"]) else 1
     if args.service_only:
         service = measure_service()
         _merge_into(args.out, service, "service")
@@ -759,7 +868,9 @@ def main() -> int:
           and out["service_restart_zero_retrace"]
           and out["meets_service_warm_target"]
           and out["meets_planner_trace_budget"]
-          and out["planner_identical"])
+          and out["planner_identical"]
+          and out["degradation_ok"]
+          and out["meets_degraded_fast_target"])
     return 0 if ok else 1
 
 

@@ -219,6 +219,24 @@ def perf_check(baseline_path: str = "BENCH_estimator.json",
     else:
         print("[bench-check] baseline predates the admission service; "
               "skipping that check (refresh BENCH_estimator.json)")
+    rec_degraded = baseline.get("degraded_analytic_rps")
+    if rec_degraded:
+        # ISSUE 6: degraded answers exist to rescue deadline-pressured
+        # requests — rung-3 decisions must stay fast (no tracing, no
+        # replay) AND far faster than the exact warm path the service
+        # gate above just measured
+        from benchmarks.perf_estimator import quick_degrade_snapshot
+        fresh_deg = quick_degrade_snapshot()["degraded_analytic_rps"]
+        dfloor = rec_degraded * (1.0 - max_regression)
+        dok = fresh_deg >= dfloor
+        print(f"[bench-check] degraded analytic decisions/s: "
+              f"fresh={fresh_deg:,.1f} recorded={rec_degraded:,.1f} "
+              f"floor={dfloor:,.1f} -> "
+              f"{'OK' if dok else 'REGRESSION'}")
+        ok = ok and dok
+    else:
+        print("[bench-check] baseline predates the degradation ladder; "
+              "skipping that check (refresh BENCH_estimator.json)")
     return 0 if ok else 1
 
 

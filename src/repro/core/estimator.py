@@ -264,7 +264,8 @@ class XMemEstimator:
                  capacity: int = 1 << 62,
                  fastpath: bool = True,
                  trace_cache: TraceCache | None = None,
-                 engine: str = "auto"):
+                 engine: str = "auto",
+                 checkpoint: Callable[[str], None] | None = None):
         self.allocator_policy = allocator_policy
         self.orchestrator = MemoryOrchestrator(
             orchestrator_policy or OrchestratorPolicy())
@@ -292,6 +293,11 @@ class XMemEstimator:
         # silently discard a fresh user-supplied cache
         self.trace_cache = ((GLOBAL_TRACE_CACHE if trace_cache is None
                              else trace_cache) if fastpath else None)
+        # optional stage-boundary hook ("tracer" before a real trace,
+        # "replay" before the allocator replay). The admission service
+        # routes fault injection through it (ISSUE 6); None costs one
+        # attribute test per stage and changes nothing.
+        self.checkpoint = checkpoint
 
     @classmethod
     def for_tpu(cls, **kw) -> "XMemEstimator":
@@ -355,6 +361,8 @@ class XMemEstimator:
             hit = cache.get(fn, key)
             if hit is not None:
                 return hit
+        if self.checkpoint is not None:
+            self.checkpoint("tracer")
 
         def flat_fn(*leaves):
             idx, rebuilt = 0, []
@@ -770,6 +778,8 @@ class XMemEstimator:
         num_events = (len(fwd.trace.events)
                       + (len(upd.trace.events) if upd else 0)
                       + (len(init.trace.events) if init else 0))
+        if self.checkpoint is not None:
+            self.checkpoint("replay")
         sim_runner = MemorySimulator(self.allocator_policy,
                                      capacity or self.capacity,
                                      engine=self.engine)

@@ -119,3 +119,38 @@ def analytic_bytes(cfg: ModelConfig, shape: ShapeSpec, *,
     return p_dev + 2.0 * cache_dev \
         + (shape.global_batch / dp) * cfg.d_model * dtype_b \
         * act_tensors_per_layer * cfg.n_layers
+
+
+def analytic_peak_bytes(cfg: ModelConfig, shape: ShapeSpec, *,
+                        microbatches: int = 1,
+                        with_optimizer: bool = True,
+                        opt_state_mult: float = 2.0,
+                        act_tensors_per_layer: float = 14.0,
+                        model_shards: int = 1,
+                        fsdp_shards: int = 1) -> int:
+    """Closed-form **upper bound** on the per-device peak (bytes).
+
+    The degradation ladder's last rung (ISSUE 6): when replay and the
+    decision log are both unavailable, the admission service answers
+    from this bound with a widened safety margin. It deliberately
+    over-counts — full activation materialization with NO remat credit,
+    fp32 optimizer moments, grads coexisting with parameters, plus the
+    logits/loss buffers — so a degraded admit stays OOM-safe; the cost
+    is headroom, never correctness.
+    """
+    dtype_b = cfg.dtype.itemsize
+    shards = model_shards * fsdp_shards
+    params = cfg.param_count() * dtype_b / shards
+    grads = params if shape.kind == "train" else 0.0
+    opt = (cfg.param_count() * 4.0 * opt_state_mult / shards
+           if with_optimizer and shape.kind == "train" else 0.0)
+    if shape.kind == "decode":
+        tokens = shape.global_batch
+    else:
+        tokens = shape.tokens / max(int(microbatches), 1)
+    acts = tokens * cfg.d_model * dtype_b \
+        * act_tensors_per_layer * cfg.n_layers
+    # output head: logits + fp32 softmax/loss scratch
+    logits = tokens * cfg.padded_vocab() * (dtype_b + 4.0)
+    inputs = shape.tokens * 4.0 * 2.0      # token ids + targets (int32)
+    return int(params + grads + opt + acts + logits + inputs)

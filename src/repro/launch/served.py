@@ -28,6 +28,18 @@ Request kinds:
   answers a non-fitting job with ranked feasible counter-offers
   (ISSUE 5); grid keys are optional (defaults derive from the job)
 * ``stats`` / ``ping`` / ``shutdown``
+* ``health`` — degradation/robustness diagnostics (ISSUE 6): rung
+  counters, retry/timeout totals, store + quarantine state, queue
+  depth, daemon in-flight/rejected counts
+
+Hardening (ISSUE 6): request lines are length-bounded (oversized or
+malformed lines get a structured ``{"kind": "error"}`` response and the
+connection stays up), reads carry a per-connection idle timeout,
+``--max-in-flight`` sheds load with ``{"kind": "overloaded"}`` instead
+of queueing without bound, and shutdown drains in-flight requests
+(new requests are refused with ``{"kind": "draining"}``). ``train``
+requests honor a wire-level ``deadline_s`` budget — over-deadline
+estimates are answered degraded (see ``repro.service.degrade``).
 """
 from __future__ import annotations
 
@@ -76,13 +88,15 @@ def build_train_request(d: dict):
 
     cfg, policy, shape = _train_job(d)
     fwd_bwd, update, opt_init = make_estimator_hooks(cfg, policy)
+    deadline = d.get("deadline_s")
     return AdmissionRequest(
         job_id=str(d.get("id", f"{d['arch']}-b{shape.global_batch}")),
         fwd_bwd_fn=fwd_bwd, params=M.abstract_params(cfg),
         batch=input_specs(cfg, shape), update_fn=update,
         opt_init_fn=opt_init,
         capacity=int(float(d.get("hbm_gib", 16.0)) * 2**30),
-        probe_min_capacity=bool(d.get("probe_min_capacity", False)))
+        probe_min_capacity=bool(d.get("probe_min_capacity", False)),
+        deadline_s=float(deadline) if deadline is not None else None)
 
 
 def build_plan_space(d: dict):
@@ -100,7 +114,7 @@ def build_plan_space(d: dict):
         max_offers=int(d.get("max_offers", 5)))
 
 
-def handle_request(service, d: dict) -> dict:
+def handle_request(service, d: dict, server=None) -> dict:
     """One wire request -> one JSON-safe response dict."""
     kind = d.get("kind", "train")
     try:
@@ -108,6 +122,11 @@ def handle_request(service, d: dict) -> dict:
             return {"ok": True, "pong": True}
         if kind == "stats":
             return {"ok": True, "stats": service.stats()}
+        if kind == "health":
+            h = service.health()
+            if server is not None:
+                h["daemon"] = server.daemon_stats()
+            return {"ok": True, "health": h}
         if kind == "shutdown":
             return {"ok": True, "shutdown": True}
         if kind == "train":
@@ -150,34 +169,160 @@ def handle_request(service, d: dict) -> dict:
 
 
 class _Handler(socketserver.StreamRequestHandler):
+    """Hardened line-JSON handler (ISSUE 6).
+
+    A malformed or oversized line costs the CLIENT one structured
+    ``{"kind": "error"}`` response, never the daemon its connection or
+    its process; an idle connection is dropped at the read timeout; a
+    daemon at its in-flight cap answers ``{"kind": "overloaded"}``
+    immediately instead of queueing the request behind the pool."""
+
+    def setup(self):
+        super().setup()
+        self.connection.settimeout(self.server.read_timeout)
+
+    def _send(self, resp: dict) -> None:
+        self.wfile.write((json.dumps(resp) + "\n").encode())
+        self.wfile.flush()
+
+    def _read_line(self):
+        """One bounded line; None at EOF/timeout (drop the connection),
+        False for an oversized line (already answered + drained)."""
+        limit = self.server.max_line_bytes
+        try:
+            raw = self.rfile.readline(limit + 1)
+        except (TimeoutError, socket.timeout, OSError):
+            return None
+        if not raw:
+            return None
+        if len(raw) > limit and not raw.endswith(b"\n"):
+            # drain the remainder of the oversized line so the NEXT
+            # line parses cleanly, then refuse this one
+            while True:
+                try:
+                    chunk = self.rfile.readline(limit)
+                except (TimeoutError, socket.timeout, OSError):
+                    return None
+                if not chunk or chunk.endswith(b"\n"):
+                    break
+            self.server.oversized += 1
+            self._send({"ok": False, "kind": "error",
+                        "error": f"request line exceeds "
+                                 f"{limit} bytes"})
+            return False
+        return raw
+
     def handle(self):
-        for raw in self.rfile:
+        server = self.server
+        service = server.service
+        while True:
+            raw = self._read_line()
+            if raw is None:
+                return
+            if raw is False:
+                continue
             line = raw.strip()
             if not line:
                 continue
+            if server.faults is not None:
+                try:
+                    server.faults.check("socket")
+                except Exception as e:  # noqa: BLE001 — injected socket fault
+                    self._send({"ok": False, "kind": "error",
+                                "error": f"socket fault: {e}"})
+                    continue
             try:
                 d = json.loads(line)
+                if not isinstance(d, dict):
+                    raise ValueError("request must be a JSON object")
             except ValueError as e:
-                resp = {"ok": False, "error": f"bad JSON: {e}"}
-            else:
-                resp = handle_request(self.server.service, d)
-            self.wfile.write((json.dumps(resp) + "\n").encode())
-            self.wfile.flush()
+                server.malformed += 1
+                self._send({"ok": False, "kind": "error",
+                            "error": f"bad JSON: {e}"})
+                continue
+            if server.draining:
+                self._send({"ok": False, "kind": "draining",
+                            "error": "daemon is shutting down"})
+                continue
+            if not server.enter():
+                server.rejected_overload += 1
+                self._send({"ok": False, "kind": "overloaded",
+                            "error": f"daemon at max in-flight "
+                                     f"({server.max_in_flight})"})
+                continue
+            try:
+                resp = handle_request(service, d, server=server)
+            finally:
+                server.leave()
+            self._send(resp)
             if resp.get("shutdown"):
-                threading.Thread(target=self.server.shutdown,
+                threading.Thread(target=server.graceful_shutdown,
                                  daemon=True).start()
                 return
 
 
 class AdmissionServer(socketserver.ThreadingTCPServer):
-    """Line-JSON TCP front of an :class:`AdmissionService`."""
+    """Line-JSON TCP front of an :class:`AdmissionService`.
+
+    ``read_timeout`` bounds how long an idle connection may hold a
+    handler thread; ``max_line_bytes`` bounds a single request line;
+    ``max_in_flight`` bounds concurrently-executing requests
+    (backpressure — excess requests are refused as ``overloaded``, the
+    scheduler's cue to retry with backoff rather than pile up)."""
 
     allow_reuse_address = True
     daemon_threads = True
 
-    def __init__(self, addr, service):
+    def __init__(self, addr, service, *, read_timeout: float = 60.0,
+                 max_line_bytes: int = 1 << 20, max_in_flight: int = 8,
+                 faults=None):
         super().__init__(addr, _Handler)
         self.service = service
+        self.read_timeout = float(read_timeout)
+        self.max_line_bytes = int(max_line_bytes)
+        self.max_in_flight = int(max_in_flight)
+        self.faults = faults
+        self.draining = False
+        self.in_flight = 0
+        self.rejected_overload = 0
+        self.malformed = 0
+        self.oversized = 0
+        self._flight_lock = threading.Lock()
+        self._idle = threading.Condition(self._flight_lock)
+
+    def enter(self) -> bool:
+        with self._flight_lock:
+            if self.in_flight >= self.max_in_flight:
+                return False
+            self.in_flight += 1
+            return True
+
+    def leave(self) -> None:
+        with self._flight_lock:
+            self.in_flight -= 1
+            if self.in_flight == 0:
+                self._idle.notify_all()
+
+    def daemon_stats(self) -> dict:
+        with self._flight_lock:
+            return {"in_flight": self.in_flight,
+                    "max_in_flight": self.max_in_flight,
+                    "draining": self.draining,
+                    "rejected_overload": self.rejected_overload,
+                    "malformed": self.malformed,
+                    "oversized": self.oversized,
+                    "read_timeout_s": self.read_timeout,
+                    "max_line_bytes": self.max_line_bytes}
+
+    def graceful_shutdown(self, drain_timeout_s: float = 30.0) -> None:
+        """Stop accepting work, let in-flight requests finish (bounded),
+        then stop the accept loop. New requests on live connections are
+        answered ``{"kind": "draining"}`` while this runs."""
+        self.draining = True
+        with self._idle:
+            self._idle.wait_for(lambda: self.in_flight == 0,
+                                timeout=drain_timeout_s)
+        self.shutdown()
 
 
 def request_once(host: str, port: int, d: dict, timeout: float = 60.0) -> dict:
@@ -202,17 +347,32 @@ def main():
     ap.add_argument("--store-max-entries", type=int, default=256)
     ap.add_argument("--once", action="store_true",
                     help="serve one request from stdin and exit")
+    ap.add_argument("--deadline-s", type=float, default=None,
+                    help="default per-request answer budget; over-budget"
+                         " estimates degrade (rung 2/3) instead of "
+                         "blocking the scheduler")
+    ap.add_argument("--read-timeout", type=float, default=60.0,
+                    help="idle-connection read timeout (seconds)")
+    ap.add_argument("--max-line-bytes", type=int, default=1 << 20,
+                    help="maximum request line length")
+    ap.add_argument("--max-in-flight", type=int, default=8,
+                    help="max concurrently-executing requests before "
+                         "answering 'overloaded'")
     args = ap.parse_args()
 
     from ..service import AdmissionService
     service = AdmissionService(workers=args.workers,
                                store_dir=args.store_dir,
-                               store_max_entries=args.store_max_entries)
+                               store_max_entries=args.store_max_entries,
+                               deadline_s=args.deadline_s)
     if args.once:
         d = json.loads(sys.stdin.readline())
         print(json.dumps(handle_request(service, d)))
         return 0
-    with AdmissionServer((args.host, args.port), service) as server:
+    with AdmissionServer((args.host, args.port), service,
+                         read_timeout=args.read_timeout,
+                         max_line_bytes=args.max_line_bytes,
+                         max_in_flight=args.max_in_flight) as server:
         host, port = server.server_address[:2]
         store = f", store={args.store_dir}" if args.store_dir else ""
         print(f"[served] admission daemon on {host}:{port} "

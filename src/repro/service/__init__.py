@@ -25,8 +25,19 @@ Rejections are not dead ends: a request carrying a structured
 per rejected point would defeat the batching), and the cluster
 simulator's ``retry_rejections`` round re-admits bounced jobs on their
 best offer.
+
+Failures are not dead ends either (ISSUE 6): a rung failure — tracer
+raise, store corruption, estimate past its deadline budget — degrades
+down the ladder in :mod:`repro.service.degrade` (exact -> sweep-log ->
+analytic bound, widened margins) instead of propagating, and
+:mod:`repro.service.faults` provides the injection harness the chaos
+tests and ``ClusterSimulator.replay(faults=...)`` drive it with.
 """
 from .admission import (AdmissionDecision, AdmissionRequest,  # noqa: F401
                         AdmissionService)
 from .cluster import ClusterSimulator, JobArrival  # noqa: F401
+from .degrade import (DecisionLog, DegradePolicy, RungTimeout,  # noqa: F401
+                      RUNG_ANALYTIC, RUNG_EXACT, RUNG_SWEEP, RUNGS)
+from .faults import (ChaosSafetyViolation, FaultError, FaultPlan,  # noqa: F401
+                     FaultSpec, TransientFaultError, plan_raising_at)
 from .store import TraceStore  # noqa: F401

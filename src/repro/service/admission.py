@@ -22,12 +22,27 @@ direct calls. What the service adds:
 * batched decisions: ``decide_sweep`` routes a family of requests that
   differ in one scalar (the batch-size admission sweep) through
   ``SweepService.estimate_many`` — probe traces + affine interpolation
-  + vectorized replay instead of N full estimates.
+  + vectorized replay instead of N full estimates;
+* **robustness (ISSUE 6)**: a graceful-degradation ladder (exact
+  replay -> cached/interpolated sweep point -> analytic upper bound,
+  each degraded rung with a widened safety margin — see
+  :mod:`repro.service.degrade`), per-request deadline budgets with
+  capped-backoff retries on transient failures, and fault injection
+  via :mod:`repro.service.faults`. A rung failure (tracer raise, store
+  corruption, timeout) falls to the next rung instead of propagating:
+  the service answers 100% of requests, and every decision reports
+  which rung answered and the margin applied.
+
+The fault-free, deadline-free path runs the exact rung inline with no
+extra threads — bit-identical decisions and throughput within the
+existing bench gate.
 """
 from __future__ import annotations
 
+import contextlib
 import copy
 import dataclasses
+import math
 import threading
 import time
 from concurrent.futures import Future, ThreadPoolExecutor
@@ -36,12 +51,19 @@ from typing import Any, Callable, Sequence
 from ..core.cache import GLOBAL_TRACE_CACHE, TraceCache
 from ..core.estimator import EstimateReport, XMemEstimator
 from ..core.sweep import SweepPoint, SweepService
+from .degrade import (RUNG_ANALYTIC, RUNG_EXACT, RUNG_SWEEP, DecisionLog,
+                      DegradePolicy, RungTimeout, analytic_request_bound,
+                      backoff_delays, request_family, request_scalar)
+from .faults import TransientFaultError
 
 
 @dataclasses.dataclass
 class AdmissionRequest:
     """One job to gate: the ``estimate_training`` argument tuple plus
-    the device capacity the scheduler would place it on."""
+    the device capacity the scheduler would place it on.
+    ``deadline_s`` is this request's answer budget — a slow or hung
+    exact estimate is abandoned at the deadline and answered from a
+    lower rung (None defers to the service-wide default)."""
 
     job_id: str
     fwd_bwd_fn: Callable
@@ -53,16 +75,19 @@ class AdmissionRequest:
     collective_specs: Sequence = ()
     capacity: int = 16 * 2**30          # device HBM bytes
     probe_min_capacity: bool = False    # also compute min feasible capacity
+    deadline_s: float | None = None     # per-request budget (ISSUE 6)
     meta: dict = dataclasses.field(default_factory=dict)
 
 
 @dataclasses.dataclass
 class AdmissionDecision:
-    """The service's answer. ``safe_threshold`` is the estimate itself —
-    the value round 2 of the paper's protocol validates as a max-
-    runnable-memory cap (Eq. 5). ``provenance["source"]`` records where
-    stage 1 came from: "memory" (warm cache), "disk" (persistent store
-    after a restart), or "traced" (cold)."""
+    """The service's answer. ``safe_threshold`` is the (margin-widened)
+    estimate — the value round 2 of the paper's protocol validates as a
+    max-runnable-memory cap (Eq. 5). ``provenance["source"]`` records
+    where stage 1 came from: "memory" (warm cache), "disk" (persistent
+    store after a restart), "traced" (cold), or "degraded" (a lower
+    rung answered — ``rung``/``margin`` say which and at what widening;
+    ``provenance["rung_errors"]`` records why the upper rungs fell)."""
 
     job_id: str
     admit: bool
@@ -79,15 +104,26 @@ class AdmissionDecision:
     # ranked feasible alternatives (ISSUE 5) — populated on rejection
     # when the request carries a ``meta["plan"]`` PlanContext
     counter_offers: list | None = None
+    # degradation provenance (ISSUE 6)
+    rung: str = RUNG_EXACT          # which ladder rung answered
+    margin: float = 1.0             # safety widening applied to the peak
+    raw_peak_bytes: int | None = None   # rung estimate before widening
+    deadline_s: float | None = None     # budget this answer honored
+
+    @property
+    def degraded(self) -> bool:
+        return self.rung != RUNG_EXACT
 
     def to_json(self) -> dict:
         d = {k: getattr(self, k) for k in (
             "job_id", "admit", "capacity", "peak_bytes",
             "peak_tensor_bytes", "persistent_bytes", "safe_threshold",
-            "provenance", "wall_s", "min_feasible_capacity")}
+            "provenance", "wall_s", "min_feasible_capacity",
+            "rung", "margin", "raw_peak_bytes", "deadline_s")}
+        d["degraded"] = self.degraded
         d["breakdown"] = {k: v for k, v in self.breakdown.items()
                           if k in ("phase_peaks", "num_blocks",
-                                   "liveness_peak")}
+                                   "liveness_peak", "degraded")}
         if self.counter_offers is not None:
             d["counter_offers"] = [o.to_json()
                                    for o in self.counter_offers]
@@ -111,19 +147,57 @@ def _provenance(cache: TraceCache | None, before: dict) -> dict:
                             "store_hits": store_hits}}
 
 
+def _call_with_deadline(fn: Callable[[], Any], timeout: float | None):
+    """Run ``fn`` bounded by ``timeout`` seconds. ``None`` runs inline
+    (zero overhead). Otherwise ``fn`` runs on a fresh daemon thread and
+    a late result is abandoned: the thread finishes into the void (its
+    side effects — e.g. a trace landing in the shared cache — are kept,
+    so a later retry may be warm), and :class:`RungTimeout` is raised
+    here. A per-call thread (not a pool) so a hung rung can never
+    starve other requests' rung execution."""
+    if timeout is None:
+        return fn()
+    box: dict = {}
+    done = threading.Event()
+
+    def run():
+        try:
+            box["value"] = fn()
+        except BaseException as e:   # noqa: BLE001 — re-raised below
+            box["error"] = e
+        finally:
+            done.set()
+
+    t = threading.Thread(target=run, daemon=True,
+                         name="xmem-rung")
+    t.start()
+    if not done.wait(timeout):
+        raise RungTimeout(f"rung exceeded {timeout:.3f}s budget")
+    if "error" in box:
+        raise box["error"]
+    return box["value"]
+
+
 class AdmissionService:
     """Long-running estimation service (see module docstring).
 
     ``store_dir`` enables the persistent trace store; ``workers`` sizes
     the thread pool behind ``submit``; ``processes`` is forwarded to the
-    underlying ``SweepService`` replay fan-out.
+    underlying ``SweepService`` replay fan-out. ``degrade`` configures
+    the degradation ladder (margins, retries, default deadline);
+    ``deadline_s`` is shorthand for its ``default_deadline_s``.
+    ``faults`` attaches a :class:`~repro.service.faults.FaultPlan`
+    (tests / chaos replay; see also :meth:`inject_faults`).
     """
 
     def __init__(self, estimator_factory: Callable[..., XMemEstimator]
                  | None = None, *, store_dir: str | None = None,
                  workers: int = 2, processes: int = 0,
                  cache: TraceCache | None = None,
-                 store_max_entries: int = 256):
+                 store_max_entries: int = 256,
+                 degrade: DegradePolicy | None = None,
+                 deadline_s: float | None = None,
+                 faults=None):
         self._factory = estimator_factory or XMemEstimator.for_tpu
         store = None
         if store_dir is not None:
@@ -144,7 +218,14 @@ class AdmissionService:
             # no explicit cache/store: share the process-global cache so
             # one-off service instances (per-gate construction) stay warm
             self.cache = GLOBAL_TRACE_CACHE
+        self.degrade = degrade or DegradePolicy()
+        if deadline_s is not None:
+            self.degrade = dataclasses.replace(
+                self.degrade, default_deadline_s=deadline_s)
+        self.faults = faults
+        self.log = DecisionLog()
         self.workers = max(int(workers), 1)
+        self._processes = processes
         self._pool: ThreadPoolExecutor | None = None
         self._tls = threading.local()
         self._lock = threading.Lock()
@@ -152,6 +233,11 @@ class AdmissionService:
         # — serialize it; decide()/submit() stay concurrent
         self._sweep_lock = threading.Lock()
         self.requests_served = 0
+        self.rung_counts = {RUNG_EXACT: 0, RUNG_SWEEP: 0, RUNG_ANALYTIC: 0}
+        self.retry_count = 0
+        self.timeout_count = 0
+        self.abandoned_rungs = 0
+        self._in_flight = 0
         self.sweep = SweepService(self._make_estimator(),
                                   processes=processes)
 
@@ -161,7 +247,15 @@ class AdmissionService:
         if est.trace_cache is not self.cache:
             raise ValueError("admission service needs a fastpath "
                              "estimator sharing the service cache")
+        # route the estimator's stage checkpoints through the service's
+        # (swappable) fault plan — a no-op attribute read when unset
+        est.checkpoint = self._fault_site
         return est
+
+    def _fault_site(self, site: str) -> None:
+        plan = self.faults
+        if plan is not None:
+            plan.check(site)
 
     @property
     def estimator(self) -> XMemEstimator:
@@ -192,27 +286,193 @@ class AdmissionService:
     def __exit__(self, *exc):
         self.close()
 
+    # -- fault plumbing ------------------------------------------------------
+    def set_faults(self, plan) -> None:
+        """Attach/detach a fault plan on the service AND its persistent
+        store (if any)."""
+        self.faults = plan
+        store = getattr(self.cache, "store", None)
+        if store is not None:
+            store.faults = plan
+
+    @contextlib.contextmanager
+    def inject_faults(self, plan):
+        """Scoped fault injection — chaos replays wrap themselves here
+        so a failed assertion never leaves the service poisoned."""
+        prev = self.faults
+        store = getattr(self.cache, "store", None)
+        prev_store = store.faults if store is not None else None
+        self.set_faults(plan)
+        try:
+            yield self
+        finally:
+            self.faults = prev
+            if store is not None:
+                store.faults = prev_store
+
+    def _deadline_for(self, req: AdmissionRequest) -> float | None:
+        if req.deadline_s is not None:
+            return req.deadline_s
+        return self.degrade.default_deadline_s
+
+    def _count_rung(self, rung: str, served: int = 1) -> None:
+        with self._lock:
+            self.requests_served += served
+            self.rung_counts[rung] = self.rung_counts.get(rung, 0) + served
+
     # -- decisions -----------------------------------------------------------
     def decide(self, req: AdmissionRequest) -> AdmissionDecision:
-        """Synchronous decision for one request."""
+        """Synchronous decision for one request. Never raises for
+        estimator/store/timeout failures — those degrade down the rung
+        ladder; only caller errors (bad request shapes on every rung)
+        can propagate."""
         t0 = time.perf_counter()
-        est = self.estimator
-        cache = est.trace_cache
-        before = cache.thread_stats()
-        rep = est.estimate_training(
-            req.fwd_bwd_fn, req.params, req.batch,
-            update_fn=req.update_fn, opt_init_fn=req.opt_init_fn,
-            shard_factor_fn=req.shard_factor_fn,
-            collective_specs=req.collective_specs)
-        min_cap = None
-        if req.probe_min_capacity:
-            min_cap = est.min_feasible_capacity(
-                req.fwd_bwd_fn, req.params, req.batch, report=rep)
+        deadline_s = self._deadline_for(req)
         with self._lock:
-            self.requests_served += 1
-        decision = self._decision(req, rep, _provenance(cache, before),
+            self._in_flight += 1
+        try:
+            if deadline_s is None and self.faults is None:
+                # fault-free fast path: exact rung inline, no extra
+                # threads — bit-identical to the pre-ladder service
+                decision = self._decide_exact(req, t0, None)
+                return self._attach_counter_offers(req, decision)
+            decision = self._decide_ladder(req, deadline_s, t0)
+            if not decision.degraded:
+                decision = self._attach_counter_offers(req, decision)
+            return decision
+        finally:
+            with self._lock:
+                self._in_flight -= 1
+
+    def _decide_exact(self, req: AdmissionRequest, t0: float,
+                      deadline_s: float | None,
+                      timeout: float | None = None) -> AdmissionDecision:
+        """The exact rung: full-fidelity estimate (optionally bounded by
+        ``timeout`` on a side thread), decision-log recording for the
+        sweep rung's future evidence."""
+        def run():
+            est = self.estimator
+            cache = est.trace_cache
+            before = cache.thread_stats()
+            rep = est.estimate_training(
+                req.fwd_bwd_fn, req.params, req.batch,
+                update_fn=req.update_fn, opt_init_fn=req.opt_init_fn,
+                shard_factor_fn=req.shard_factor_fn,
+                collective_specs=req.collective_specs)
+            min_cap = None
+            if req.probe_min_capacity:
+                min_cap = est.min_feasible_capacity(
+                    req.fwd_bwd_fn, req.params, req.batch, report=rep)
+            return rep, _provenance(cache, before), min_cap
+
+        rep, prov, min_cap = _call_with_deadline(run, timeout)
+        self._count_rung(RUNG_EXACT)
+        self._record_exact(req, rep)
+        decision = self._decision(req, rep, prov,
                                   time.perf_counter() - t0, min_cap)
-        return self._attach_counter_offers(req, decision)
+        decision.deadline_s = deadline_s
+        return decision
+
+    def _record_exact(self, req: AdmissionRequest,
+                      rep: EstimateReport) -> None:
+        try:
+            self.log.record(request_family(req), request_scalar(req),
+                            rep.peak_bytes, rep.persistent_bytes)
+        except Exception:   # noqa: BLE001 — evidence is best-effort
+            pass
+
+    def _decide_ladder(self, req: AdmissionRequest,
+                       deadline_s: float | None,
+                       t0: float) -> AdmissionDecision:
+        """Walk the rungs: exact (with capped-backoff retries on
+        transient faults, abandoned at the deadline) -> sweep-log ->
+        analytic. See module docstring of ``degrade``."""
+        deadline_at = None if deadline_s is None else t0 + deadline_s
+        errors: list[str] = []
+        delays = backoff_delays(self.degrade, req.job_id)
+        attempt = 0
+        while True:
+            remaining = None
+            if deadline_at is not None:
+                remaining = deadline_at - time.perf_counter()
+                if remaining <= 0:
+                    errors.append("deadline exhausted before exact replay")
+                    break
+            try:
+                return self._decide_exact(req, t0, deadline_s,
+                                          timeout=remaining)
+            except TransientFaultError as e:
+                errors.append(f"transient: {e}")
+                if attempt >= len(delays):
+                    errors.append("retries exhausted")
+                    break
+                delay = delays[attempt]
+                attempt += 1
+                if remaining is not None:
+                    # never sleep past the budget — keep enough of it to
+                    # still answer from a lower rung
+                    delay = max(min(delay, remaining * 0.5), 0.0)
+                with self._lock:
+                    self.retry_count += 1
+                time.sleep(delay)
+            except RungTimeout as e:
+                errors.append(f"timeout: {e}")
+                with self._lock:
+                    self.timeout_count += 1
+                    self.abandoned_rungs += 1
+                break
+            except Exception as e:   # noqa: BLE001 — rung falls, never propagates
+                errors.append(f"{type(e).__name__}: {e}")
+                break
+        return self._decide_degraded(req, errors, t0, deadline_s)
+
+    def _decide_degraded(self, req: AdmissionRequest, errors: list[str],
+                         t0: float, deadline_s: float | None
+                         ) -> AdmissionDecision:
+        """Rungs 2-3: answer from the decision log or the analytic
+        bound. Pure CPU arithmetic — never traces, never raises."""
+        got = None
+        try:
+            got = self.log.lookup(request_family(req), request_scalar(req))
+        except Exception as e:   # noqa: BLE001 — evidence lookup is best-effort
+            errors.append(f"sweep-log: {type(e).__name__}: {e}")
+        if got is not None:
+            raw, how = got
+            return self._degraded_decision(req, raw, RUNG_SWEEP, how,
+                                           errors, t0, deadline_s)
+        errors.append("sweep-log: no evidence for this job family")
+        try:
+            raw = analytic_request_bound(req, self.log)
+            how = "bound"
+        except Exception as e:   # noqa: BLE001 — last rung must answer
+            errors.append(f"analytic: {type(e).__name__}: {e}")
+            raw, how = req.capacity + 1, "refuse"  # unknowable: never admit
+        return self._degraded_decision(req, raw, RUNG_ANALYTIC, how,
+                                       errors, t0, deadline_s)
+
+    def _degraded_decision(self, req: AdmissionRequest, raw_peak: int,
+                           rung: str, how: str, errors: list[str],
+                           t0: float, deadline_s: float | None
+                           ) -> AdmissionDecision:
+        margin = self.degrade.margin_for(rung)
+        peak = int(math.ceil(raw_peak * margin))
+        prov = {"source": "degraded", "rung": rung, "margin": margin,
+                "derived": how, "rung_errors": list(errors),
+                "trace_cache": {}}
+        self._count_rung(rung)
+        return AdmissionDecision(
+            job_id=req.job_id,
+            admit=peak <= req.capacity,
+            capacity=req.capacity,
+            peak_bytes=peak,
+            peak_tensor_bytes=int(raw_peak),
+            persistent_bytes=0,
+            safe_threshold=peak,
+            breakdown={"degraded": True},
+            provenance=prov,
+            wall_s=time.perf_counter() - t0,
+            rung=rung, margin=margin, raw_peak_bytes=int(raw_peak),
+            deadline_s=deadline_s)
 
     def _attach_counter_offers(self, req: AdmissionRequest,
                                decision: AdmissionDecision
@@ -221,9 +481,10 @@ class AdmissionService:
         context (``meta["plan"]`` = ``repro.plan.PlanContext``) comes
         back with ranked counter-offers instead of a bare no. Planner-
         internal probe requests carry no context, so this cannot
-        recurse."""
+        recurse. Degraded decisions skip planning (the search's probe
+        estimates would hit the same failing rungs)."""
         ctx = req.meta.get("plan") if req.meta else None
-        if ctx is None or decision.admit:
+        if ctx is None or decision.admit or decision.degraded:
             return decision
         from ..plan import RemediationPlanner
         # candidates must be estimated under the request's OWN execution
@@ -240,25 +501,64 @@ class AdmissionService:
 
     def decide_serving(self, job_id: str, decode_fn: Callable, params,
                        cache_tree, batch, *, capacity: int,
-                       shard_factor_fn=None) -> AdmissionDecision:
+                       shard_factor_fn=None,
+                       deadline_s: float | None = None
+                       ) -> AdmissionDecision:
         """Single-phase serving decision (decode / prefill step with a
-        persistent KV cache) — the ``launch/serve.py`` gate."""
+        persistent KV cache) — the ``launch/serve.py`` gate. Degrades
+        like ``decide``: a failed or over-deadline serving estimate is
+        answered from the analytic rung over (params + cache + batch)
+        avals."""
         t0 = time.perf_counter()
-        est = self.estimator
-        cache = est.trace_cache
-        before = cache.thread_stats()
-        rep = est.estimate_serving(decode_fn, params, cache_tree, batch,
-                                   shard_factor_fn=shard_factor_fn)
+        if deadline_s is None:
+            deadline_s = self.degrade.default_deadline_s
+
+        def run():
+            est = self.estimator
+            cache = est.trace_cache
+            before = cache.thread_stats()
+            rep = est.estimate_serving(decode_fn, params, cache_tree,
+                                       batch,
+                                       shard_factor_fn=shard_factor_fn)
+            return rep, _provenance(cache, before)
+
         req = AdmissionRequest(job_id, decode_fn, params, batch,
-                               capacity=capacity)
+                               capacity=capacity, deadline_s=deadline_s)
         with self._lock:
-            self.requests_served += 1
-        return self._decision(req, rep, _provenance(cache, before),
-                              time.perf_counter() - t0, None)
+            self._in_flight += 1
+        try:
+            if deadline_s is None and self.faults is None:
+                rep, prov = run()
+            else:
+                try:
+                    rep, prov = _call_with_deadline(run, deadline_s)
+                except Exception as e:   # noqa: BLE001 — degrade, never fail
+                    errors = [f"{type(e).__name__}: {e}"]
+                    if isinstance(e, RungTimeout):
+                        with self._lock:
+                            self.timeout_count += 1
+                            self.abandoned_rungs += 1
+                    # the resident KV cache is persistent state: count it
+                    # with the params for the aval bound
+                    proxy = AdmissionRequest(
+                        job_id, decode_fn, (params, cache_tree), batch,
+                        capacity=capacity)
+                    return self._decide_degraded(proxy, errors, t0,
+                                                 deadline_s)
+            self._count_rung(RUNG_EXACT)
+            decision = self._decision(req, rep, prov,
+                                      time.perf_counter() - t0, None)
+            decision.deadline_s = deadline_s
+            return decision
+        finally:
+            with self._lock:
+                self._in_flight -= 1
 
     def _decision(self, req: AdmissionRequest, rep: EstimateReport,
                   provenance: dict, wall_s: float,
                   min_cap: int | None) -> AdmissionDecision:
+        provenance.setdefault("rung", RUNG_EXACT)
+        provenance.setdefault("margin", 1.0)
         return AdmissionDecision(
             job_id=req.job_id,
             admit=rep.peak_bytes <= req.capacity,
@@ -271,7 +571,8 @@ class AdmissionService:
             provenance=provenance,
             wall_s=wall_s,
             min_feasible_capacity=min_cap,
-            report=rep)
+            report=rep,
+            raw_peak_bytes=rep.peak_bytes)
 
     def submit(self, req: AdmissionRequest) -> "Future[AdmissionDecision]":
         """Concurrent decision: runs on the service's worker pool."""
@@ -279,7 +580,9 @@ class AdmissionService:
 
     def decide_many(self, reqs: Sequence[AdmissionRequest]
                     ) -> list[AdmissionDecision]:
-        """Fan a batch of independent requests over the worker pool."""
+        """Fan a batch of independent requests over the worker pool.
+        Each request keeps its own deadline budget (measured from when
+        its decision starts executing)."""
         return [f.result() for f in [self.submit(r) for r in reqs]]
 
     def decide_sweep(self, reqs: Sequence[AdmissionRequest]
@@ -289,18 +592,47 @@ class AdmissionService:
         three probe traces, the rest interpolate. ``meta["plan"]``
         contexts are ignored on this path (a planner search per
         rejected point would defeat the batching); route individual
-        rejections through ``decide`` for counter-offers."""
+        rejections through ``decide`` for counter-offers.
+
+        Deadline budget: the tightest request deadline bounds the whole
+        batched sweep; a sweep that fails or runs past it is abandoned
+        (the sweep estimator is rebuilt — the stranded worker finishes
+        into the void) and EVERY point is answered from the degraded
+        rungs instead."""
         t0 = time.perf_counter()
         cache = self.cache
+        deadlines = [self._deadline_for(r) for r in reqs]
+        bounded = [d for d in deadlines if d is not None]
+        timeout = min(bounded) if bounded else None
         points = [SweepPoint(
             r.fwd_bwd_fn, r.params, r.batch, update_fn=r.update_fn,
             opt_init_fn=r.opt_init_fn, shard_factor_fn=r.shard_factor_fn,
             collective_specs=r.collective_specs, label=r.job_id)
             for r in reqs]
-        with self._sweep_lock:
+
+        def run_sweep():
             before = cache.thread_stats()
             result = self.sweep.estimate_many(points)
-            prov = _provenance(cache, before)
+            return result, _provenance(cache, before)
+
+        with self._sweep_lock:
+            if timeout is None and self.faults is None:
+                result, prov = run_sweep()
+            else:
+                try:
+                    result, prov = _call_with_deadline(run_sweep, timeout)
+                except Exception as e:   # noqa: BLE001 — degrade every point
+                    errors = [f"{type(e).__name__}: {e}"]
+                    if isinstance(e, RungTimeout):
+                        with self._lock:
+                            self.timeout_count += 1
+                            self.abandoned_rungs += 1
+                        # the abandoned worker still owns the old sweep
+                        # estimator — swap in a fresh one for later calls
+                        self.sweep = SweepService(self._make_estimator(),
+                                                  processes=self._processes)
+                    return [self._decide_degraded(r, list(errors), t0, d)
+                            for r, d in zip(reqs, deadlines)]
         prov["sweep"] = {k: result.stats[k] for k in
                          ("points", "traced", "interpolated", "fallback",
                           "pooled")}
@@ -309,10 +641,14 @@ class AdmissionService:
         # times); each decision gets its own provenance copy so callers
         # mutating one cannot alter siblings
         wall = (time.perf_counter() - t0) / max(len(reqs), 1)
-        with self._lock:
-            self.requests_served += len(reqs)
-        return [self._decision(r, rep, copy.deepcopy(prov), wall, None)
-                for r, rep in zip(reqs, result.reports)]
+        self._count_rung(RUNG_EXACT, served=len(reqs))
+        decisions = []
+        for r, rep, d in zip(reqs, result.reports, deadlines):
+            self._record_exact(r, rep)
+            dec = self._decision(r, rep, copy.deepcopy(prov), wall, None)
+            dec.deadline_s = d
+            decisions.append(dec)
+        return decisions
 
     def mesh_sweep(self, fwd_bwd_fn, params, batch, topologies, *,
                    update_fn=None, opt_init_fn=None, cfg=None,
@@ -335,4 +671,32 @@ class AdmissionService:
     def stats(self) -> dict:
         return {"requests_served": self.requests_served,
                 "workers": self.workers,
+                "rungs": dict(self.rung_counts),
                 "trace_cache": self.cache.stats()}
+
+    def health(self) -> dict:
+        """Liveness/diagnostics surface for the daemon's ``health``
+        request kind: rung counters, degradation totals, store state
+        (incl. quarantine/recovery), queue depth and in-flight count."""
+        with self._lock:
+            pool = self._pool
+            d = {
+                "status": "ok",
+                "requests_served": self.requests_served,
+                "in_flight": self._in_flight,
+                "queue_depth": (pool._work_queue.qsize()
+                                if pool is not None else 0),
+                "workers": self.workers,
+                "rungs": dict(self.rung_counts),
+                "degraded": (self.rung_counts[RUNG_SWEEP]
+                             + self.rung_counts[RUNG_ANALYTIC]),
+                "retries": self.retry_count,
+                "timeouts": self.timeout_count,
+                "abandoned_rungs": self.abandoned_rungs,
+                "deadline_s": self.degrade.default_deadline_s,
+            }
+        d["decision_log"] = self.log.stats()
+        d["trace_cache"] = self.cache.stats()
+        if self.faults is not None:
+            d["faults"] = self.faults.stats()
+        return d

@@ -16,6 +16,14 @@ peak (an oracle measurement, or a perturbed estimate for sensitivity
 studies). Without a truth the estimator is scored against itself —
 useful for exercising the admission logic (OOM rejections,
 underutilization accounting) deterministically.
+
+**Chaos mode (ISSUE 6)**: ``replay(faults=...)`` re-runs the trace with
+a :class:`~repro.service.faults.FaultPlan` injected into the service —
+the decisions-served-under-failure experiment. The summary gains
+degradation accounting (``served`` / ``degraded`` / per-rung counts),
+and a faulted replay that OOM-admits ANY job raises
+:class:`~repro.service.faults.ChaosSafetyViolation`: the degradation
+ladder's contract is that failures cost headroom, never safety.
 """
 from __future__ import annotations
 
@@ -45,12 +53,13 @@ class JobArrival:
     # structured job description (repro.plan.PlanContext) — enables
     # counter-offers on rejection and the simulator's retry round
     plan: Any | None = None
+    deadline_s: float | None = None     # per-job answer budget
 
     def request(self) -> AdmissionRequest:
         return AdmissionRequest(
             self.job_id, self.fwd_bwd_fn, self.params, self.batch,
             update_fn=self.update_fn, opt_init_fn=self.opt_init_fn,
-            capacity=self.capacity,
+            capacity=self.capacity, deadline_s=self.deadline_s,
             meta={"plan": self.plan} if self.plan is not None else {})
 
 
@@ -78,7 +87,8 @@ class ClusterSimulator:
         self.truth_fn = truth_fn
 
     def replay(self, arrivals: Sequence[JobArrival],
-               retry_rejections: bool = False) -> ClusterOutcome:
+               retry_rejections: bool = False, faults=None,
+               deadline_s: float | None = None) -> ClusterOutcome:
         """Replay the arrival trace; with ``retry_rejections`` every
         rejection that came back with counter-offers (the arrival must
         carry a ``plan`` context) is re-submitted on its best offer, and
@@ -88,13 +98,33 @@ class ClusterSimulator:
         Truth accounting: ``truth_bytes`` describes the job *as
         requested*; a job re-admitted on a counter-offer runs a
         different plan, so its truth falls back to ``truth_fn`` (called
-        on the retry decision) or to the offer's own estimate."""
+        on the retry decision) or to the offer's own estimate.
+
+        Chaos mode: pass ``faults`` (a ``FaultPlan``) and optionally a
+        per-job ``deadline_s`` default. The plan is injected for the
+        duration of the replay; the returned summary reports how many
+        decisions were served degraded and from which rung, and the
+        replay RAISES ``ChaosSafetyViolation`` if any faulted decision
+        OOM-admits — degraded answers must widen, never thin, the
+        safety margin."""
+        if faults is not None:
+            with self.service.inject_faults(faults):
+                return self._replay(arrivals, retry_rejections,
+                                    deadline_s, chaos=True)
+        return self._replay(arrivals, retry_rejections, deadline_s,
+                            chaos=False)
+
+    def _replay(self, arrivals: Sequence[JobArrival],
+                retry_rejections: bool, deadline_s: float | None,
+                chaos: bool) -> ClusterOutcome:
         t0 = time.perf_counter()
         decisions: list[AdmissionDecision] = []
         records: list[metrics.RunRecord] = []
         retries: list = []
         for job in arrivals:
             req = job.request()
+            if req.deadline_s is None:
+                req.deadline_s = deadline_s
             if not retry_rejections:
                 # plain-rejection round: do not pay for a planner search
                 # whose offers would be discarded anyway
@@ -124,11 +154,25 @@ class ClusterSimulator:
                 truth=int(truth), runtime_s=d.wall_s))
         wall = time.perf_counter() - t0
         summary = score(records)
+        degraded = [d for d in decisions if d.degraded]
+        rungs: dict[str, int] = {}
+        for d in decisions:
+            rungs[d.rung] = rungs.get(d.rung, 0) + 1
         summary.update(
             wall_s=wall,
             replanned=len(retries),
+            served=len(decisions),
+            degraded=len(degraded),
+            rungs=rungs,
             requests_per_s=(len(arrivals) / wall if wall > 0
                             and arrivals else 0.0))
+        if chaos and summary["oom_admitted"]:
+            from .faults import ChaosSafetyViolation
+            bad = [r.config for r in records
+                   if not r.oom_pred and r.oom_actual]
+            raise ChaosSafetyViolation(
+                f"chaos replay OOM-admitted {summary['oom_admitted']} "
+                f"job(s) under fault injection: {bad}")
         return ClusterOutcome(decisions, records, summary, retries)
 
 

@@ -1,0 +1,163 @@
+"""Fault-injection harness for the admission service (ISSUE 6).
+
+A :class:`FaultPlan` is a declarative script of failures to inject at
+named sites inside the serving stack. Production code calls
+``plan.check(site)`` (or ``plan.check(site, path=...)`` for on-disk
+sites) at well-defined points; the plan decides — per site, per hit
+count — whether to raise, hang, or corrupt the artifact at ``path``.
+With no plan attached every check is a no-op attribute test, so the
+fault-free fast path stays bit-identical to the un-instrumented code.
+
+Injection sites wired through the stack:
+
+===============  ============================================================
+site             fired from
+===============  ============================================================
+``tracer``       ``XMemEstimator._trace_phase`` — after a cache miss, right
+                 before the real JAX trace (models a tracer exception or
+                 hang on an exotic model)
+``replay``       ``XMemEstimator._estimate_from_phases`` — before the
+                 allocator replay (models a hung / crashed simulation)
+``store.load``   ``TraceStore.load`` — before the entry file is read;
+                 ``corrupt``/``truncate`` mangle the file on disk first,
+                 exercising the quarantine path
+``store.save``   ``TraceStore.save`` — after the atomic rename; ``corrupt``
+                 /``truncate`` mangle the *persisted* entry (a simulated
+                 mid-write crash surfaces at the next load)
+``socket``       the admission daemon, once per parsed request line
+===============  ============================================================
+
+Fault kinds: ``raise`` (:class:`FaultError`, non-retryable — the
+degradation ladder falls straight to the next rung), ``transient``
+(:class:`TransientFaultError` — the ladder retries with backoff before
+falling), ``hang`` (sleeps ``hang_s``; a deadline abandons the rung),
+``corrupt`` (overwrites a byte range of ``path``), ``truncate`` (cuts
+``path`` to half its size). Used by ``tests/test_faults.py`` and by
+``ClusterSimulator.replay(faults=...)`` chaos mode.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import threading
+import time
+from typing import Sequence
+
+
+class FaultError(RuntimeError):
+    """An injected, non-retryable failure."""
+
+
+class TransientFaultError(FaultError):
+    """An injected failure the caller may retry (backoff applies)."""
+
+
+class ChaosSafetyViolation(AssertionError):
+    """Chaos replay admitted a job whose true peak exceeds its device —
+    the one outcome fault injection must never produce."""
+
+
+@dataclasses.dataclass
+class FaultSpec:
+    """One scripted failure: fire ``times`` times at ``site``, skipping
+    the first ``after`` hits. ``times=None`` fires on every hit."""
+
+    site: str                   # "tracer" | "replay" | "store.load" | ...
+    kind: str                   # "raise" | "transient" | "hang" | "corrupt" | "truncate"
+    times: int | None = 1
+    after: int = 0
+    hang_s: float = 30.0
+    message: str = ""
+
+    _KINDS = ("raise", "transient", "hang", "corrupt", "truncate")
+
+    def __post_init__(self):
+        if self.kind not in self._KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r} "
+                             f"(expected one of {self._KINDS})")
+
+
+def _corrupt_file(path: str) -> None:
+    """Overwrite a mid-file byte range with garbage (parse must fail)."""
+    try:
+        size = os.path.getsize(path)
+        with open(path, "r+b") as f:
+            f.seek(max(size // 3, 0))
+            f.write(b"\x00#corrupt#\x00" * 4)
+    except OSError:
+        pass
+
+
+def _truncate_file(path: str) -> None:
+    """Cut the file to half its size (a mid-write crash)."""
+    try:
+        size = os.path.getsize(path)
+        with open(path, "r+b") as f:
+            f.truncate(size // 2)
+    except OSError:
+        pass
+
+
+class FaultPlan:
+    """Thread-safe collection of :class:`FaultSpec`; counts every site
+    hit and every fault actually fired (``stats()``)."""
+
+    def __init__(self, specs: Sequence[FaultSpec] = ()):
+        self.specs = list(specs)
+        self._lock = threading.Lock()
+        self.hits: dict[str, int] = {}
+        self.fired: dict[str, int] = {}
+        self._spec_fired = [0] * len(self.specs)
+
+    def add(self, *specs: FaultSpec) -> "FaultPlan":
+        with self._lock:
+            self.specs.extend(specs)
+            self._spec_fired.extend([0] * len(specs))
+        return self
+
+    def _select(self, site: str) -> FaultSpec | None:
+        """Pick the first applicable spec for this hit (under lock)."""
+        hit = self.hits.get(site, 0)
+        self.hits[site] = hit + 1
+        for i, spec in enumerate(self.specs):
+            if spec.site != site or hit < spec.after:
+                continue
+            if spec.times is not None and self._spec_fired[i] >= spec.times:
+                continue
+            self._spec_fired[i] += 1
+            self.fired[site] = self.fired.get(site, 0) + 1
+            return spec
+        return None
+
+    def check(self, site: str, path: str | None = None) -> None:
+        """Fire any scripted fault for this ``site`` hit. File kinds
+        need ``path``; without one they degrade to ``raise``."""
+        with self._lock:
+            spec = self._select(site)
+        if spec is None:
+            return
+        msg = spec.message or f"injected {spec.kind} at {site}"
+        if spec.kind == "hang":
+            time.sleep(spec.hang_s)
+            return
+        if spec.kind in ("corrupt", "truncate"):
+            if path is None:
+                raise FaultError(msg + " (no path at this site)")
+            (_corrupt_file if spec.kind == "corrupt"
+             else _truncate_file)(path)
+            return
+        if spec.kind == "transient":
+            raise TransientFaultError(msg)
+        raise FaultError(msg)
+
+    def stats(self) -> dict:
+        with self._lock:
+            return {"specs": len(self.specs), "hits": dict(self.hits),
+                    "fired": dict(self.fired)}
+
+
+def plan_raising_at(*sites: str, kind: str = "raise",
+                    times: int | None = None) -> FaultPlan:
+    """Shorthand for the common every-hit matrix rows in tests."""
+    return FaultPlan([FaultSpec(site=s, kind=kind, times=times)
+                      for s in sites])

@@ -18,9 +18,23 @@ coupling verdict is resolved *before* writing (exactly like sweep pool
 payloads), so a restored update phase needs no jaxpr.
 
 Invalidation: every file records ``store_version`` and the trace schema
-version; a mismatch on load deletes the file and reports a miss. LRU:
-the store keeps at most ``max_entries`` files, evicting by mtime (loads
-touch the file's mtime, so recently served entries survive).
+version; a mismatch on load reports a miss. LRU: the store keeps at
+most ``max_entries`` files, evicting by mtime (loads touch the file's
+mtime, so recently served entries survive).
+
+Crash safety (ISSUE 6): writes go to a **unique** temp file that is
+fsynced and atomically renamed over the entry (two concurrent saves of
+the same digest can no longer clobber each other's in-flight temp —
+last rename wins, both files were complete). Anything unreadable —
+truncated JSON, zero-byte files, wrong schema version, foreign payloads
+— is moved to ``<dir>/quarantine/`` rather than deleted, so corruption
+evidence survives for inspection while the store keeps serving (the
+entry just misses and is re-traced). ``__init__`` runs a startup
+recovery scan: orphaned ``*.tmp`` files from mid-write crashes and
+zero-byte entries are quarantined immediately and reported via
+``recovery`` / ``stats()``. An optional :class:`~repro.service.faults.
+FaultPlan` (``faults=``) fires at ``store.load`` / ``store.save`` for
+chaos testing.
 """
 from __future__ import annotations
 
@@ -153,20 +167,31 @@ class TraceStore:
     ``save(key, entry)``, ``stats()``.
     """
 
-    def __init__(self, directory: str, max_entries: int = 256):
+    QUARANTINE_DIR = "quarantine"
+
+    def __init__(self, directory: str, max_entries: int = 256,
+                 faults=None):
         self.directory = directory
         self.max_entries = max_entries
+        self.faults = faults        # optional FaultPlan (chaos testing)
         self._lock = threading.RLock()
         self.loads = 0
         self.saves = 0
         self.load_misses = 0
         self.invalidated = 0
+        self.quarantined = 0
+        self._qseq = 0
         os.makedirs(directory, exist_ok=True)
+        self.recovery = self._recover()
 
     # -- paths ---------------------------------------------------------------
     def path_for(self, key: tuple) -> str:
         return os.path.join(self.directory,
                             _PREFIX + stable_key_digest(key) + ".json")
+
+    @property
+    def quarantine_path(self) -> str:
+        return os.path.join(self.directory, self.QUARANTINE_DIR)
 
     def _entries(self) -> list[str]:
         try:
@@ -179,31 +204,88 @@ class TraceStore:
     def __len__(self) -> int:
         return len(self._entries())
 
+    # -- quarantine & recovery ----------------------------------------------
+    def _quarantine(self, path: str, reason: str) -> str | None:
+        """Move a bad file into the quarantine directory (never delete
+        evidence). Returns the destination, or None if the file was
+        already gone (e.g. a racing quarantine won)."""
+        with self._lock:
+            self._qseq += 1
+            seq = self._qseq
+        dest = os.path.join(
+            self.quarantine_path,
+            f"{seq:04d}.{os.getpid()}.{reason}.{os.path.basename(path)}")
+        try:
+            os.makedirs(self.quarantine_path, exist_ok=True)
+            os.replace(path, dest)
+        except OSError:
+            return None
+        with self._lock:
+            self.quarantined += 1
+        return dest
+
+    def _recover(self) -> dict:
+        """Startup scan: quarantine mid-write leftovers (``*.tmp``) and
+        zero-byte entries so a crashed writer cannot poison later loads.
+        Deeper corruption (truncated JSON, wrong version) is detected —
+        and quarantined — lazily by ``load``; scanning is O(names), not
+        O(bytes)."""
+        report = {"scanned": 0, "quarantined_tmp": 0,
+                  "quarantined_empty": 0}
+        try:
+            names = os.listdir(self.directory)
+        except OSError:
+            return report
+        for name in names:
+            path = os.path.join(self.directory, name)
+            if name.endswith(".tmp"):
+                report["scanned"] += 1
+                if self._quarantine(path, "orphan-tmp"):
+                    report["quarantined_tmp"] += 1
+                continue
+            if name.startswith(_PREFIX) and name.endswith(".json"):
+                report["scanned"] += 1
+                try:
+                    empty = os.path.getsize(path) == 0
+                except OSError:
+                    continue
+                if empty and self._quarantine(path, "zero-byte"):
+                    report["quarantined_empty"] += 1
+        return report
+
     # -- load / save ---------------------------------------------------------
     def load(self, key: tuple) -> TracedPhase | None:
         # the file read + JSON parse + columnar decode run WITHOUT the
         # lock (concurrent workers warming from disk must not serialize
-        # behind each other); only counters and file removal lock
+        # behind each other); only counters and quarantine moves lock
         path = self.path_for(key)
+        if self.faults is not None:
+            self.faults.check("store.load", path=path)
         try:
             with open(path) as f:
                 d = json.load(f)
-        except (OSError, ValueError):
+        except OSError:             # absent: a plain miss, no evidence
             with self._lock:
+                self.load_misses += 1
+            return None
+        except ValueError:          # unparseable: quarantine the bytes
+            self._quarantine(path, "bad-json")
+            with self._lock:
+                self.invalidated += 1
                 self.load_misses += 1
             return None
         if (d.get("store_version") != STORE_VERSION
                 or d.get("trace_schema") != TRACE_SCHEMA_VERSION):
+            self._quarantine(path, "version")
             with self._lock:
-                self._remove(path)
                 self.invalidated += 1
                 self.load_misses += 1
             return None
         try:
             entry = phase_from_json(d["phase"])
         except Exception:   # noqa: BLE001 — corrupt/foreign payload
+            self._quarantine(path, "bad-payload")
             with self._lock:
-                self._remove(path)
                 self.invalidated += 1
                 self.load_misses += 1
             return None
@@ -236,20 +318,46 @@ class TraceStore:
             "phase": payload,
         }
         path = self.path_for(key)
-        with self._lock:
+        # crash-safe write OUTSIDE the lock: a unique temp name per
+        # writer (mkstemp), fsync before the atomic rename, then a
+        # directory fsync so the rename itself survives a crash.
+        # Concurrent saves of one digest each complete their own temp
+        # file; whichever renames last wins — no writer ever touches
+        # another writer's temp file.
+        tmp = None
+        try:
+            fd, tmp = tempfile.mkstemp(dir=self.directory,
+                                       prefix=_PREFIX + "w", suffix=".tmp")
+            with os.fdopen(fd, "w") as f:
+                json.dump(d, f)
+                f.flush()
+                os.fsync(f.fileno())
+            os.replace(tmp, path)
             tmp = None
-            try:
-                fd, tmp = tempfile.mkstemp(dir=self.directory,
-                                           suffix=".tmp")
-                with os.fdopen(fd, "w") as f:
-                    json.dump(d, f)
-                os.replace(tmp, path)
-            except OSError:
-                if tmp is not None:
-                    self._remove(tmp)   # no orphaned .tmp accumulation
-                return
+            self._fsync_dir()
+        except OSError:
+            if tmp is not None:
+                self._remove(tmp)   # our own temp only
+            return
+        if self.faults is not None:
+            # simulated mid-write crash: mangle the *persisted* entry so
+            # the damage surfaces at the next load (quarantine path)
+            self.faults.check("store.save", path=path)
+        with self._lock:
             self.saves += 1
             self._evict_lru()
+
+    def _fsync_dir(self) -> None:
+        try:
+            dfd = os.open(self.directory, os.O_RDONLY)
+        except OSError:
+            return
+        try:
+            os.fsync(dfd)
+        except OSError:
+            pass
+        finally:
+            os.close(dfd)
 
     def _remove(self, path: str) -> None:
         try:
@@ -280,4 +388,6 @@ class TraceStore:
                 "max_entries": self.max_entries, "loads": self.loads,
                 "load_misses": self.load_misses, "saves": self.saves,
                 "invalidated": self.invalidated,
+                "quarantined": self.quarantined,
+                "recovery": dict(self.recovery),
                 "store_version": STORE_VERSION}

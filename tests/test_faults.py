@@ -1,0 +1,679 @@
+"""Fault-injection, degradation-ladder, and chaos tests (ISSUE 6).
+
+Pins the robustness tentpole:
+
+* the rung ladder — a tracer/replay failure answers from the decision
+  log (widened by ``sweep_margin``) or the analytic bound (widened by
+  ``analytic_margin``), with rung + margin in the decision provenance;
+* transient faults retry with backoff and still answer exact; hangs are
+  abandoned at the deadline budget and answered degraded within it;
+* the fault-free ladder path stays value-identical to the inline path;
+* store corruption matrix — truncated JSON, zero-byte files, wrong
+  schema versions, garbage bytes, mid-write crashes — every mode
+  recovers with the bad entry QUARANTINED (evidence kept, never
+  silently deleted) and the re-traced answer bit-identical;
+* chaos replays: ``ClusterSimulator.replay(faults=...)`` serves 100% of
+  arrivals with zero OOM-admitted at every injection site, and RAISES
+  ``ChaosSafetyViolation`` when a degraded admit would have OOMed;
+* daemon hardening — malformed/oversized lines keep the connection,
+  backpressure answers ``overloaded``, drain answers ``draining``, and
+  the ``health`` kind exposes rung/store/queue state.
+"""
+import json
+import math
+import os
+import socket
+import threading
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.cache import TraceCache
+from repro.service import (AdmissionRequest, AdmissionService,
+                           ChaosSafetyViolation, ClusterSimulator,
+                           DegradePolicy, FaultPlan, FaultSpec,
+                           JobArrival, TraceStore, TransientFaultError,
+                           plan_raising_at)
+from repro.service.degrade import (RUNG_ANALYTIC, RUNG_EXACT, RUNG_SWEEP,
+                                   DecisionLog, backoff_delays,
+                                   request_family, request_scalar)
+from repro.service.store import STORE_VERSION, _PREFIX
+
+# ---------------------------------------------------------------------------
+L, D, H, B = 4, 32, 64, 8
+
+
+def _make_hooks():
+    def loss(p, b):
+        h = b["x"]
+        for i in range(L):
+            h = jnp.tanh(h @ p[f"w{i}"])
+        return jnp.mean((h - b["y"]) ** 2)
+
+    def fwd_bwd(p, b):
+        return jax.value_and_grad(loss)(p, b)
+
+    def adam_init(p):
+        return jax.tree.map(
+            lambda x: (jnp.zeros_like(x), jnp.zeros_like(x)), p)
+
+    def adam(p, g, s):
+        def upd(pp, gg, ss):
+            m, v = ss
+            m = 0.9 * m + 0.1 * gg
+            v = 0.999 * v + 0.001 * gg * gg
+            return pp - 1e-3 * m / (jnp.sqrt(v) + 1e-8), (m, v)
+        out = jax.tree.map(upd, p, g, s,
+                           is_leaf=lambda x: isinstance(x, tuple))
+        return {k: out[k][0] for k in out}, {k: out[k][1] for k in out}
+
+    return fwd_bwd, adam, adam_init
+
+
+def _shapes(batch=B):
+    params = {f"w{i}": jax.ShapeDtypeStruct(
+        (D, H) if i % 2 == 0 else (H, D), jnp.float32) for i in range(L)}
+    data = {"x": jax.ShapeDtypeStruct((batch, D), jnp.float32),
+            "y": jax.ShapeDtypeStruct((batch, D), jnp.float32)}
+    return params, data
+
+
+def _request(job_id="job", batch=B, capacity=1 << 30, **kw):
+    fwd_bwd, adam, adam_init = _make_hooks()
+    params, data = _shapes(batch)
+    return AdmissionRequest(job_id, fwd_bwd, params, data,
+                            update_fn=adam, opt_init_fn=adam_init,
+                            capacity=capacity, **kw)
+
+
+def _arrival(job_id, batch=B, capacity=1 << 30, **kw):
+    fwd_bwd, adam, adam_init = _make_hooks()
+    params, data = _shapes(batch)
+    return JobArrival(job_id, fwd_bwd, params, data, update_fn=adam,
+                      opt_init_fn=adam_init, capacity=capacity, **kw)
+
+
+def _svc(**kw):
+    kw.setdefault("workers", 1)
+    if "store_dir" not in kw:
+        kw.setdefault("cache", TraceCache())
+    return AdmissionService(**kw)
+
+
+# ---------------------------------------------------------------------------
+class TestFaultPlan:
+    def test_fires_then_exhausts(self):
+        plan = FaultPlan([FaultSpec("tracer", "raise", times=2)])
+        for _ in range(2):
+            with pytest.raises(Exception):
+                plan.check("tracer")
+        plan.check("tracer")        # exhausted: no-op
+        assert plan.stats()["fired"]["tracer"] == 2
+        assert plan.stats()["hits"]["tracer"] == 3
+
+    def test_after_skips_early_hits(self):
+        plan = FaultPlan([FaultSpec("replay", "raise", after=2, times=1)])
+        plan.check("replay")
+        plan.check("replay")
+        with pytest.raises(Exception):
+            plan.check("replay")
+
+    def test_transient_is_distinct(self):
+        plan = FaultPlan([FaultSpec("tracer", "transient", times=1)])
+        with pytest.raises(TransientFaultError):
+            plan.check("tracer")
+
+    def test_unknown_kind_rejected(self):
+        with pytest.raises(ValueError):
+            FaultSpec("tracer", "explode")
+
+    def test_file_kind_without_path_still_faults(self):
+        plan = FaultPlan([FaultSpec("store.load", "corrupt", times=1)])
+        with pytest.raises(Exception):
+            plan.check("store.load")   # no path: degrade to raise
+
+    def test_backoff_is_deterministic_and_capped(self):
+        pol = DegradePolicy(retries=4, backoff_s=0.1, backoff_cap_s=0.3)
+        a = backoff_delays(pol, "job-1")
+        b = backoff_delays(pol, "job-1")
+        assert a == b and len(a) == 4
+        assert all(d <= 0.3 * 1.25 for d in a)
+        assert backoff_delays(pol, "job-2") != a
+
+
+# ---------------------------------------------------------------------------
+class TestDegradationLadder:
+    def test_analytic_rung_when_cold(self):
+        # tracer down, no decision-log evidence: rung 3 answers with
+        # the widened analytic bound, errors recorded in provenance
+        svc = _svc()
+        with svc.inject_faults(plan_raising_at("tracer")):
+            d = svc.decide(_request("cold"))
+        assert d.degraded and d.rung == RUNG_ANALYTIC
+        assert d.margin == svc.degrade.analytic_margin
+        assert d.peak_bytes == math.ceil(d.raw_peak_bytes * d.margin)
+        assert d.provenance["source"] == "degraded"
+        assert any("tracer" in e or "Fault" in e
+                   for e in d.provenance["rung_errors"])
+        # the aval bound dominates the model's true footprint
+        p_bytes = sum(4 * D * H for _ in range(L))
+        assert d.raw_peak_bytes > 3 * p_bytes
+        svc.close()
+
+    def test_sweep_rung_cached_point(self):
+        # an exact decision seeds the log; replay then fails on the
+        # SAME scalar -> rung 2 answers the cached peak, widened
+        svc = _svc()
+        exact = svc.decide(_request("seed", batch=B))
+        assert exact.rung == RUNG_EXACT and exact.margin == 1.0
+        with svc.inject_faults(plan_raising_at("replay")):
+            d = svc.decide(_request("hurt", batch=B))
+        assert d.rung == RUNG_SWEEP
+        assert d.provenance["derived"] == "cached"
+        assert d.raw_peak_bytes == exact.peak_bytes
+        assert d.peak_bytes == math.ceil(
+            exact.peak_bytes * svc.degrade.sweep_margin)
+        assert svc.rung_counts[RUNG_SWEEP] == 1
+        svc.close()
+
+    def test_sweep_rung_interpolates_between_points(self):
+        svc = _svc()
+        lo = svc.decide(_request("lo", batch=4))
+        hi = svc.decide(_request("hi", batch=16))
+        with svc.inject_faults(plan_raising_at("replay")):
+            d = svc.decide(_request("mid", batch=8))
+        assert d.rung == RUNG_SWEEP
+        assert d.provenance["derived"] == "interpolated"
+        raw = d.raw_peak_bytes
+        assert min(lo.peak_bytes, hi.peak_bytes) <= raw \
+            <= max(lo.peak_bytes, hi.peak_bytes)
+        svc.close()
+
+    def test_sweep_rung_scales_single_point(self):
+        svc = _svc()
+        svc.decide(_request("seed", batch=4))
+        with svc.inject_faults(plan_raising_at("tracer")):
+            d = svc.decide(_request("scaled", batch=16))
+        assert d.rung == RUNG_SWEEP
+        assert d.provenance["derived"] == "scaled"
+        svc.close()
+
+    def test_transient_fault_retries_to_exact(self):
+        svc = _svc()
+        plan = FaultPlan([FaultSpec("tracer", "transient", times=1)])
+        with svc.inject_faults(plan):
+            d = svc.decide(_request("flaky"))
+        assert not d.degraded and d.rung == RUNG_EXACT
+        assert svc.retry_count >= 1
+        assert plan.stats()["fired"]["tracer"] == 1
+        svc.close()
+
+    def test_hang_abandoned_at_deadline(self):
+        svc = _svc()
+        plan = FaultPlan([FaultSpec("tracer", "hang", hang_s=20.0,
+                                    times=None)])
+        with svc.inject_faults(plan):
+            d = svc.decide(_request("stuck", deadline_s=0.75))
+        assert d.degraded
+        assert d.deadline_s == 0.75
+        assert d.wall_s < 5.0           # answered, not hung for 20s
+        assert svc.timeout_count >= 1 and svc.abandoned_rungs >= 1
+        assert any("timeout" in e for e in d.provenance["rung_errors"])
+        svc.close()
+
+    def test_ladder_path_matches_inline_values(self):
+        # a deadline engages the ladder machinery; with no faults and a
+        # generous budget the decision values must match the inline path
+        ref_svc = _svc()
+        ref = ref_svc.decide(_request("ref"))
+        svc = _svc(deadline_s=120.0)
+        d = svc.decide(_request("ladder"))
+        assert not d.degraded
+        assert (d.peak_bytes, d.peak_tensor_bytes, d.persistent_bytes) \
+            == (ref.peak_bytes, ref.peak_tensor_bytes,
+                ref.persistent_bytes)
+        assert d.breakdown == ref.breakdown
+        ref_svc.close()
+        svc.close()
+
+    def test_decide_serving_degrades(self):
+        svc = _svc()
+
+        def decode(p, c, b):
+            return jnp.tanh(b["x"] @ p["w0"]) + c["kv"][:, :H]
+
+        params = {"w0": jax.ShapeDtypeStruct((D, H), jnp.float32)}
+        cache = {"kv": jax.ShapeDtypeStruct((B, 2 * H), jnp.float32)}
+        batch = {"x": jax.ShapeDtypeStruct((B, D), jnp.float32)}
+        with svc.inject_faults(plan_raising_at("tracer")):
+            d = svc.decide_serving("srv", decode, params, cache, batch,
+                                   capacity=1 << 30)
+        assert d.degraded and d.rung == RUNG_ANALYTIC
+        # the KV cache is persistent state: the bound must cover it
+        assert d.raw_peak_bytes > 4 * B * 2 * H
+        svc.close()
+
+    def test_decide_sweep_degrades_every_point(self):
+        svc = _svc()
+        reqs = [_request(f"p{b}", batch=b) for b in (4, 8, 16)]
+        with svc.inject_faults(plan_raising_at("tracer")):
+            decisions = svc.decide_sweep(reqs)
+        assert len(decisions) == len(reqs)
+        assert all(d.degraded for d in decisions)
+        # the sweep estimator survived the abandonment/failure: a
+        # fault-free sweep afterwards is exact again
+        decisions2 = svc.decide_sweep(
+            [_request(f"q{b}", batch=b) for b in (4, 8, 16)])
+        assert all(not d.degraded for d in decisions2)
+        svc.close()
+
+    def test_health_surface(self):
+        svc = _svc()
+        svc.decide(_request("ok"))
+        with svc.inject_faults(plan_raising_at("tracer")):
+            svc.decide(_request("bad", batch=16))
+        h = svc.health()
+        assert h["status"] == "ok"
+        assert h["requests_served"] == 2
+        assert h["rungs"][RUNG_EXACT] == 1
+        assert h["degraded"] == 1
+        assert h["in_flight"] == 0
+        assert "decision_log" in h and h["decision_log"]["records"] == 1
+        assert "trace_cache" in h
+        svc.close()
+
+
+# ---------------------------------------------------------------------------
+class TestDecisionLog:
+    def test_family_separates_structures(self):
+        r1 = _request("a", batch=8)
+        r2 = _request("b", batch=16)
+        assert request_family(r1) == request_family(r2)
+        assert request_scalar(r2) == 2 * request_scalar(r1)
+        r3 = _request("c", batch=8)
+        r3.update_fn = None
+        assert request_family(r3) != request_family(r1)
+
+    def test_lookup_modes(self):
+        log = DecisionLog()
+        fam = ("f",)
+        assert log.lookup(fam, 100) is None
+        log.record(fam, 100, 1000, 400)
+        assert log.lookup(fam, 100) == (1000, "cached")
+        peak, how = log.lookup(fam, 200)
+        assert how == "scaled" and peak == 400 + 2 * 600
+        log.record(fam, 300, 2200, 400)
+        peak, how = log.lookup(fam, 200)
+        assert how == "interpolated" and peak == 1600
+        # interpolation never undercuts the persistent floor
+        log2 = DecisionLog()
+        log2.record(fam, 100, 1000, 990)
+        log2.record(fam, 300, 1010, 990)
+        peak, _ = log2.lookup(fam, 0)
+        assert peak >= 990
+
+    def test_bounded_evidence(self):
+        log = DecisionLog(max_families=2, max_points_per_family=3)
+        for f in range(4):
+            for s in range(5):
+                log.record((f,), s, s * 10, 1)
+        st = log.stats()
+        assert st["families"] <= 2 and st["points"] <= 6
+
+
+# ---------------------------------------------------------------------------
+class TestStoreCorruption:
+    def _decide_store(self, store_dir, job="job", **kw):
+        svc = AdmissionService(workers=1, store_dir=store_dir, **kw)
+        d = svc.decide(_request(job))
+        svc.close()
+        return d, svc
+
+    def _entry_files(self, store_dir):
+        return [os.path.join(store_dir, n) for n in os.listdir(store_dir)
+                if n.startswith(_PREFIX) and n.endswith(".json")]
+
+    def _qfiles(self, store_dir):
+        qdir = os.path.join(store_dir, "quarantine")
+        return os.listdir(qdir) if os.path.isdir(qdir) else []
+
+    def test_truncated_json_quarantined_and_retraced(self, tmp_path):
+        sd = str(tmp_path / "store")
+        ref, _ = self._decide_store(sd)
+        files = self._entry_files(sd)
+        assert len(files) == 3
+        for p in files:
+            with open(p, "r+b") as f:
+                f.truncate(os.path.getsize(p) // 2)
+        svc2 = AdmissionService(workers=1, store_dir=sd)
+        d = svc2.decide(_request("job"))
+        assert d.peak_bytes == ref.peak_bytes
+        assert d.provenance["source"] == "traced"
+        st = svc2.cache.store.stats()
+        assert st["quarantined"] == 3
+        assert len(self._qfiles(sd)) == 3
+        assert any("bad-json" in n for n in self._qfiles(sd))
+        # fresh entries were written back; the store keeps serving
+        assert st["entries"] == 3
+        svc2.close()
+
+    def test_zero_byte_entries_quarantined_at_startup(self, tmp_path):
+        sd = str(tmp_path / "store")
+        self._decide_store(sd)
+        files = self._entry_files(sd)
+        for p in files:
+            open(p, "w").close()
+        store = TraceStore(sd)
+        assert store.recovery["quarantined_empty"] == len(files)
+        assert len(store) == 0
+        assert any("zero-byte" in n for n in self._qfiles(sd))
+
+    def test_orphan_tmp_quarantined_at_startup(self, tmp_path):
+        sd = str(tmp_path / "store")
+        os.makedirs(sd)
+        orphan = os.path.join(sd, _PREFIX + "wdead.tmp")
+        with open(orphan, "w") as f:
+            f.write('{"half": ')
+        store = TraceStore(sd)
+        assert store.recovery["quarantined_tmp"] == 1
+        assert not os.path.exists(orphan)
+        assert any("orphan-tmp" in n for n in self._qfiles(sd))
+
+    def test_wrong_store_version_quarantined(self, tmp_path):
+        sd = str(tmp_path / "store")
+        ref, _ = self._decide_store(sd)
+        for p in self._entry_files(sd):
+            with open(p) as f:
+                d = json.load(f)
+            d["store_version"] = STORE_VERSION + 99
+            with open(p, "w") as f:
+                json.dump(d, f)
+        svc2 = AdmissionService(workers=1, store_dir=sd)
+        d = svc2.decide(_request("job"))
+        assert d.peak_bytes == ref.peak_bytes
+        assert d.provenance["source"] == "traced"
+        assert svc2.cache.store.invalidated == 3
+        assert any("version" in n for n in self._qfiles(sd))
+        svc2.close()
+
+    def test_foreign_payload_quarantined(self, tmp_path):
+        sd = str(tmp_path / "store")
+        ref, _ = self._decide_store(sd)
+        from repro.core.events import TRACE_SCHEMA_VERSION
+        for p in self._entry_files(sd):
+            with open(p, "w") as f:
+                json.dump({"store_version": STORE_VERSION,
+                           "trace_schema": TRACE_SCHEMA_VERSION,
+                           "phase": {"nonsense": True}}, f)
+        svc2 = AdmissionService(workers=1, store_dir=sd)
+        d = svc2.decide(_request("job"))
+        assert d.peak_bytes == ref.peak_bytes
+        assert any("bad-payload" in n for n in self._qfiles(sd))
+        svc2.close()
+
+    def test_midwrite_crash_via_fault_injection(self, tmp_path):
+        # a simulated crash truncates the first persisted entry AFTER
+        # the rename; the next service quarantines it on load and
+        # re-traces — answer unchanged, evidence kept
+        sd = str(tmp_path / "store")
+        svc = AdmissionService(workers=1, store_dir=sd)
+        svc.set_faults(FaultPlan(
+            [FaultSpec("store.save", "truncate", times=1)]))
+        ref = svc.decide(_request("job"))
+        svc.close()
+        svc2 = AdmissionService(workers=1, store_dir=sd)
+        d = svc2.decide(_request("job"))
+        assert d.peak_bytes == ref.peak_bytes
+        assert svc2.cache.store.stats()["quarantined"] == 1
+        assert len(self._qfiles(sd)) == 1
+        svc2.close()
+
+    def test_store_load_fault_still_answers(self, tmp_path):
+        sd = str(tmp_path / "store")
+        ref, _ = self._decide_store(sd)
+        svc2 = AdmissionService(workers=1, store_dir=sd)
+        with svc2.inject_faults(plan_raising_at("store.load")):
+            d = svc2.decide(_request("job"))
+        # served no matter which rung the store failure left us on, and
+        # a degraded answer is never thinner than the exact one
+        assert isinstance(d.admit, bool)
+        assert d.peak_bytes >= ref.peak_bytes
+        svc2.close()
+
+    def test_unique_tmp_names_no_clobber(self, tmp_path):
+        # two services saving the same digest concurrently: every save
+        # writes its own mkstemp temp, so the persisted entry is always
+        # complete and loadable
+        sd = str(tmp_path / "store")
+        svcs = [AdmissionService(workers=1, store_dir=sd)
+                for _ in range(2)]
+        threads = [threading.Thread(target=s.decide,
+                                    args=(_request("race"),))
+                   for s in svcs]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        leftovers = [n for n in os.listdir(sd) if n.endswith(".tmp")]
+        assert leftovers == []
+        store = TraceStore(sd)
+        assert store.recovery["quarantined_tmp"] == 0
+        svc3 = AdmissionService(workers=1, store_dir=sd)
+        d = svc3.decide(_request("race"))
+        assert d.provenance["source"] == "disk"
+        for s in svcs:
+            s.close()
+        svc3.close()
+
+
+# ---------------------------------------------------------------------------
+class TestChaosReplay:
+    SITES = ("tracer", "replay")
+    STORE_SITES = ("store.load", "store.save")
+
+    def _truth(self):
+        svc = _svc()
+        arrivals = [_arrival(f"j{b}", batch=b) for b in (4, 8, 16)]
+        out = ClusterSimulator(svc).replay(arrivals)
+        svc.close()
+        return {d.job_id: d.peak_bytes for d in out.decisions}
+
+    def _arrivals(self, truth):
+        return [_arrival(f"j{b}", batch=b,
+                         truth_bytes=truth[f"j{b}"])
+                for b in (4, 8, 16)]
+
+    def test_matrix_serves_all_zero_oom(self):
+        truth = self._truth()
+        for site in self.SITES:
+            svc = _svc()
+            out = ClusterSimulator(svc).replay(
+                self._arrivals(truth), faults=plan_raising_at(site))
+            assert out.summary["served"] == 3, site
+            assert out.summary["oom_admitted"] == 0, site
+            assert out.summary["degraded"] == 3, site
+            for d in out.decisions:
+                assert d.rung in (RUNG_SWEEP, RUNG_ANALYTIC)
+                assert d.margin > 1.0
+                assert d.provenance["rung_errors"]
+            svc.close()
+
+    def test_matrix_store_sites(self, tmp_path):
+        truth = self._truth()
+        for site in self.STORE_SITES:
+            svc = AdmissionService(
+                workers=1, store_dir=str(tmp_path / site.replace(".", "_")))
+            out = ClusterSimulator(svc).replay(
+                self._arrivals(truth), faults=plan_raising_at(site))
+            assert out.summary["served"] == 3, site
+            assert out.summary["oom_admitted"] == 0, site
+            assert all(isinstance(d.admit, bool) for d in out.decisions)
+            svc.close()
+
+    def test_hang_matrix_answers_within_deadline(self):
+        truth = self._truth()
+        svc = _svc()
+        plan = FaultPlan([FaultSpec("tracer", "hang", hang_s=15.0,
+                                    times=None)])
+        out = ClusterSimulator(svc).replay(
+            self._arrivals(truth), faults=plan, deadline_s=0.75)
+        assert out.summary["served"] == 3
+        assert out.summary["oom_admitted"] == 0
+        for d in out.decisions:
+            assert d.degraded and d.wall_s < 5.0
+        svc.close()
+
+    def test_faults_detached_after_replay(self):
+        svc = _svc()
+        ClusterSimulator(svc).replay(
+            [_arrival("j8")], faults=plan_raising_at("tracer"))
+        assert svc.faults is None
+        d = svc.decide(_request("after"))
+        assert not d.degraded
+        svc.close()
+
+    def test_safety_violation_raises(self):
+        # an arrival whose TRUE peak exceeds its device while the
+        # degraded bound still admits: the chaos harness must refuse to
+        # report that silently
+        svc = _svc()
+        bad = _arrival("liar", batch=4, capacity=1 << 40,
+                       truth_bytes=(1 << 40) + 1)
+        with pytest.raises(ChaosSafetyViolation):
+            ClusterSimulator(svc).replay(
+                [bad], faults=plan_raising_at("tracer"))
+        svc.close()
+
+    def test_plain_replay_unchanged(self):
+        # no faults argument: same code path and summary keys as before,
+        # plus the new degradation accounting at zero
+        svc = _svc()
+        out = ClusterSimulator(svc).replay(
+            [_arrival(f"j{b}", batch=b) for b in (4, 8)])
+        assert out.summary["degraded"] == 0
+        assert out.summary["rungs"] == {RUNG_EXACT: 2}
+        assert out.summary["oom_admitted"] == 0
+        svc.close()
+
+
+# ---------------------------------------------------------------------------
+class TestDaemonHardening:
+    def _server(self, **kw):
+        from repro.launch.served import AdmissionServer
+        svc = _svc(workers=2)
+        server = AdmissionServer(("127.0.0.1", 0), svc, **kw)
+        t = threading.Thread(target=server.serve_forever, daemon=True)
+        t.start()
+        return server, svc
+
+    def _lines(self, server, payloads):
+        host, port = server.server_address[:2]
+        with socket.create_connection((host, port), timeout=30.0) as s:
+            f = s.makefile("rwb")
+            out = []
+            for p in payloads:
+                f.write(p if isinstance(p, bytes)
+                        else (json.dumps(p) + "\n").encode())
+                f.flush()
+                out.append(json.loads(f.readline()))
+            return out
+
+    @pytest.mark.slow
+    def test_malformed_line_keeps_connection(self):
+        server, svc = self._server()
+        try:
+            r1, r2, r3 = self._lines(server, [
+                b"{this is not json\n",
+                b'[1, 2, 3]\n',
+                {"kind": "ping"}])
+            assert r1 == {"ok": False, "kind": "error",
+                          "error": r1["error"]}
+            assert "bad JSON" in r1["error"]
+            assert r2["kind"] == "error"    # non-object JSON refused
+            assert r3["pong"]               # same connection still live
+            assert server.malformed == 2
+        finally:
+            server.shutdown()
+            server.server_close()
+            svc.close()
+
+    @pytest.mark.slow
+    def test_oversized_line_bounded(self):
+        server, svc = self._server(max_line_bytes=256)
+        try:
+            big = b'{"kind": "ping", "pad": "' + b"x" * 1024 + b'"}\n'
+            r1, r2 = self._lines(server, [big, {"kind": "ping"}])
+            assert r1["kind"] == "error" and "exceeds" in r1["error"]
+            assert r2["pong"]               # next line parses cleanly
+            assert server.oversized == 1
+        finally:
+            server.shutdown()
+            server.server_close()
+            svc.close()
+
+    @pytest.mark.slow
+    def test_backpressure_overloaded(self):
+        server, svc = self._server(max_in_flight=0)
+        try:
+            (r,) = self._lines(server, [{"kind": "ping"}])
+            assert r["kind"] == "overloaded" and not r["ok"]
+            assert server.rejected_overload == 1
+        finally:
+            server.shutdown()
+            server.server_close()
+            svc.close()
+
+    @pytest.mark.slow
+    def test_draining_refuses_new_work(self):
+        server, svc = self._server()
+        try:
+            server.draining = True
+            (r,) = self._lines(server, [{"kind": "ping"}])
+            assert r["kind"] == "draining" and not r["ok"]
+        finally:
+            server.shutdown()
+            server.server_close()
+            svc.close()
+
+    @pytest.mark.slow
+    def test_health_kind_over_wire(self):
+        server, svc = self._server()
+        try:
+            (r,) = self._lines(server, [{"kind": "health"}])
+            assert r["ok"]
+            h = r["health"]
+            assert h["status"] == "ok"
+            assert set(h["rungs"]) == {RUNG_EXACT, RUNG_SWEEP,
+                                       RUNG_ANALYTIC}
+            assert h["daemon"]["max_in_flight"] == 8
+            assert h["daemon"]["in_flight"] == 1    # this request
+            assert not h["daemon"]["draining"]
+        finally:
+            server.shutdown()
+            server.server_close()
+            svc.close()
+
+    @pytest.mark.slow
+    def test_socket_fault_answers_error(self):
+        server, svc = self._server(
+            faults=FaultPlan([FaultSpec("socket", "raise", times=1)]))
+        try:
+            r1, r2 = self._lines(server, [{"kind": "ping"},
+                                          {"kind": "ping"}])
+            assert r1["kind"] == "error" and "socket fault" in r1["error"]
+            assert r2["pong"]
+        finally:
+            server.shutdown()
+            server.server_close()
+            svc.close()
+
+    def test_wire_deadline_reaches_request(self):
+        from repro.launch.served import build_train_request
+        req = build_train_request({"arch": "starcoder2-3b", "smoke": True,
+                                   "seq": 32, "batch": 4,
+                                   "deadline_s": 2.5})
+        assert req.deadline_s == 2.5
+        req2 = build_train_request({"arch": "starcoder2-3b",
+                                    "smoke": True, "seq": 32, "batch": 4})
+        assert req2.deadline_s is None
