@@ -2,7 +2,7 @@ PYTHONPATH := src
 export PYTHONPATH
 
 .PHONY: test test-fast chaos-test bench bench-check serve-bench \
-	plan-bench degrade-bench report
+	plan-bench degrade-bench fleet-bench fleet-chaos report
 
 test:            ## tier-1 test suite
 	python -m pytest -x -q
@@ -39,6 +39,17 @@ plan-bench:      ## remediation-planner benchmark only
 # overhead, deadline rescue) into BENCH_estimator.json
 degrade-bench:   ## degradation-ladder benchmark only
 	python -m benchmarks.perf_estimator --degrade-only
+
+# merges the fleet_* keys (arrivals/s placed under chaos, evacuation
+# latency, warm zero-retrace, co-location mcp gain) into
+# BENCH_estimator.json — the ISSUE 7 perf gate's record
+fleet-bench:     ## fleet-scheduler chaos benchmark only
+	python -m benchmarks.perf_estimator --fleet-only
+
+# the ISSUE 7 fleet fault matrix: node kill/flap/shrink x placement
+# kinds, the co-location invariant, and the 1000-arrival chaos replay
+fleet-chaos:     ## fleet-scheduler chaos + evacuation test suite
+	python -m pytest -x -q tests/test_fleet.py
 
 report:          ## render artifact tables
 	python -m benchmarks.report

@@ -37,6 +37,11 @@ cites), iterations=3 unless noted:
   candidate plans (batch x microbatch x remat x >=8 topologies) must
   perform <= ``PLANNER_TRACE_BUDGET`` fresh traces (ASSERTED), repeat
   searches must be zero-trace, and plans/s is recorded for the gate.
+* ``fleet_*`` — ISSUE 7 fleet scheduler: arrivals/s placed through a
+  chaos replay (node kill + flap + shrink mid-stream), evacuation
+  latency, warm replays zero-retrace, and the co-location policy's
+  memory-conservation (mcp) gain over the exclusive one-job-per-node
+  baseline on the same trace.
 
 Targets (committed in BENCH_estimator.json, tracked across PRs):
   warm repeated-call speedup >= 5x, cold iterations=3 speedup >= 2x,
@@ -308,6 +313,10 @@ def run_benchmark(warm_calls: int = 10, cold_samples: int = 5) -> dict:
     # ladder's cost to the fault-free warm path
     degradation = measure_degradation()
 
+    # fleet scheduler (ISSUE 7): arrivals/s placed under chaos,
+    # evacuation latency, warm zero-retrace, co-location mcp gain
+    fleet = measure_fleet()
+
     # large-N: composition + replay must stay ~flat for the fast path
     largeN_fast = _median(lambda: estimate(XMemEstimator.for_tpu(
         iterations=64, trace_cache=warm_est.trace_cache)), 3)
@@ -356,6 +365,7 @@ def run_benchmark(warm_calls: int = 10, cold_samples: int = 5) -> dict:
         **service,
         **planner,
         **degradation,
+        **fleet,
         "largeN_iterations": 64,
         "largeN_fast_s": round(largeN_fast, 5),
         "largeN_slow_s": round(largeN_slow, 5),
@@ -741,6 +751,135 @@ def quick_planner_snapshot() -> dict:
     }
 
 
+def _fleet_plan():
+    """The bench chaos schedule: one permanent kill, one flap, one
+    capacity shrink, interleaved mid-stream (fresh plan per replay —
+    fault specs are consumed as they fire)."""
+    from repro.service import FaultPlan, fleet_event
+    return FaultPlan([fleet_event("node.fail", at=40),
+                      fleet_event("node.flap", at=100, down_for=10),
+                      fleet_event("node.shrink", at=150,
+                                  shrink_frac=0.5)])
+
+
+def _fleet_arrivals(n: int, capacity: int, batches=(16, 32),
+                    duration: int = 20):
+    """Arrival trace of fresh-closure jobs (the daemon pattern) cycling
+    over a small batch grid, so the content-addressed cache keeps every
+    decide warm after one cold trace per batch size."""
+    from repro.service.cluster import JobArrival
+    out = []
+    for i in range(n):
+        fwd = lambda p, b: _fwd_bwd(p, b)                 # noqa: E731
+        upd = lambda p, g, s: _adam(p, g, s)              # noqa: E731
+        ini = lambda p: _adam_init(p)                     # noqa: E731
+        _, params, _, _, _ = _workload()
+        out.append(JobArrival(
+            f"fleet{i}", fwd, params,
+            _batch_specs(batches[i % len(batches)]),
+            update_fn=upd, opt_init_fn=ini, capacity=capacity,
+            priority=1 if i % 17 == 0 else 0,
+            duration_ticks=duration))
+    return out
+
+
+def _fleet_setup(n_nodes: int, per_node: int = 3):
+    """(service, node_capacity): warm the trace cache on the bench batch
+    grid and size nodes to co-host ``per_node`` of the largest jobs."""
+    from repro.core.cache import TraceCache
+    from repro.service import AdmissionService
+
+    svc = AdmissionService(workers=1, cache=TraceCache())
+    thresholds = []
+    for job in _fleet_arrivals(2, 1 << 34):
+        thresholds.append(svc.decide(job.request()).safe_threshold)
+    return svc, per_node * max(thresholds)
+
+
+def measure_fleet(arrivals: int = 200, n_nodes: int = 12) -> dict:
+    """Fleet-scheduler throughput under chaos (ISSUE 7): arrivals/s
+    placed through a fleet replay with a node kill, a flap, and a
+    capacity shrink mid-stream; evacuation latency; warm replays must
+    stay zero-retrace (capacity is not part of the trace key); and the
+    co-location policy must strictly beat the exclusive (one job per
+    node) baseline on memory conservation over the SAME trace — the
+    fleet-level analogue of the paper's Eq. 8 score."""
+    from repro.sched import FleetScheduler, FleetSimulator, build_fleet
+
+    svc, node_cap = _fleet_setup(n_nodes)
+    trace = _fleet_arrivals(arrivals, node_cap)
+
+    def run(colocate: bool):
+        fleet = build_fleet(n_nodes, node_cap)
+        sched = FleetScheduler(svc, fleet, colocate=colocate)
+        return FleetSimulator(sched).replay(trace, faults=_fleet_plan())
+
+    out_co = run(colocate=True)         # timed arm (and the mcp numerator)
+    misses_before = svc.cache.stats()["misses"]
+    out_warm = run(colocate=True)       # warm repeat: zero re-traces
+    zero_retrace = svc.cache.stats()["misses"] == misses_before
+    out_ex = run(colocate=False)        # no-co-location baseline
+    svc.close()
+
+    co, ex = out_co.summary, out_ex.summary
+    mcp_gain = co["mcp_gb"] > ex["mcp_gb"]
+    return {
+        "fleet_nodes": n_nodes,
+        "fleet_arrivals": arrivals,
+        "fleet_arrivals_per_s": round(out_warm.summary["arrivals_per_s"],
+                                      2),
+        "fleet_evacuations": co["evacuations"],
+        "fleet_evacuated": co["evacuated"],
+        "fleet_re_placed": co["re_placed"],
+        "fleet_lost": co["lost"] + co["lost_after_evacuation"],
+        "fleet_evacuation_latency_s": round(co["evacuation_latency_s"],
+                                            5),
+        "fleet_fragmentation": round(co["fragmentation"], 4),
+        "fleet_mcp_gb": round(co["mcp_gb"], 4),
+        "fleet_mcp_exclusive_gb": round(ex["mcp_gb"], 4),
+        "fleet_zero_violations": (co["violations"] == 0
+                                  and ex["violations"] == 0
+                                  and out_co.displaced_accounted
+                                  and out_ex.displaced_accounted),
+        "fleet_warm_zero_retrace": zero_retrace,
+        "fleet_mcp_gain": mcp_gain,
+        "meets_fleet_targets": bool(mcp_gain and zero_retrace
+                                    and co["violations"] == 0),
+    }
+
+
+def quick_fleet_snapshot(arrivals: int = 80, n_nodes: int = 8) -> dict:
+    """Fleet-placement measurement for the perf gate (``report.py
+    --check``): a short warm chaos replay (co-located + exclusive arms)
+    — seconds, not minutes."""
+    from repro.sched import FleetScheduler, FleetSimulator, build_fleet
+    from repro.service import FaultPlan, fleet_event
+
+    svc, node_cap = _fleet_setup(n_nodes)
+    trace = _fleet_arrivals(arrivals, node_cap, duration=15)
+
+    def run(colocate: bool):
+        sched = FleetScheduler(svc, build_fleet(n_nodes, node_cap),
+                               colocate=colocate)
+        plan = FaultPlan([fleet_event("node.fail", at=20),
+                          fleet_event("node.flap", at=45, down_for=8)])
+        return FleetSimulator(sched).replay(trace, faults=plan)
+
+    run(colocate=True)                  # warm the timed arm
+    out_co = run(colocate=True)
+    out_ex = run(colocate=False)
+    svc.close()
+    return {
+        "fleet_arrivals_per_s": round(
+            out_co.summary["arrivals_per_s"], 2),
+        "fleet_zero_violations": (out_co.summary["violations"] == 0
+                                  and out_ex.summary["violations"] == 0
+                                  and out_co.displaced_accounted),
+        "fleet_mcp_gain": (out_co.summary["mcp_gb"]
+                           > out_ex.summary["mcp_gb"]),
+    }
+
+
 def quick_service_snapshot() -> dict:
     """Warm-request-throughput-only measurement for the perf gate
     (benchmarks/report.py --check). Seconds, not minutes."""
@@ -829,10 +968,19 @@ def main() -> int:
                     help="measure only the degradation ladder (degraded-"
                          "rung rps, ladder overhead, deadline rescue) "
                          "and merge it into --out")
+    ap.add_argument("--fleet-only", action="store_true",
+                    help="measure only the fleet scheduler (arrivals/s "
+                         "placed under chaos, evacuation latency, warm "
+                         "zero-retrace, co-location mcp gain) and merge "
+                         "it into --out (make fleet-bench)")
     args = ap.parse_args()
     if args.cold_probe:
         print(f"{_estimate_once(args.cold_probe):.6f}")
         return 0
+    if args.fleet_only:
+        fleet = measure_fleet()
+        _merge_into(args.out, fleet, "fleet")
+        return 0 if fleet["meets_fleet_targets"] else 1
     if args.planner_only:
         planner = measure_planner()
         _merge_into(args.out, planner, "planner")
@@ -870,7 +1018,8 @@ def main() -> int:
           and out["meets_planner_trace_budget"]
           and out["planner_identical"]
           and out["degradation_ok"]
-          and out["meets_degraded_fast_target"])
+          and out["meets_degraded_fast_target"]
+          and out["meets_fleet_targets"])
     return 0 if ok else 1
 
 

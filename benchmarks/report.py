@@ -237,6 +237,28 @@ def perf_check(baseline_path: str = "BENCH_estimator.json",
     else:
         print("[bench-check] baseline predates the degradation ladder; "
               "skipping that check (refresh BENCH_estimator.json)")
+    rec_fleet = baseline.get("fleet_arrivals_per_s")
+    if rec_fleet:
+        # ISSUE 7: fleet placement throughput (30% floor) plus the two
+        # CORRECTNESS-of-design booleans — a chaos replay must complete
+        # with zero co-location-invariant violations and the co-located
+        # policy must strictly beat the exclusive baseline on mcp
+        from benchmarks.perf_estimator import quick_fleet_snapshot
+        snap = quick_fleet_snapshot()
+        ffloor = rec_fleet * (1.0 - max_regression)
+        fok = (snap["fleet_arrivals_per_s"] >= ffloor
+               and snap["fleet_zero_violations"]
+               and snap["fleet_mcp_gain"])
+        print(f"[bench-check] fleet placements/s: "
+              f"fresh={snap['fleet_arrivals_per_s']:,.1f} "
+              f"recorded={rec_fleet:,.1f} floor={ffloor:,.1f}, "
+              f"zero_violations={snap['fleet_zero_violations']}, "
+              f"mcp_gain={snap['fleet_mcp_gain']} -> "
+              f"{'OK' if fok else 'REGRESSION'}")
+        ok = ok and fok
+    else:
+        print("[bench-check] baseline predates the fleet scheduler; "
+              "skipping that check (refresh BENCH_estimator.json)")
     return 0 if ok else 1
 
 

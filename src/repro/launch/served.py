@@ -27,6 +27,17 @@ Request kinds:
   "remat_grid":["full"],"pad_vocab_multiple":16,"max_offers":5}`` —
   answers a non-fitting job with ranked feasible counter-offers
   (ISSUE 5); grid keys are optional (defaults derive from the job)
+* ``place`` — fleet scheduling (ISSUE 7): the same job fields as
+  ``train`` plus optional ``priority``/``duration_ticks``; the daemon's
+  lazily-built :class:`~repro.sched.FleetScheduler` (sized by
+  ``--fleet-nodes``/``--fleet-hbm-gib``, or per-request
+  ``fleet_nodes``/``fleet_hbm_gib`` on first use) bin-packs the job
+  onto a node — answering which node(s), what each is charged, and the
+  fleet snapshot after placement
+* ``evacuate`` — ``{"kind":"evacuate","node":"node000","event":
+  "node.fail"|"node.flap"|"node.shrink"|"restore","shrink_frac":0.5}``
+  — applies the fleet event and reports where every displaced job was
+  re-placed (or that it was lost)
 * ``stats`` / ``ping`` / ``shutdown``
 * ``health`` — degradation/robustness diagnostics (ISSUE 6): rung
   counters, retry/timeout totals, store + quarantine state, queue
@@ -114,6 +125,38 @@ def build_plan_space(d: dict):
         max_offers=int(d.get("max_offers", 5)))
 
 
+def build_fleet_arrival(d: dict):
+    """JobArrival (fleet placement) from a wire-level train job."""
+    from ..service.cluster import JobArrival
+    req = build_train_request(d)
+    duration = d.get("duration_ticks")
+    return JobArrival(
+        req.job_id, req.fwd_bwd_fn, req.params, req.batch,
+        update_fn=req.update_fn, opt_init_fn=req.opt_init_fn,
+        capacity=req.capacity, deadline_s=req.deadline_s,
+        family=str(d.get("family", d.get("arch", "workload"))),
+        priority=int(d.get("priority", 0)),
+        duration_ticks=int(duration) if duration is not None else None)
+
+
+def fleet_scheduler(service, d: dict, server=None):
+    """The daemon's fleet scheduler, built lazily on the first
+    ``place``/``evacuate`` request — sized by the server's
+    ``--fleet-nodes``/``--fleet-hbm-gib`` flags, overridable by
+    ``fleet_nodes``/``fleet_hbm_gib`` on that first request. Shared
+    (and internally locked) across all daemon connections."""
+    sched = getattr(service, "_fleet_scheduler", None)
+    if sched is None:
+        from ..sched import FleetScheduler, build_fleet
+        n = int(d.get("fleet_nodes",
+                      getattr(server, "fleet_nodes", None) or 4))
+        hbm = float(d.get("fleet_hbm_gib",
+                          getattr(server, "fleet_hbm_gib", None) or 16.0))
+        sched = FleetScheduler(service, build_fleet(n, int(hbm * 2**30)))
+        service._fleet_scheduler = sched
+    return sched
+
+
 def handle_request(service, d: dict, server=None) -> dict:
     """One wire request -> one JSON-safe response dict."""
     kind = d.get("kind", "train")
@@ -142,6 +185,23 @@ def handle_request(service, d: dict, server=None) -> dict:
                 space=build_plan_space(d),
                 job_id=str(d.get("id", f"{d['arch']}-plan")))
             return {"ok": True, **res.to_json()}
+        if kind == "place":
+            sched = fleet_scheduler(service, d, server)
+            out = sched.place(build_fleet_arrival(d))
+            return {"ok": True, **out.to_json(),
+                    "fleet": sched.fleet.snapshot()}
+        if kind == "evacuate":
+            sched = fleet_scheduler(service, d, server)
+            node = str(d["node"])
+            event = str(d.get("event", "node.fail"))
+            if event == "restore":
+                sched.fleet.restore(node)
+                return {"ok": True, "node": node, "event": "restore",
+                        "fleet": sched.fleet.snapshot()}
+            out = sched.evacuate_node(
+                node, event, shrink_frac=float(d.get("shrink_frac", 0.5)))
+            return {"ok": True, **out.to_json(),
+                    "fleet": sched.fleet.snapshot()}
         if kind == "serve":
             from ..configs import get_config, get_smoke
             from .serve import pick_batch
@@ -275,9 +335,12 @@ class AdmissionServer(socketserver.ThreadingTCPServer):
 
     def __init__(self, addr, service, *, read_timeout: float = 60.0,
                  max_line_bytes: int = 1 << 20, max_in_flight: int = 8,
-                 faults=None):
+                 faults=None, fleet_nodes: int | None = None,
+                 fleet_hbm_gib: float | None = None):
         super().__init__(addr, _Handler)
         self.service = service
+        self.fleet_nodes = fleet_nodes
+        self.fleet_hbm_gib = fleet_hbm_gib
         self.read_timeout = float(read_timeout)
         self.max_line_bytes = int(max_line_bytes)
         self.max_in_flight = int(max_in_flight)
@@ -358,6 +421,10 @@ def main():
     ap.add_argument("--max-in-flight", type=int, default=8,
                     help="max concurrently-executing requests before "
                          "answering 'overloaded'")
+    ap.add_argument("--fleet-nodes", type=int, default=None,
+                    help="fleet size for 'place'/'evacuate' requests")
+    ap.add_argument("--fleet-hbm-gib", type=float, default=None,
+                    help="per-node HBM (GiB) for the fleet scheduler")
     args = ap.parse_args()
 
     from ..service import AdmissionService
@@ -372,7 +439,9 @@ def main():
     with AdmissionServer((args.host, args.port), service,
                          read_timeout=args.read_timeout,
                          max_line_bytes=args.max_line_bytes,
-                         max_in_flight=args.max_in_flight) as server:
+                         max_in_flight=args.max_in_flight,
+                         fleet_nodes=args.fleet_nodes,
+                         fleet_hbm_gib=args.fleet_hbm_gib) as server:
         host, port = server.server_address[:2]
         store = f", store={args.store_dir}" if args.store_dir else ""
         print(f"[served] admission daemon on {host}:{port} "

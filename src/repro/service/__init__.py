@@ -39,5 +39,6 @@ from .cluster import ClusterSimulator, JobArrival  # noqa: F401
 from .degrade import (DecisionLog, DegradePolicy, RungTimeout,  # noqa: F401
                       RUNG_ANALYTIC, RUNG_EXACT, RUNG_SWEEP, RUNGS)
 from .faults import (ChaosSafetyViolation, FaultError, FaultPlan,  # noqa: F401
-                     FaultSpec, TransientFaultError, plan_raising_at)
+                     FaultSpec, FLEET_SITES, TransientFaultError,
+                     fleet_event, plan_raising_at)
 from .store import TraceStore  # noqa: F401

@@ -298,10 +298,15 @@ class AdmissionService:
     @contextlib.contextmanager
     def inject_faults(self, plan):
         """Scoped fault injection — chaos replays wrap themselves here
-        so a failed assertion never leaves the service poisoned."""
+        so a failed assertion never leaves the service poisoned. Exit
+        cancels the plan: workers stranded in an injected hang (their
+        rung was abandoned at the deadline) wake immediately instead of
+        sleeping out the full ``hang_s``."""
         prev = self.faults
         store = getattr(self.cache, "store", None)
         prev_store = store.faults if store is not None else None
+        if plan is not None and hasattr(plan, "arm"):
+            plan.arm()
         self.set_faults(plan)
         try:
             yield self
@@ -309,6 +314,8 @@ class AdmissionService:
             self.faults = prev
             if store is not None:
                 store.faults = prev_store
+            if plan is not None and hasattr(plan, "cancel"):
+                plan.cancel()
 
     def _deadline_for(self, req: AdmissionRequest) -> float | None:
         if req.deadline_s is not None:

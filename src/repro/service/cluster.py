@@ -54,6 +54,11 @@ class JobArrival:
     # counter-offers on rejection and the simulator's retry round
     plan: Any | None = None
     deadline_s: float | None = None     # per-job answer budget
+    # fleet-scheduler fields (repro.sched, ISSUE 7): preemption rank and
+    # how many arrival ticks the job occupies its device(s) before
+    # departing (None = runs for the rest of the replay)
+    priority: int = 0
+    duration_ticks: int | None = None
 
     def request(self) -> AdmissionRequest:
         return AdmissionRequest(
@@ -134,10 +139,17 @@ class ClusterSimulator:
             if retry_rejections and not d.admit and d.counter_offers \
                     and job.plan is not None:
                 best = d.counter_offers[0]
-                retry = self.service.decide(best.admission_request(
+                retry_req = best.admission_request(
                     job.plan.cfg, job.plan.policy, job.plan.shape,
                     capacity=job.capacity,
-                    job_id=f"{job.job_id}+offer"))
+                    job_id=f"{job.job_id}+offer")
+                # the retry must honor the same deadline contract as the
+                # original decision — without this a hang fault on the
+                # retry path would block the replay past every budget
+                retry_req.deadline_s = (job.deadline_s
+                                        if job.deadline_s is not None
+                                        else deadline_s)
+                retry = self.service.decide(retry_req)
                 if retry.admit:
                     d, offer = retry, best
                     retries.append((job.job_id, best))

@@ -25,23 +25,37 @@ site             fired from
                  /``truncate`` mangle the *persisted* entry (a simulated
                  mid-write crash surfaces at the next load)
 ``socket``       the admission daemon, once per parsed request line
+``node.fail``    polled by ``sched.FleetSimulator`` once per arrival tick
+                 — permanently kills a node (ISSUE 7)
+``node.flap``    like ``node.fail`` but the node returns after
+                 ``down_for`` ticks
+``node.shrink``  multiplies a node's effective capacity by
+                 ``shrink_frac`` (a partial-HBM loss / MIG re-slice)
 ===============  ============================================================
 
 Fault kinds: ``raise`` (:class:`FaultError`, non-retryable — the
 degradation ladder falls straight to the next rung), ``transient``
 (:class:`TransientFaultError` — the ladder retries with backoff before
-falling), ``hang`` (sleeps ``hang_s``; a deadline abandons the rung),
+falling), ``hang`` (waits up to ``hang_s`` on the plan's cancel event;
+a deadline abandons the rung, and ``FaultPlan.cancel()`` — called when
+``inject_faults`` exits — wakes every stranded sleeper immediately),
 ``corrupt`` (overwrites a byte range of ``path``), ``truncate`` (cuts
-``path`` to half its size). Used by ``tests/test_faults.py`` and by
-``ClusterSimulator.replay(faults=...)`` chaos mode.
+``path`` to half its size), ``event`` (a fleet-level topology event at
+one of the ``node.*`` sites above — consumed via :meth:`FaultPlan.poll`
+by the fleet simulator, a no-op under :meth:`FaultPlan.check`). Used by
+``tests/test_faults.py``, ``ClusterSimulator.replay(faults=...)`` chaos
+mode, and ``sched.FleetSimulator.replay(faults=...)`` fleet chaos.
 """
 from __future__ import annotations
 
 import dataclasses
 import os
 import threading
-import time
 from typing import Sequence
+
+#: Fleet-topology event sites, polled (not checked) once per arrival
+#: tick by ``repro.sched.FleetSimulator``.
+FLEET_SITES = ("node.fail", "node.flap", "node.shrink")
 
 
 class FaultError(RuntimeError):
@@ -60,21 +74,52 @@ class ChaosSafetyViolation(AssertionError):
 @dataclasses.dataclass
 class FaultSpec:
     """One scripted failure: fire ``times`` times at ``site``, skipping
-    the first ``after`` hits. ``times=None`` fires on every hit."""
+    the first ``after`` hits. ``times=None`` fires on every hit.
 
-    site: str                   # "tracer" | "replay" | "store.load" | ...
-    kind: str                   # "raise" | "transient" | "hang" | "corrupt" | "truncate"
+    Fleet-event fields (``kind="event"`` at a ``node.*`` site): the
+    fleet simulator polls each fleet site once per arrival tick, so
+    ``after`` is the tick the event fires at. ``node`` names the target
+    (None lets the scheduler pick the most-loaded node), ``down_for``
+    is how many ticks a flapped node stays down, and ``shrink_frac``
+    the capacity multiplier of a ``node.shrink``."""
+
+    site: str                   # "tracer" | "replay" | "node.fail" | ...
+    kind: str                   # "raise" | "transient" | "hang" | ... | "event"
     times: int | None = 1
     after: int = 0
     hang_s: float = 30.0
     message: str = ""
+    node: str | None = None     # fleet events: target node id
+    down_for: int = 2           # node.flap: ticks until the node returns
+    shrink_frac: float = 0.5    # node.shrink: capacity multiplier
 
-    _KINDS = ("raise", "transient", "hang", "corrupt", "truncate")
+    _KINDS = ("raise", "transient", "hang", "corrupt", "truncate",
+              "event")
 
     def __post_init__(self):
         if self.kind not in self._KINDS:
             raise ValueError(f"unknown fault kind {self.kind!r} "
                              f"(expected one of {self._KINDS})")
+        if self.site in FLEET_SITES and self.kind != "event":
+            raise ValueError(
+                f"fleet site {self.site!r} takes kind='event', "
+                f"got {self.kind!r}")
+        if self.kind == "event" and self.site not in FLEET_SITES:
+            raise ValueError(
+                f"kind='event' is only valid on fleet sites "
+                f"{FLEET_SITES}, got site {self.site!r}")
+
+
+def fleet_event(site: str, *, at: int = 0, node: str | None = None,
+                down_for: int = 2, shrink_frac: float = 0.5,
+                times: int | None = 1) -> FaultSpec:
+    """Shorthand for a fleet-topology event: ``site`` is one of
+    ``FLEET_SITES``, ``at`` the arrival tick it fires on."""
+    if site not in FLEET_SITES:
+        raise ValueError(f"{site!r} is not a fleet site {FLEET_SITES}")
+    return FaultSpec(site=site, kind="event", times=times, after=at,
+                     node=node, down_for=down_for,
+                     shrink_frac=shrink_frac)
 
 
 def _corrupt_file(path: str) -> None:
@@ -108,6 +153,20 @@ class FaultPlan:
         self.hits: dict[str, int] = {}
         self.fired: dict[str, int] = {}
         self._spec_fired = [0] * len(self.specs)
+        # hang sleepers wait on this instead of time.sleep so an
+        # exiting inject_faults scope can wake them immediately
+        self._cancel = threading.Event()
+
+    def arm(self) -> None:
+        """Re-arm the plan for a fresh injection scope (clears a prior
+        ``cancel`` so scripted hangs block again)."""
+        self._cancel.clear()
+
+    def cancel(self) -> None:
+        """Wake every thread currently sleeping in an injected hang —
+        called when the injection scope exits, so abandoned rung workers
+        stop stranding threads for the full ``hang_s``."""
+        self._cancel.set()
 
     def add(self, *specs: FaultSpec) -> "FaultPlan":
         with self._lock:
@@ -129,16 +188,24 @@ class FaultPlan:
             return spec
         return None
 
+    def poll(self, site: str) -> FaultSpec | None:
+        """Event-style selection: return the spec scheduled for this
+        ``site`` hit (counting the hit) without raising or blocking —
+        how the fleet simulator consumes ``node.*`` topology events."""
+        with self._lock:
+            return self._select(site)
+
     def check(self, site: str, path: str | None = None) -> None:
         """Fire any scripted fault for this ``site`` hit. File kinds
         need ``path``; without one they degrade to ``raise``."""
         with self._lock:
             spec = self._select(site)
-        if spec is None:
+        if spec is None or spec.kind == "event":
             return
         msg = spec.message or f"injected {spec.kind} at {site}"
         if spec.kind == "hang":
-            time.sleep(spec.hang_s)
+            # interruptible: wakes early when the injection scope exits
+            self._cancel.wait(spec.hang_s)
             return
         if spec.kind in ("corrupt", "truncate"):
             if path is None:

@@ -139,6 +139,12 @@ class StragglerMonitor:
         if len(t) > self.window:
             t.pop(0)
 
+    def forget(self, worker: int) -> None:
+        """Drop a worker's timing history — call when its node fails,
+        flaps, or is drained so stale samples neither flag the restored
+        node as a straggler nor skew the fleet median while it's gone."""
+        self._times[worker] = []
+
     def stragglers(self) -> list[int]:
         """Workers whose median step time is a MAD outlier vs the fleet."""
         meds = np.array([np.median(t) if t else np.nan for t in self._times])

@@ -24,16 +24,18 @@ import math
 import os
 import socket
 import threading
+import time
 
 import jax
 import jax.numpy as jnp
 import pytest
 
 from repro.core.cache import TraceCache
-from repro.service import (AdmissionRequest, AdmissionService,
-                           ChaosSafetyViolation, ClusterSimulator,
-                           DegradePolicy, FaultPlan, FaultSpec,
-                           JobArrival, TraceStore, TransientFaultError,
+from repro.service import (FLEET_SITES, AdmissionRequest,
+                           AdmissionService, ChaosSafetyViolation,
+                           ClusterSimulator, DegradePolicy, FaultPlan,
+                           FaultSpec, JobArrival, TraceStore,
+                           TransientFaultError, fleet_event,
                            plan_raising_at)
 from repro.service.degrade import (RUNG_ANALYTIC, RUNG_EXACT, RUNG_SWEEP,
                                    DecisionLog, backoff_delays,
@@ -677,3 +679,102 @@ class TestDaemonHardening:
         req2 = build_train_request({"arch": "starcoder2-3b",
                                     "smoke": True, "seq": 32, "batch": 4})
         assert req2.deadline_s is None
+
+
+# ---------------------------------------------------------------------------
+class TestHangCancellation:
+    """ISSUE 7 satellite: injected hangs wait on the plan's cancel
+    event, not ``time.sleep`` — abandoning a hung rung (or exiting
+    ``inject_faults``) wakes the sleeper immediately instead of
+    stranding a worker thread for the full ``hang_s``."""
+
+    def test_cancel_wakes_a_sleeping_hang(self):
+        plan = FaultPlan([FaultSpec("tracer", "hang", hang_s=60.0,
+                                    times=1)])
+        plan.arm()
+        woke = threading.Event()
+
+        def sleeper():
+            plan.check("tracer")        # blocks on the cancel event
+            woke.set()
+
+        t = threading.Thread(target=sleeper, daemon=True)
+        t0 = time.perf_counter()
+        t.start()
+        time.sleep(0.05)
+        assert not woke.is_set(), "the hang must actually block"
+        plan.cancel()
+        assert woke.wait(5.0), "cancel() must wake the sleeper"
+        assert time.perf_counter() - t0 < 10.0
+
+    def test_arm_rearms_after_cancel(self):
+        plan = FaultPlan([FaultSpec("tracer", "hang", hang_s=0.2,
+                                    times=None)])
+        plan.cancel()
+        t0 = time.perf_counter()
+        plan.check("tracer")            # cancelled: returns immediately
+        assert time.perf_counter() - t0 < 0.1
+        plan.arm()                      # scripted hangs block again
+        t0 = time.perf_counter()
+        plan.check("tracer")
+        assert time.perf_counter() - t0 >= 0.2
+
+    def test_inject_faults_exit_frees_hung_rung_threads(self):
+        """A rung abandoned at its deadline sleeps in the injected hang;
+        leaving the injection scope must cancel the plan so no
+        ``xmem-rung`` thread stays stranded for the full ``hang_s``."""
+        svc = _svc()
+        try:
+            svc.decide(_request("hc-warm"))     # warm the trace cache
+            plan = FaultPlan([FaultSpec("replay", "hang", hang_s=60.0,
+                                        times=None)])
+            t0 = time.perf_counter()
+            with svc.inject_faults(plan):
+                d = svc.decide(_request("hc-hang", deadline_s=0.5))
+            assert d.degraded                   # the exact rung hung
+            assert time.perf_counter() - t0 < 10.0
+            deadline = time.perf_counter() + 5.0
+            while time.perf_counter() < deadline:
+                stuck = [t for t in threading.enumerate()
+                         if t.name == "xmem-rung" and t.is_alive()]
+                if not stuck:
+                    break
+                time.sleep(0.05)
+            assert not stuck, (
+                f"{len(stuck)} rung thread(s) still stranded in the "
+                "injected hang after inject_faults exit")
+        finally:
+            svc.close()
+
+
+# ---------------------------------------------------------------------------
+class TestFleetEventSites:
+    """Fleet topology events (ISSUE 7): carried by the same FaultPlan
+    as estimator faults, consumed via ``poll`` by the fleet simulator,
+    invisible to the estimate path's ``check``."""
+
+    def test_event_kind_is_noop_for_check(self):
+        plan = FaultPlan([fleet_event("node.fail", at=0)])
+        plan.check("node.fail")         # estimate path: no-op, no raise
+        assert plan.stats()["fired"]["node.fail"] == 1
+
+    def test_poll_honors_at_and_consumes_once(self):
+        plan = FaultPlan([fleet_event("node.flap", at=2, node="n7",
+                                      down_for=4)])
+        assert plan.poll("node.flap") is None       # tick 0
+        assert plan.poll("node.flap") is None       # tick 1
+        spec = plan.poll("node.flap")               # tick 2: fires
+        assert spec is not None and spec.node == "n7"
+        assert spec.down_for == 4
+        assert plan.poll("node.flap") is None       # times=1: consumed
+
+    def test_all_fleet_sites_roundtrip(self):
+        plan = FaultPlan([fleet_event(s, at=0) for s in FLEET_SITES])
+        for s in FLEET_SITES:
+            assert plan.poll(s) is not None
+
+    def test_non_fleet_site_rejected(self):
+        with pytest.raises(ValueError):
+            fleet_event("tracer")
+        with pytest.raises(ValueError):
+            FaultSpec("tracer", "event")
