@@ -2,7 +2,8 @@ PYTHONPATH := src
 export PYTHONPATH
 
 .PHONY: test test-fast chaos-test bench bench-check serve-bench \
-	plan-bench degrade-bench fleet-bench fleet-chaos report
+	plan-bench degrade-bench fleet-bench fleet-chaos offload-bench \
+	report
 
 test:            ## tier-1 test suite
 	python -m pytest -x -q
@@ -50,6 +51,12 @@ fleet-bench:     ## fleet-scheduler chaos benchmark only
 # kinds, the co-location invariant, and the 1000-arrival chaos replay
 fleet-chaos:     ## fleet-scheduler chaos + evacuation test suite
 	python -m pytest -x -q tests/test_fleet.py
+
+# merges the offload_* keys (zero-fresh-trace offload axis, per-space
+# offers, offloaded-estimate overhead) into BENCH_estimator.json —
+# the ISSUE 8 perf gate's record
+offload-bench:   ## host-offload planning benchmark only
+	python -m benchmarks.perf_estimator --offload-only
 
 report:          ## render artifact tables
 	python -m benchmarks.report

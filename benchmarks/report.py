@@ -259,6 +259,28 @@ def perf_check(baseline_path: str = "BENCH_estimator.json",
     else:
         print("[bench-check] baseline predates the fleet scheduler; "
               "skipping that check (refresh BENCH_estimator.json)")
+    rec_off_budget = baseline.get("offload_trace_budget")
+    if rec_off_budget is not None:
+        # ISSUE 8: offload counter-offers must come from re-planning
+        # already-cached traces — a fresh offload-only search that
+        # traces anything (budget 0) or finds no feasible per-space
+        # offer is a design regression, not a timing one
+        from benchmarks.perf_estimator import quick_offload_snapshot
+        snap = quick_offload_snapshot()
+        ook = (snap["offload_fresh_traces"] <= rec_off_budget
+               and snap["offload_candidates"] >= 2
+               and snap["offload_offers"] >= 1)
+        print(f"[bench-check] offload trace frugality: "
+              f"{snap['offload_fresh_traces']} fresh traces for "
+              f"{snap['offload_candidates']} offload candidates, "
+              f"{snap['offload_offers']} feasible offers "
+              f"(budget {rec_off_budget}, "
+              f"{snap['offload_cold_search_s']*1e3:.0f} ms) -> "
+              f"{'OK' if ook else 'REGRESSION'}")
+        ok = ok and ook
+    else:
+        print("[bench-check] baseline predates host offload; "
+              "skipping that check (refresh BENCH_estimator.json)")
     return 0 if ok else 1
 
 

@@ -82,7 +82,63 @@ TPU_ARENA = AllocatorPolicy(
     single_pool=True, arena=True,
 )
 
-POLICIES = {p.name: p for p in (CUDA_CACHING, XLA_BFC, TPU_ARENA)}
+# Host-side policies for the multi-space model (ISSUE 8). Pinned host
+# memory is page-locked (cudaHostAlloc / TPU pinned pools): 4 KiB pages,
+# arena semantics — a pinned pool never externally fragments in the way
+# a device BFC does, so reserved tracks rounded live. Pageable host
+# memory is plain malloc: 64-byte rounding, same arena accounting.
+HOST_PINNED_ARENA = AllocatorPolicy(
+    name="host_pinned", min_block=4 * KiB, small_size=0,
+    small_buffer=1 * MiB, large_buffer=1 * MiB, min_large_alloc=0,
+    round_large=4 * KiB, device_page=4 * KiB, split_remainder_large=4 * KiB,
+    single_pool=True, arena=True,
+)
+
+HOST_PAGEABLE_MALLOC = AllocatorPolicy(
+    name="host_pageable", min_block=64, small_size=0,
+    small_buffer=1 * MiB, large_buffer=1 * MiB, min_large_alloc=0,
+    round_large=4 * KiB, device_page=4 * KiB, split_remainder_large=64,
+    single_pool=True, arena=True,
+)
+
+POLICIES = {p.name: p for p in (CUDA_CACHING, XLA_BFC, TPU_ARENA,
+                                HOST_PINNED_ARENA, HOST_PAGEABLE_MALLOC)}
+
+
+@dataclasses.dataclass(frozen=True)
+class MemorySpaceSpec:
+    """Per-space allocator configuration: which policy models the space
+    and how much capacity it has (``None`` = unbounded — host RAM is
+    effectively unbounded relative to HBM for estimation purposes)."""
+
+    space: "object"                    # events.MemorySpace (no import cycle)
+    policy: AllocatorPolicy
+    capacity: int | None = None
+
+    @property
+    def bounded(self) -> bool:
+        return self.capacity is not None
+
+
+def default_space_specs(device_policy: AllocatorPolicy,
+                        device_capacity: int | None = None,
+                        host_pinned_capacity: int | None = None,
+                        host_pageable_capacity: int | None = None) -> dict:
+    """The standard three-space layout: the caller's device policy plus
+    arena-modeled host spaces. Returns ``{MemorySpace: MemorySpaceSpec}``
+    keyed by every member of :class:`~repro.core.events.MemorySpace`, so
+    a replay engine can look any block's space up unconditionally."""
+    from .events import MemorySpace
+    return {
+        MemorySpace.DEVICE_HBM: MemorySpaceSpec(
+            MemorySpace.DEVICE_HBM, device_policy, device_capacity),
+        MemorySpace.HOST_PINNED: MemorySpaceSpec(
+            MemorySpace.HOST_PINNED, HOST_PINNED_ARENA,
+            host_pinned_capacity),
+        MemorySpace.HOST_PAGEABLE: MemorySpaceSpec(
+            MemorySpace.HOST_PAGEABLE, HOST_PAGEABLE_MALLOC,
+            host_pageable_capacity),
+    }
 
 
 def round_up(x: int, q: int) -> int:

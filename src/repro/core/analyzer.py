@@ -61,11 +61,11 @@ def reconstruct_lifecycles(trace: Trace) -> list[BlockLifecycle]:
                 continue  # free without alloc: trace started mid-stream
             out.append(BlockLifecycle(
                 a.block_id, a.size, a.t, e.t, a.iteration, a.phase,
-                a.op, a.scope, a.block_kind, 1.0, a.shape))
+                a.op, a.scope, a.block_kind, 1.0, a.shape, a.space))
     for a in open_blocks.values():  # persistent (no free observed)
         out.append(BlockLifecycle(
             a.block_id, a.size, a.t, None, a.iteration, a.phase,
-            a.op, a.scope, a.block_kind, 1.0, a.shape))
+            a.op, a.scope, a.block_kind, 1.0, a.shape, a.space))
     out.sort(key=lambda b: b.alloc_t)
     return out
 

@@ -50,8 +50,9 @@ from .cache import (BlockInfo, GLOBAL_TRACE_CACHE, TraceCache, TracedPhase,
 from .events import (BlockKind, BlockLifecycle, PeriodicBlocks, Phase,
                      peak_live_bytes, periodic_breakdown_peaks,
                      periodic_breakdown_peaks_fast, reduced_for_breakdown)
-from .orchestrator import CollectiveSpec, MemoryOrchestrator, OrchestratorPolicy
-from .simulator import MemorySimulator, SimResult
+from .orchestrator import (CollectiveSpec, MemoryOrchestrator, OffloadPlan,
+                           OrchestratorPolicy)
+from .simulator import MemorySimulator, SimResult, split_blocks_by_space
 from .tracer import trace_fn_with_shape
 
 
@@ -773,6 +774,17 @@ class XMemEstimator:
             num_iterations=self.iterations,
             shard_factor_fn=shard_factor_fn,
         )
+        # host-offload rewrite (separate pass so run == run_unfused holds);
+        # only *concretely composed* iterations get staging blocks — the
+        # synthetic template keys (e.g. update_start[2] on the fast path)
+        # are release markers, not iterations that exist in the timeline
+        offload_stats = None
+        opolicy = self.orchestrator.policy
+        if opolicy.offload is not None and opolicy.offload.enabled:
+            us_concrete = {it: t for it, t in meta["update_start"].items()
+                           if it in meta["bwd_start"]}
+            concrete, offload_stats = self.orchestrator.apply_offload(
+                concrete, us_concrete, meta["iteration_ends"])
 
         # --- stage 5: simulate ---
         num_events = (len(fwd.trace.events)
@@ -790,7 +802,7 @@ class XMemEstimator:
                   if N >= 2 else [])
         pb = PeriodicBlocks(prefix, cyc, pb.n_cycles, pb.period, suffix,
                             meta=pb.meta)
-        sim = sim_runner.replay(pb)
+        sim = sim_runner.replay_spaces(pb)
         is_cycle = (lambda b: N >= 3 and b.iteration == 1)
         persistent = sum(
             b.sharded_size * (pb.n_cycles if is_cycle(b) else 1)
@@ -799,14 +811,26 @@ class XMemEstimator:
                 BlockKind.PARAM, BlockKind.OPT_STATE))
         # peaks computed on a bounded-replica reduction when middle
         # iterations carry no net bytes — O(blocks), independent of N;
-        # the vectorized sweep is output-identical to the dict-based one
+        # the vectorized sweep is output-identical to the dict-based one.
+        # Under offload the per-kind/per-phase breakdown describes the
+        # *device* composition (what the capacity verdict is about).
+        bd_pb = pb
+        if offload_stats is not None:
+            from .events import MemorySpace
+            bd_pb = split_blocks_by_space(pb).get(
+                MemorySpace.DEVICE_HBM,
+                PeriodicBlocks([], [], pb.n_cycles, pb.period, [],
+                               dict(pb.meta)))
         liveness_peak, phase_pk = periodic_breakdown_peaks_fast(
-            reduced_for_breakdown(pb))
+            reduced_for_breakdown(bd_pb))
         breakdown = {
             "phase_peaks": phase_pk,
             "num_blocks": pb.num_blocks,
             "liveness_peak": liveness_peak,
         }
+        if offload_stats is not None:
+            breakdown["space_peaks"] = sim.stats.get("space_peaks", {})
+            breakdown["offload"] = offload_stats
         composition = pb
         report = EstimateReport(
             peak_bytes=sim.peak_reserved,
@@ -834,6 +858,12 @@ class XMemEstimator:
         materialized N-iteration composition, full event replay. The
         fast path must match it bit-for-bit on every estimate field
         (tests/test_fastpath.py)."""
+        opolicy = self.orchestrator.policy
+        if opolicy.offload is not None and opolicy.offload.enabled:
+            raise NotImplementedError(
+                "host offload needs the fast path (fastpath=True): the "
+                "reference pipeline is frozen at seed semantics and has "
+                "no multi-space replay")
         # --- stage 1: CPU traces (paper: profile first iterations) ---
         fwd_out_shape = jax.eval_shape(fwd_bwd_fn, params, batch)
         n_out = len(jax.tree_util.tree_leaves(fwd_out_shape))
@@ -976,8 +1006,15 @@ class XMemEstimator:
         probe = (report.sim
                  if getattr(report, "sim_unbounded", False)
                  and not report.sim.oom else None)
-        return sim_runner.min_feasible_capacity(report.composition,
-                                                probe=probe)
+        # under offload the capacity question is about device HBM only —
+        # the probe stays valid because replay_spaces' primary result IS
+        # the device sub-composition's replay
+        comp = report.composition
+        groups = split_blocks_by_space(comp)
+        if len(groups) > 1:
+            from .events import MemorySpace
+            comp = groups.get(MemorySpace.DEVICE_HBM, [])
+        return sim_runner.min_feasible_capacity(comp, probe=probe)
 
     def estimate_serving(self, decode_fn: Callable, params, cache, batch,
                          shard_factor_fn=None,

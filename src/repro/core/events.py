@@ -26,8 +26,26 @@ import numpy as np
 #: list). v2 adds the version field, columnar payloads and phase/iteration
 #: metadata for columnar traces. v3 adds per-block shape metadata (the
 #: spec-driven per-device estimation input); v2 dumps load with shapes
-#: unknown. Loaders accept <= current, reject newer.
-TRACE_SCHEMA_VERSION = 3
+#: unknown. v4 adds the memory-space column (host-offload semantics);
+#: v3 dumps load with every event in DEVICE_HBM. Loaders accept <=
+#: current, reject newer.
+TRACE_SCHEMA_VERSION = 4
+
+
+class MemorySpace(enum.Enum):
+    """Which physical memory a block resides in (multi-space model).
+
+    DEVICE_HBM is the accelerator memory every pre-v4 trace implicitly
+    assumed; the host spaces exist for offload semantics (optimizer
+    state / activations parked on the host between uses, staged back
+    via ``fetch_in`` transfer blocks). HOST_PINNED is page-locked
+    memory (DMA-able, the space real offload implementations use);
+    HOST_PAGEABLE models plain malloc-backed host memory.
+    """
+
+    DEVICE_HBM = "device_hbm"
+    HOST_PINNED = "host_pinned"
+    HOST_PAGEABLE = "host_pageable"
 
 
 class BlockKind(enum.Enum):
@@ -61,6 +79,12 @@ PHASE_TABLE: tuple[Phase, ...] = tuple(Phase)
 PHASE_CODE: dict[Phase, int] = {p: i for i, p in enumerate(PHASE_TABLE)}
 KIND_TABLE: tuple[BlockKind, ...] = tuple(BlockKind)
 KIND_CODE: dict[BlockKind, int] = {k: i for i, k in enumerate(KIND_TABLE)}
+SPACE_TABLE: tuple[MemorySpace, ...] = tuple(MemorySpace)
+SPACE_CODE: dict[MemorySpace, int] = {s: i for i, s in
+                                      enumerate(SPACE_TABLE)}
+#: Code 0 == DEVICE_HBM by construction — a missing v3 space column
+#: loads as ``zeros`` and means "everything on device", bit-identically.
+assert SPACE_TABLE[0] is MemorySpace.DEVICE_HBM
 
 
 class StringInterner:
@@ -112,12 +136,14 @@ class MemoryEvent:
     scope: str = ""        # layer scope, e.g. "decoder/layers/attn/q_proj"
     block_kind: BlockKind = BlockKind.TEMP
     shape: tuple | None = None   # aval dims (spec-driven sharding input)
+    space: MemorySpace = MemorySpace.DEVICE_HBM
 
     def to_json(self) -> dict:
         d = dataclasses.asdict(self)
         d["phase"] = self.phase.value
         d["block_kind"] = self.block_kind.value
         d["shape"] = None if self.shape is None else list(self.shape)
+        d["space"] = self.space.value
         return d
 
     @staticmethod
@@ -127,6 +153,8 @@ class MemoryEvent:
         d["block_kind"] = BlockKind(d["block_kind"])
         shape = d.get("shape")   # absent in v1/v2 dumps
         d["shape"] = None if shape is None else tuple(shape)
+        # absent in v1-v3 dumps: everything lived on device
+        d["space"] = MemorySpace(d.get("space", "device_hbm"))
         return MemoryEvent(**d)
 
 
@@ -154,6 +182,7 @@ class BlockLifecycle:
     block_kind: BlockKind = BlockKind.TEMP
     shard_factor: float = 1.0
     shape: tuple | None = None
+    space: MemorySpace = MemorySpace.DEVICE_HBM
 
     @property
     def persistent(self) -> bool:
@@ -193,10 +222,13 @@ class ColumnarTrace:
     scope_table: list[str]
     shape: np.ndarray | None = None     # int32 -> shape_table
     shape_table: list = dataclasses.field(default_factory=lambda: [None])
+    space: np.ndarray | None = None     # uint8 codes -> SPACE_TABLE
 
     def __post_init__(self):
         if self.shape is None:
             self.shape = np.zeros(len(self.kind), dtype=np.int32)
+        if self.space is None:   # pre-v4 trace: everything on device
+            self.space = np.zeros(len(self.kind), dtype=np.uint8)
 
     def __len__(self) -> int:
         return int(self.kind.shape[0])
@@ -214,6 +246,7 @@ class ColumnarTrace:
         scope = np.empty(n, dtype=np.int32)
         bkind = np.empty(n, dtype=np.uint8)
         shp = np.empty(n, dtype=np.int32)
+        spc = np.empty(n, dtype=np.uint8)
         ops = StringInterner()
         scopes = StringInterner()
         shapes = StringInterner([None])
@@ -228,14 +261,16 @@ class ColumnarTrace:
             scope[i] = scopes.intern(e.scope)
             bkind[i] = KIND_CODE[e.block_kind]
             shp[i] = shapes.intern(e.shape)
+            spc[i] = SPACE_CODE[e.space]
         return ColumnarTrace(kind, bid, size, t, it, phase, op, scope,
                              bkind, ops.table, scopes.table,
-                             shp, shapes.table)
+                             shp, shapes.table, spc)
 
     @staticmethod
     def from_columns(kind, bid, size, t, iteration, phase, op, scope,
                      bkind, op_table, scope_table,
-                     shape=None, shape_table=None) -> "ColumnarTrace":
+                     shape=None, shape_table=None,
+                     space=None) -> "ColumnarTrace":
         """Build from raw python lists (the tracer's direct-emission path:
         no ``MemoryEvent`` objects are ever constructed)."""
         return ColumnarTrace(
@@ -250,7 +285,8 @@ class ColumnarTrace:
             np.asarray(bkind, dtype=np.uint8),
             list(op_table), list(scope_table),
             None if shape is None else np.asarray(shape, dtype=np.int32),
-            [None] if shape_table is None else list(shape_table))
+            [None] if shape_table is None else list(shape_table),
+            None if space is None else np.asarray(space, dtype=np.uint8))
 
     def event_at(self, i: int) -> MemoryEvent:
         return MemoryEvent(
@@ -258,7 +294,7 @@ class ColumnarTrace:
             int(self.size[i]), int(self.t[i]), int(self.iteration[i]),
             PHASE_TABLE[self.phase[i]], self.op_table[self.op[i]],
             self.scope_table[self.scope[i]], KIND_TABLE[self.block_kind[i]],
-            self.shape_table[self.shape[i]])
+            self.shape_table[self.shape[i]], SPACE_TABLE[self.space[i]])
 
     def to_events(self) -> list[MemoryEvent]:
         return [self.event_at(i) for i in range(len(self))]
@@ -283,6 +319,7 @@ class ColumnarTrace:
             "scope_table": self.scope_table,
             "shape": self.shape.tolist(),
             "shape_table": _shape_table_to_json(self.shape_table),
+            "space": self.space.tolist(),
         }
 
     @staticmethod
@@ -292,7 +329,8 @@ class ColumnarTrace:
             d["phase"], d["op"], d["scope"], d["block_kind"],
             d["op_table"], d["scope_table"],
             d.get("shape"),                    # absent in v2 dumps
-            _shape_table_from_json(d.get("shape_table")))
+            _shape_table_from_json(d.get("shape_table")),
+            d.get("space"))                    # absent in v2/v3 dumps
 
 
 class LazyEvents(Sequence):
@@ -343,10 +381,13 @@ class ColumnarBlocks:
     scope_table: list[str]
     shape: np.ndarray | None = None     # int32 -> shape_table
     shape_table: list = dataclasses.field(default_factory=lambda: [None])
+    space: np.ndarray | None = None     # uint8 codes -> SPACE_TABLE
 
     def __post_init__(self):
         if self.shape is None:
             self.shape = np.zeros(len(self.block_id), dtype=np.int32)
+        if self.space is None:   # pre-v4 payload: everything on device
+            self.space = np.zeros(len(self.block_id), dtype=np.uint8)
 
     def __len__(self) -> int:
         return int(self.block_id.shape[0])
@@ -365,6 +406,7 @@ class ColumnarBlocks:
         bkind = np.empty(n, dtype=np.uint8)
         shard = np.empty(n, dtype=np.float64)
         shp = np.empty(n, dtype=np.int32)
+        spc = np.empty(n, dtype=np.uint8)
         ops = StringInterner()
         scopes = StringInterner()
         shapes = StringInterner([None])
@@ -380,9 +422,10 @@ class ColumnarBlocks:
             bkind[i] = KIND_CODE[b.block_kind]
             shard[i] = b.shard_factor
             shp[i] = shapes.intern(b.shape)
+            spc[i] = SPACE_CODE[b.space]
         return ColumnarBlocks(bid, size, at, ft, it, phase, op, scope,
                               bkind, shard, ops.table, scopes.table,
-                              shp, shapes.table)
+                              shp, shapes.table, spc)
 
     def to_lifecycles(self) -> list[BlockLifecycle]:
         ft = self.free_t
@@ -392,7 +435,8 @@ class ColumnarBlocks:
             PHASE_TABLE[self.phase[i]], self.op_table[self.op[i]],
             self.scope_table[self.scope[i]], KIND_TABLE[self.block_kind[i]],
             float(self.shard_factor[i]),
-            self.shape_table[self.shape[i]]) for i in range(len(self))]
+            self.shape_table[self.shape[i]],
+            SPACE_TABLE[self.space[i]]) for i in range(len(self))]
 
     def sharded_sizes(self) -> np.ndarray:
         return sharded_sizes_array(self.size, self.shard_factor)
@@ -402,8 +446,8 @@ class ColumnarBlocks:
             self, size=np.asarray(sizes, dtype=np.int64))
 
     def to_json(self) -> dict:
-        """Schema-v3 columnar payload (shape column + interned table
-        included) — the persistent trace store's lifecycle format."""
+        """Schema-v4 columnar payload (shape + space columns included)
+        — the persistent trace store's lifecycle format."""
         return {
             "block_id": self.block_id.tolist(),
             "size": self.size.tolist(),
@@ -419,10 +463,12 @@ class ColumnarBlocks:
             "scope_table": self.scope_table,
             "shape": self.shape.tolist(),
             "shape_table": _shape_table_to_json(self.shape_table),
+            "space": self.space.tolist(),
         }
 
     @staticmethod
     def from_json(d: dict) -> "ColumnarBlocks":
+        space = d.get("space")                 # absent in v3 payloads
         return ColumnarBlocks(
             np.asarray(d["block_id"], dtype=np.int64),
             np.asarray(d["size"], dtype=np.int64),
@@ -436,7 +482,8 @@ class ColumnarBlocks:
             np.asarray(d["shard_factor"], dtype=np.float64),
             list(d["op_table"]), list(d["scope_table"]),
             np.asarray(d["shape"], dtype=np.int32),
-            _shape_table_from_json(d.get("shape_table")))
+            _shape_table_from_json(d.get("shape_table")),
+            None if space is None else np.asarray(space, dtype=np.uint8))
 
 
 def sharded_sizes_array(size: np.ndarray, shard: np.ndarray) -> np.ndarray:
@@ -551,13 +598,13 @@ def lifecycles_to_events(blocks: Sequence[BlockLifecycle]) -> list[MemoryEvent]:
         evs.append(
             (b.alloc_t, 1, MemoryEvent(
                 "alloc", b.block_id, b.sharded_size, b.alloc_t, b.iteration,
-                b.phase, b.op, b.scope, b.block_kind, b.shape))
+                b.phase, b.op, b.scope, b.block_kind, b.shape, b.space))
         )
         if b.free_t is not None:
             evs.append(
                 (b.free_t, 0, MemoryEvent(
                     "free", b.block_id, b.sharded_size, b.free_t, b.iteration,
-                    b.phase, b.op, b.scope, b.block_kind, b.shape))
+                    b.phase, b.op, b.scope, b.block_kind, b.shape, b.space))
             )
     evs.sort(key=lambda x: (x[0], x[1]))
     return [e for _, _, e in evs]
@@ -620,7 +667,7 @@ class PeriodicBlocks:
                     shift_cycle_bid(b.block_id, k), b.size, b.alloc_t + dt,
                     None if b.free_t is None else b.free_t + dt,
                     b.iteration + k, b.phase, b.op, b.scope, b.block_kind,
-                    b.shard_factor, b.shape))
+                    b.shard_factor, b.shape, b.space))
         out.extend(self.suffix)
         return out
 

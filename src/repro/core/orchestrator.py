@@ -37,7 +37,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Callable, Sequence
 
-from .events import BlockKind, BlockLifecycle, Phase
+from .events import BlockKind, BlockLifecycle, MemorySpace, Phase
 
 # Elementwise/layout primitives XLA reliably fuses into consumers —
 # their outputs typically never hit HBM as standalone buffers.
@@ -50,6 +50,39 @@ FUSIBLE_OPS = frozenset({
     "floor", "ceil", "round", "is_finite", "copy", "real", "imag",
     "slice", "rev", "iota", "cos", "sin", "cumsum", "cumlogsumexp",
 })
+
+
+@dataclasses.dataclass(frozen=True)
+class OffloadPlan:
+    """A-priori host-offload schedule (TENSILE direction, ISSUE 8).
+
+    TENSILE schedules tensor swapping reactively at runtime; because the
+    event engine replays on CPU, the same swaps are decided here a
+    priori, as a lifecycle rewrite: offloaded blocks change their
+    ``space`` to a host space and paired transfer blocks (op
+    ``offload_out`` / ``fetch_in``) model the device-side staging the
+    copies need. The replay engine then reports per-space peaks and the
+    roofline cost model charges the transfer bytes over PCIe.
+
+    * ``optimizer_state`` — park persistent OPT_STATE on the host; a
+      device staging copy exists only during each optimizer phase
+      (fetched in before the update, written back after).
+    * ``activations`` — fraction (by bytes, largest-first) of eligible
+      saved activations offloaded between production (forward) and
+      consumption (backward). Rematerialization interacts naturally:
+      stronger remat policies save fewer/smaller activations, so the
+      eligible set shrinks and with it the transfer cost.
+    """
+
+    optimizer_state: bool = False
+    activations: float = 0.0          # 0..1, fraction of eligible bytes
+    space: MemorySpace = MemorySpace.HOST_PINNED
+    min_block_bytes: int = 1 << 16    # never offload tiny blocks
+    stage_ticks: int = 1              # device residency of a staging copy
+
+    @property
+    def enabled(self) -> bool:
+        return self.optimizer_state or self.activations > 0.0
 
 
 @dataclasses.dataclass
@@ -98,6 +131,10 @@ class OrchestratorPolicy:
     # data-driven estimators this is model-independent — it captures
     # the runtime's buffering behavior, not the workload.
     transient_scale: float = 1.0
+    # Host-offload schedule (None = everything stays in device HBM).
+    # Applied as a separate pass *after* run/run_unfused so the fused
+    # pipeline stays output-identical to its oracle.
+    offload: OffloadPlan | None = None
 
 
 @dataclasses.dataclass
@@ -367,6 +404,129 @@ class MemoryOrchestrator:
                        ) -> list[BlockLifecycle]:
         return [dataclasses.replace(b, shard_factor=max(factor_fn(b), 1.0))
                 for b in blocks]
+
+    def apply_offload(self, blocks: list[BlockLifecycle],
+                      update_start: dict[int, int] | None = None,
+                      iteration_ends: dict[int, int] | None = None,
+                      ) -> tuple[list[BlockLifecycle], dict | None]:
+        """Rewrite lifecycles per the policy's :class:`OffloadPlan`.
+
+        Runs *after* ``run``/``run_unfused`` (so the fused pipeline stays
+        identical to its oracle) and before replay. Two rewrites:
+
+        * optimizer-state: persistent OPT_STATE blocks move to the host
+          space; each optimizer phase gets a device ``fetch_in`` staging
+          copy spanning ``[update_start, iteration_end]`` (the state is
+          fetched before the update and written back after — 2x bytes
+          over the interconnect per iteration).
+        * activations: eligible saved activations (device-resident,
+          freed, >= ``min_block_bytes``, lifetime long enough to round-
+          trip) are picked largest-first per iteration until the
+          ``activations`` byte fraction is covered. The original block's
+          device residency shrinks to a copy-out window at its head; a
+          host block (op ``offload_out``) holds the bulk residency, and
+          a device ``fetch_in`` staging block covers the copy-back
+          window before the backward pass consumes it.
+
+        Synthetic blocks get ids descending from -200000 (below the
+        upcast namespace). Returns ``(blocks, stats)``; stats is None
+        when no offload is configured. Transfer accounting uses
+        per-device (sharded) sizes — those are the bytes that cross
+        PCIe on each device.
+        """
+        plan = self.policy.offload
+        if plan is None or not plan.enabled:
+            return blocks, None
+        update_start = update_start or {}
+        iteration_ends = iteration_ends or {}
+        _DEV = MemorySpace.DEVICE_HBM
+        out: list[BlockLifecycle] = []
+        extra: list[BlockLifecycle] = []
+        bid = -200_000
+        transfers: dict[int, int] = {}  # per-iteration transfer bytes
+        opt_blocks = opt_bytes = 0
+        act_blocks = act_bytes = 0
+        min_life = 2 * plan.stage_ticks + 1
+
+        # per-iteration activation selection: largest-first until the
+        # requested byte fraction of the eligible set is covered
+        selected: set[int] = set()
+        if plan.activations > 0.0:
+            eligible: dict[int, list[BlockLifecycle]] = {}
+            for b in blocks:
+                if (b.block_kind is BlockKind.ACTIVATION
+                        and b.space is _DEV
+                        and b.free_t is not None
+                        and b.size >= plan.min_block_bytes
+                        and (b.free_t - b.alloc_t) > min_life):
+                    eligible.setdefault(b.iteration, []).append(b)
+            for it, cands in eligible.items():
+                total = sum(c.size for c in cands)
+                target = plan.activations * total
+                taken = 0
+                cands.sort(key=lambda c: (-c.size, c.alloc_t, c.block_id))
+                for c in cands:
+                    if taken >= target:
+                        break
+                    selected.add(id(c))
+                    taken += c.size
+
+        for b in blocks:
+            if (plan.optimizer_state
+                    and b.block_kind is BlockKind.OPT_STATE
+                    and b.space is _DEV
+                    and b.free_t is None
+                    and b.size >= plan.min_block_bytes):
+                out.append(dataclasses.replace(b, space=plan.space))
+                opt_blocks += 1
+                opt_bytes += b.sharded_size
+                for it, us in update_start.items():
+                    end = iteration_ends.get(it)
+                    if us is None or end is None or us >= end:
+                        continue
+                    extra.append(BlockLifecycle(
+                        bid, b.size, us, end, it, Phase.OPTIMIZER,
+                        "fetch_in", b.scope, BlockKind.OPT_STATE,
+                        b.shard_factor, b.shape))
+                    bid -= 1
+                    transfers[it] = (transfers.get(it, 0)
+                                     + 2 * b.sharded_size)
+                continue
+            if id(b) in selected:
+                head_end = b.alloc_t + plan.stage_ticks
+                tail_start = max(b.free_t - plan.stage_ticks, head_end)
+                out.append(dataclasses.replace(b, free_t=head_end))
+                extra.append(BlockLifecycle(
+                    bid, b.size, b.alloc_t, b.free_t, b.iteration,
+                    b.phase, "offload_out", b.scope, b.block_kind,
+                    b.shard_factor, b.shape, plan.space))
+                bid -= 1
+                extra.append(BlockLifecycle(
+                    bid, b.size, tail_start, b.free_t, b.iteration,
+                    b.phase, "fetch_in", b.scope, b.block_kind,
+                    b.shard_factor, b.shape))
+                bid -= 1
+                act_blocks += 1
+                act_bytes += b.sharded_size
+                transfers[b.iteration] = (
+                    transfers.get(b.iteration, 0) + 2 * b.sharded_size)
+                continue
+            out.append(b)
+        out.extend(extra)
+        # steady-state transfer bytes: the cycle iteration (1) when the
+        # composition has one, else the heaviest observed iteration
+        steady = transfers.get(1)
+        if steady is None:
+            steady = max(transfers.values(), default=0)
+        stats = {
+            "opt_state_blocks": opt_blocks,
+            "opt_state_bytes": opt_bytes,
+            "activation_blocks": act_blocks,
+            "activation_bytes": act_bytes,
+            "transfer_bytes_per_iter": steady,
+            "space": plan.space.value,
+        }
+        return out, stats
 
     # -- composite ------------------------------------------------------------
     def run_unfused(self, blocks: list[BlockLifecycle], *,

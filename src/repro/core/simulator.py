@@ -38,11 +38,11 @@ from typing import Sequence
 import numpy as np
 
 from .allocator import (AllocatorPolicy, CachingAllocatorSim, CUDA_CACHING,
-                        DeviceAllocatorSim, SimOOMError, round_size_array,
-                        round_up, round_up_array)
-from .events import (CYCLE_ID_STRIDE, BlockLifecycle, PeriodicBlocks,
-                     lifecycles_to_events, sharded_sizes_array,
-                     shift_cycle_bid, split_cycle_bid)
+                        DeviceAllocatorSim, SimOOMError, default_space_specs,
+                        round_size_array, round_up, round_up_array)
+from .events import (CYCLE_ID_STRIDE, BlockLifecycle, MemorySpace,
+                     PeriodicBlocks, lifecycles_to_events,
+                     sharded_sizes_array, shift_cycle_bid, split_cycle_bid)
 
 _UNBOUNDED = 1 << 62
 
@@ -207,6 +207,36 @@ class SimResult:
         if not self.peak_allocated:
             return 0.0
         return self.peak_reserved / self.peak_allocated - 1.0
+
+
+def split_blocks_by_space(blocks):
+    """Partition a flat lifecycle list or ``PeriodicBlocks`` composition
+    into per-space sub-compositions (same structure, same times — each
+    space's allocator sees only its own demand). Returns a dict keyed by
+    :class:`MemorySpace`; inputs that never left the device return a
+    single-entry dict holding the *original* object, so the all-device
+    replay path is byte-for-byte the one-space case."""
+    if isinstance(blocks, PeriodicBlocks):
+        spaces = {b.space for part in (blocks.prefix, blocks.cycle,
+                                       blocks.suffix) for b in part}
+        if spaces <= {MemorySpace.DEVICE_HBM}:
+            return {MemorySpace.DEVICE_HBM: blocks}
+        out = {}
+        for s in spaces:
+            out[s] = PeriodicBlocks(
+                [b for b in blocks.prefix if b.space is s],
+                [b for b in blocks.cycle if b.space is s],
+                blocks.n_cycles, blocks.period,
+                [b for b in blocks.suffix if b.space is s],
+                dict(blocks.meta))
+        return out
+    spaces = {b.space for b in blocks}
+    if spaces <= {MemorySpace.DEVICE_HBM}:
+        return {MemorySpace.DEVICE_HBM: blocks}
+    out = {s: [] for s in spaces}
+    for b in blocks:
+        out[b.space].append(b)
+    return out
 
 
 def _event_tuples(blocks: Sequence[BlockLifecycle], seq0: int
@@ -621,6 +651,67 @@ class MemorySimulator:
             oom, oom_at = True, n_done
         return self._result(sim, oom, oom_at, extra_stats={
             "engine": "columnar", "events_replayed": n_done})
+
+    # -- multi-space replay ----------------------------------------------------
+    def replay_spaces(self, blocks, space_specs: dict | None = None,
+                      steady_state: bool = True) -> SimResult:
+        """Replay a (possibly multi-space) composition and report
+        per-space peaks.
+
+        Each space's demand replays independently through that space's
+        own allocator policy (device HBM pages vs pinned-arena vs
+        malloc-like pageable — per ``space_specs``, defaulting to
+        :func:`default_space_specs` with this simulator's device policy
+        and capacity). The primary :class:`SimResult` is the *device*
+        replay — the quantity schedulers budget — and
+        ``stats["space_peaks"]`` maps space name to peak reserved bytes;
+        ``stats["host_spaces"]`` carries each host space's peaks and OOM
+        verdict (against its capacity, unbounded by default), and
+        ``stats["any_space_oom"]`` is the job-level verdict.
+
+        All-device inputs take exactly the single-space :meth:`replay`
+        path on the original object — bit-identical to the pre-v4
+        engine by construction.
+        """
+        groups = split_blocks_by_space(blocks) \
+            if not isinstance(blocks, ColumnarProgram) \
+            else {MemorySpace.DEVICE_HBM: blocks}
+        host_spaces = [s for s in groups if s is not MemorySpace.DEVICE_HBM]
+        if not host_spaces:
+            res = self.replay(blocks, steady_state)
+            res.stats["space_peaks"] = {
+                MemorySpace.DEVICE_HBM.value: res.peak_reserved}
+            return res
+        specs = space_specs if space_specs is not None else \
+            default_space_specs(
+                self.policy,
+                None if self.capacity >= _UNBOUNDED else self.capacity)
+        dev = groups.get(MemorySpace.DEVICE_HBM)
+        if dev is None:
+            dev = []
+        res = self.replay(dev, steady_state)
+        peaks = {MemorySpace.DEVICE_HBM.value: res.peak_reserved}
+        host_stats: dict[str, dict] = {}
+        any_oom = res.oom
+        for s in host_spaces:
+            spec = specs.get(s)
+            policy = spec.policy if spec is not None else self.policy
+            cap = (spec.capacity if spec is not None
+                   and spec.capacity is not None else _UNBOUNDED)
+            sub = MemorySimulator(policy, cap, self.engine).replay(
+                groups[s], steady_state)
+            peaks[s.value] = sub.peak_reserved
+            host_stats[s.value] = {
+                "peak_reserved": sub.peak_reserved,
+                "peak_allocated": sub.peak_allocated,
+                "oom": sub.oom,
+                "policy": policy.name,
+            }
+            any_oom = any_oom or sub.oom
+        res.stats["space_peaks"] = peaks
+        res.stats["host_spaces"] = host_stats
+        res.stats["any_space_oom"] = any_oom
+        return res
 
     # -- capacity probing ------------------------------------------------------
     def would_oom(self, blocks, capacity: int) -> bool:

@@ -209,6 +209,7 @@ class _PhaseModel:
                     and np.array_equal(ref.op, c.op)
                     and np.array_equal(ref.scope, c.scope)
                     and np.array_equal(ref.shape, c.shape)
+                    and np.array_equal(ref.space, c.space)
                     and ref.op_table == c.op_table
                     and ref.scope_table == c.scope_table):
                 return
@@ -222,6 +223,7 @@ class _PhaseModel:
                     and np.array_equal(lref.free_t, c.free_t)
                     and np.array_equal(lref.block_kind, c.block_kind)
                     and np.array_equal(lref.shape, c.shape)
+                    and np.array_equal(lref.space, c.space)
                     and np.array_equal(lref.shard_factor, c.shard_factor)):
                 return
 
@@ -399,8 +401,8 @@ def _trace_sig(entry: TracedPhase) -> tuple:
     c = entry.trace.columnar()
     return (len(c), c.kind.tobytes(), c.block_id.tobytes(), c.t.tobytes(),
             c.op.tobytes(), c.scope.tobytes(), c.phase.tobytes(),
-            c.block_kind.tobytes(), c.shape.tobytes(), tuple(c.op_table),
-            tuple(c.scope_table))
+            c.block_kind.tobytes(), c.shape.tobytes(), c.space.tobytes(),
+            tuple(c.op_table), tuple(c.scope_table))
 
 
 # -- scalar detection --------------------------------------------------------

@@ -434,13 +434,16 @@ class JaxprMemoryTracer:
                 b.kind = b.kind if b.kind != BlockKind.ACTIVATION else BlockKind.OUTPUT
         self.output_blocks = [b for b in outs if b is not None]
         n = self.num_events
+        # space column: the jaxpr interpreter only ever allocates device
+        # memory — offload passes (orchestrator) rewrite spaces later
         columns = ColumnarTrace.from_columns(
             self._ev_kind, self._ev_bid, self._ev_size, self._ev_t,
             np.full(n, self.iteration, dtype=np.int64),
             np.full(n, PHASE_CODE[self.phase], dtype=np.uint8),
             self._ev_op, self._ev_scope, self._ev_bkind,
             self._ops.table, self._scopes.table,
-            self._ev_shape, self._shapes.table)
+            self._ev_shape, self._shapes.table,
+            np.zeros(n, dtype=np.uint8))
         return Trace.from_columnar(columns, num_iterations=1,
                                    meta={"phase": self.phase.value})
 

@@ -151,6 +151,6 @@ def analytic_peak_bytes(cfg: ModelConfig, shape: ShapeSpec, *,
     acts = tokens * cfg.d_model * dtype_b \
         * act_tensors_per_layer * cfg.n_layers
     # output head: logits + fp32 softmax/loss scratch
-    logits = tokens * cfg.padded_vocab() * (dtype_b + 4.0)
+    logits = tokens * cfg.padded_vocab * (dtype_b + 4.0)
     inputs = shape.tokens * 4.0 * 2.0      # token ids + targets (int32)
     return int(params + grads + opt + acts + logits + inputs)

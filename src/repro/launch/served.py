@@ -18,7 +18,10 @@ Request kinds:
 
 * ``train`` — ``{"kind":"train","arch":...,"smoke":bool,"optimizer":
   "adamw","microbatches":1,"clip_norm":1.0,"seq":64,"batch":8,
-  "hbm_gib":0.25,"probe_min_capacity":false}``
+  "hbm_gib":0.25,"probe_min_capacity":false}``; an optional
+  ``"offload":{"optimizer_state":true,"activations":0.5}`` object
+  estimates with host offload applied (response breakdown carries
+  per-space peaks)
 * ``serve`` — ``{"kind":"serve","arch":...,"smoke":bool,"max_len":64,
   "batch":8,"hbm_gib":0.25}`` (gates on max(prefill, decode))
 * ``plan`` — the same job fields as ``train`` plus the remediation
@@ -26,7 +29,9 @@ Request kinds:
   "devices":[4,8],"batch_grid":[16,8],"microbatch_grid":[2,4],
   "remat_grid":["full"],"pad_vocab_multiple":16,"max_offers":5}`` —
   answers a non-fitting job with ranked feasible counter-offers
-  (ISSUE 5); grid keys are optional (defaults derive from the job)
+  (ISSUE 5); grid keys are optional (defaults derive from the job);
+  ``"offload_opt_state":true`` / ``"offload_activations":[0.5]``
+  add host-offload counter-offers to the search (ISSUE 8)
 * ``place`` — fleet scheduling (ISSUE 7): the same job fields as
   ``train`` plus optional ``priority``/``duration_ticks``; the daemon's
   lazily-built :class:`~repro.sched.FleetScheduler` (sized by
@@ -90,6 +95,27 @@ def _train_job(d: dict):
     return cfg, policy, shape
 
 
+def build_offload_plan(d: dict):
+    """OffloadPlan from the optional wire-level ``offload`` object
+    (``{"optimizer_state": bool, "activations": 0..1,
+    "space": "host_pinned"|"host_pageable"}``); None when absent or
+    disabled."""
+    o = d.get("offload")
+    if not o:
+        return None
+    from ..core.events import MemorySpace
+    from ..core.orchestrator import OffloadPlan
+    kw = {}
+    if "space" in o:
+        kw["space"] = MemorySpace(str(o["space"]))
+    if "min_block_bytes" in o:
+        kw["min_block_bytes"] = int(o["min_block_bytes"])
+    plan = OffloadPlan(
+        optimizer_state=bool(o.get("optimizer_state", False)),
+        activations=float(o.get("activations", 0.0)), **kw)
+    return plan if plan.enabled else None
+
+
 def build_train_request(d: dict):
     """AdmissionRequest from a wire-level train-job description."""
     from ..configs.registry import input_specs
@@ -107,6 +133,7 @@ def build_train_request(d: dict):
         opt_init_fn=opt_init,
         capacity=int(float(d.get("hbm_gib", 16.0)) * 2**30),
         probe_min_capacity=bool(d.get("probe_min_capacity", False)),
+        offload=build_offload_plan(d),
         deadline_s=float(deadline) if deadline is not None else None)
 
 
@@ -122,7 +149,10 @@ def build_plan_space(d: dict):
                if "remat_grid" in d else None),
         devices=tuple(int(n) for n in d.get("devices", ())),
         pad_vocab_multiple=d.get("pad_vocab_multiple"),
-        max_offers=int(d.get("max_offers", 5)))
+        max_offers=int(d.get("max_offers", 5)),
+        offload_opt_state=bool(d.get("offload_opt_state", False)),
+        offload_activations=tuple(
+            float(f) for f in d.get("offload_activations", ())))
 
 
 def build_fleet_arrival(d: dict):

@@ -31,18 +31,30 @@ from ..launch.analytic import analytic_bytes, analytic_flops
 # imported from there: that module sets XLA_FLAGS at import time)
 PEAK_FLOPS, HBM_BW = 197e12, 819e9
 
+# Host<->device interconnect bandwidth charged for offload transfers
+# (PCIe Gen4 x16-class, the v5e host link). Offload staging overlaps
+# compute, so it enters the roofline as a third ceiling rather than a
+# serial add — an offload plan is "free" until its transfer time
+# becomes the binding term.
+PCIE_BW = 32e9
+
 # HBM passes over materialized activations per remat policy: full remat
 # writes, rewrites on the re-forward, and reads; no remat writes + reads
 ACT_PASSES = {"full": 3.0, "dots": 2.5, "none": 2.0}
 
 
 def plan_cost(cfg: ModelConfig, shape: ShapeSpec, *,
-              microbatches: int = 1, topology=None) -> dict:
+              microbatches: int = 1, topology=None,
+              offload_transfer_bytes: int = 0) -> dict:
     """Roofline terms + device-seconds-per-token for one plan.
 
     ``topology`` is a ``MeshTopology`` (or None for the single-device
     plan); ``cfg.remat`` selects the re-forward FLOPs and activation
-    traffic; ``microbatches`` multiplies the parameter re-reads.
+    traffic; ``microbatches`` multiplies the parameter re-reads;
+    ``offload_transfer_bytes`` is the per-device host<->device traffic
+    one iteration moves (from the orchestrator's offload stats), charged
+    over PCIe as a third roofline ceiling — this is what makes offload
+    counter-offers read "fits at X% modeled slowdown".
     """
     n_dev = topology.n_devices if topology is not None else 1
     model_shards = topology.model if topology is not None else 1
@@ -57,10 +69,14 @@ def plan_cost(cfg: ModelConfig, shape: ShapeSpec, *,
         act_passes=ACT_PASSES.get(cfg.remat, 3.0))
     t_compute = flops_dev / PEAK_FLOPS
     t_memory = bytes_dev / HBM_BW
-    t_step = max(t_compute, t_memory)
-    return {
+    t_transfer = max(int(offload_transfer_bytes), 0) / PCIE_BW
+    t_step = max(t_compute, t_memory, t_transfer)
+    out = {
         "t_compute_s": t_compute,
         "t_memory_s": t_memory,
         "step_time_s": t_step,
         "device_s_per_token": n_dev * t_step / max(shape.tokens, 1),
     }
+    if offload_transfer_bytes:
+        out["t_transfer_s"] = t_transfer
+    return out

@@ -67,6 +67,13 @@ class PlanSpace:
     max_offers: int = 5                 # ranked offers returned
     early_stop: bool = False            # stop fresh-trace singles at the
     #                                     first feasible offer (replan path)
+    # -- host-offload axes (ISSUE 8) -- candidates change only the
+    # orchestrator's offload pass, never the traced program, so the
+    # whole axis costs ZERO fresh traces (warm after the baseline)
+    offload_opt_state: bool = False     # try optimizer-state offload
+    offload_activations: tuple = ()     # activation fractions to try
+    #                                     (each combined with opt-state
+    #                                     offload when that is enabled)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -99,6 +106,10 @@ class CounterOffer:
     slowdown: float                 # cost ratio vs the rejected plan
     source: str                     # estimate provenance
     report: Any = None              # EstimateReport (in-process use)
+    # host-offload knobs (ISSUE 8)
+    offload_opt_state: bool = False
+    offload_activations: float = 0.0
+    space_peaks: dict | None = None     # per-space peak bytes
 
     @property
     def n_devices(self) -> int:
@@ -108,8 +119,17 @@ class CounterOffer:
     def headroom_bytes(self) -> int:
         return self.capacity - self.peak_bytes
 
+    def offload_plan(self):
+        """The :class:`~repro.core.orchestrator.OffloadPlan` this offer
+        promises, or None for a device-only offer."""
+        if not (self.offload_opt_state or self.offload_activations):
+            return None
+        from ..core.orchestrator import OffloadPlan
+        return OffloadPlan(optimizer_state=self.offload_opt_state,
+                           activations=float(self.offload_activations))
+
     def to_json(self) -> dict:
-        return {
+        d = {
             "knob": self.knob,
             "global_batch": self.global_batch,
             "microbatches": self.microbatches,
@@ -124,7 +144,12 @@ class CounterOffer:
             "slowdown": round(self.slowdown, 4),
             "device_s_per_token": self.cost["device_s_per_token"],
             "source": self.source,
+            "offload_opt_state": self.offload_opt_state,
+            "offload_activations": self.offload_activations,
         }
+        if self.space_peaks:
+            d["space_peaks"] = dict(self.space_peaks)
+        return d
 
     # -- reproduction --------------------------------------------------------
     def apply(self, cfg: ModelConfig, policy: TrainPolicy,
@@ -168,7 +193,7 @@ class CounterOffer:
             job_id or f"{self.job_id}+offer", fwd, params, batch,
             update_fn=upd, opt_init_fn=init,
             capacity=self.capacity if capacity is None else capacity,
-            **kw)
+            offload=self.offload_plan(), **kw)
 
 
 @dataclasses.dataclass
@@ -268,6 +293,21 @@ def _remat_candidates(space: PlanSpace, cfg: ModelConfig) -> tuple:
     return ("full",) if cur < _REMAT_ORDER.index("full") else ()
 
 
+def _offload_candidates(space: PlanSpace) -> tuple:
+    """Offload ladder: optimizer state first (cheap, bounded transfer),
+    then each activation fraction stacked on top of it."""
+    from ..core.orchestrator import OffloadPlan
+    out = []
+    if space.offload_opt_state:
+        out.append(OffloadPlan(optimizer_state=True))
+    for f in space.offload_activations:
+        f = float(f)
+        if 0.0 < f <= 1.0:
+            out.append(OffloadPlan(
+                optimizer_state=space.offload_opt_state, activations=f))
+    return tuple(out)
+
+
 def _topologies(space: PlanSpace) -> tuple:
     if space.base_topology is not None or not space.devices:
         return ()
@@ -361,7 +401,7 @@ class RemediationPlanner:
         offers: list[CounterOffer] = []
 
         def add(knob, peak, source, report, *, gb=b0, mb=m0, topo=base_topo,
-                cfg2=None, pad=None):
+                cfg2=None, pad=None, offload=None):
             stats["candidates"] += 1
             if peak > capacity:
                 return
@@ -369,7 +409,15 @@ class RemediationPlanner:
             c2 = cfg2 if cfg2 is not None else cfg
             shape2 = (dataclasses.replace(shape, global_batch=gb)
                       if gb != shape.global_batch else shape)
-            cost = plan_cost(c2, shape2, microbatches=mb, topology=topo)
+            transfer = 0
+            space_peaks = None
+            if report is not None:
+                bd = getattr(report, "breakdown", None) or {}
+                transfer = bd.get("offload", {}).get(
+                    "transfer_bytes_per_iter", 0)
+                space_peaks = bd.get("space_peaks")
+            cost = plan_cost(c2, shape2, microbatches=mb, topology=topo,
+                             offload_transfer_bytes=transfer)
             offers.append(CounterOffer(
                 job_id=job_id, knob=knob, global_batch=gb,
                 microbatches=mb, remat=c2.remat, topology=topo,
@@ -379,7 +427,12 @@ class RemediationPlanner:
                 cost=cost,
                 slowdown=(cost["device_s_per_token"]
                           / max(base_cost["device_s_per_token"], 1e-30)),
-                source=source, report=report))
+                source=source, report=report,
+                offload_opt_state=(offload.optimizer_state
+                                   if offload is not None else False),
+                offload_activations=(offload.activations
+                                     if offload is not None else 0.0),
+                space_peaks=space_peaks))
 
         # --- topology axis: trace-free replays of the cached phases ----
         # a caller-pinned execution model (custom factors / collectives)
@@ -466,6 +519,24 @@ class RemediationPlanner:
             add(knob, d.peak_bytes, d.provenance["source"], d.report,
                 mb=meta.get("mb", m0), cfg2=cfg2)
 
+        # --- offload axis: the traced program is offload-independent —
+        # only the orchestrator pass and replay differ, so every
+        # candidate replays from the baseline's warm traces (zero fresh
+        # traces; bench-asserted) --------------------------------------
+        offload_plans = _offload_candidates(space)
+        stats["axes"]["offload"] = len(offload_plans)
+        for op in offload_plans:
+            if space.early_stop and offers:
+                break
+            tag = (f"opt{int(op.optimizer_state)}"
+                   f"-act{op.activations:g}")
+            d = svc.decide(AdmissionRequest(
+                f"{job_id}/offload-{tag}", fwd, params, batch0,
+                update_fn=upd, opt_init_fn=init, capacity=capacity,
+                offload=op, **base_kw))
+            add("offload", d.peak_bytes, d.provenance["source"],
+                d.report, offload=op)
+
         after = cache.thread_stats()
         offers.sort(key=lambda o: (o.cost["device_s_per_token"],
                                    o.n_devices, o.peak_bytes,
@@ -482,12 +553,16 @@ def run_plan_search(arch: str, hbm_bytes: int, *, seq: int = 48,
                     batch: int = 32, microbatches: int = 1,
                     remat: str | None = None,
                     devices: tuple = (4, 8, 16), smoke: bool = True,
+                    offload: bool = True,
                     space: PlanSpace | None = None,
                     service: AdmissionService | None = None,
                     verbose: bool = True) -> dict:
     """CLI/bench entry: plan a smoke-scale training job of ``arch`` that
     does not fit ``hbm_bytes`` and print/return the ranked offers —
-    shared by ``hillclimb --xmem-plan`` and ``dryrun --xmem-plan``."""
+    shared by ``hillclimb --xmem-plan`` and ``dryrun --xmem-plan``.
+    ``offload`` adds the host-offload axes (optimizer state + half the
+    activations) to the default plan space; offload offers print their
+    per-space peaks."""
     from ..configs import get_config, get_smoke
     from ..configs.base import smoke_shape
     cfg = get_smoke(arch) if smoke else get_config(arch)
@@ -496,7 +571,10 @@ def run_plan_search(arch: str, hbm_bytes: int, *, seq: int = 48,
     policy = TrainPolicy(optimizer="adamw",
                          microbatches=max(int(microbatches), 1))
     shape = smoke_shape(seq_len=seq, global_batch=batch)
-    space = space or PlanSpace(devices=tuple(devices))
+    if space is None:
+        space = PlanSpace(devices=tuple(devices),
+                          offload_opt_state=bool(offload),
+                          offload_activations=(0.5,) if offload else ())
     planner = RemediationPlanner(service)
     res = planner.plan(cfg, policy, shape, capacity=hbm_bytes,
                        job_id=f"{cfg.name}-plan", space=space)
@@ -520,9 +598,14 @@ def run_plan_search(arch: str, hbm_bytes: int, *, seq: int = 48,
                   f"{res.stats['wall_s']*1e3:.0f} ms", flush=True)
             for i, o in enumerate(res.offers):
                 topo = o.topology.label if o.topology else "1dev"
-                print(f"[xmem-plan]   #{i+1} {o.knob:10s} "
-                      f"b={o.global_batch:<4d} mb={o.microbatches:<3d} "
-                      f"remat={o.remat:5s} {topo:12s} "
-                      f"peak={o.peak_bytes/2**20:7.2f} MiB "
-                      f"slowdown=x{o.slowdown:.2f}", flush=True)
+                line = (f"[xmem-plan]   #{i+1} {o.knob:10s} "
+                        f"b={o.global_batch:<4d} mb={o.microbatches:<3d} "
+                        f"remat={o.remat:5s} {topo:12s} "
+                        f"peak={o.peak_bytes/2**20:7.2f} MiB "
+                        f"slowdown=x{o.slowdown:.2f}")
+                if o.space_peaks:
+                    line += "  spaces[" + " ".join(
+                        f"{k}={v/2**20:.2f}MiB"
+                        for k, v in sorted(o.space_peaks.items())) + "]"
+                print(line, flush=True)
     return record

@@ -76,6 +76,10 @@ class AdmissionRequest:
     capacity: int = 16 * 2**30          # device HBM bytes
     probe_min_capacity: bool = False    # also compute min feasible capacity
     deadline_s: float | None = None     # per-request budget (ISSUE 6)
+    # host-offload schedule (core.orchestrator.OffloadPlan) — the
+    # estimate runs with the orchestrator's offload pass enabled and the
+    # decision carries per-space peaks in its breakdown
+    offload: Any | None = None
     meta: dict = dataclasses.field(default_factory=dict)
 
 
@@ -123,7 +127,8 @@ class AdmissionDecision:
         d["degraded"] = self.degraded
         d["breakdown"] = {k: v for k, v in self.breakdown.items()
                           if k in ("phase_peaks", "num_blocks",
-                                   "liveness_peak", "degraded")}
+                                   "liveness_peak", "degraded",
+                                   "space_peaks", "offload")}
         if self.counter_offers is not None:
             d["counter_offers"] = [o.to_json()
                                    for o in self.counter_offers]
@@ -361,15 +366,25 @@ class AdmissionService:
             est = self.estimator
             cache = est.trace_cache
             before = cache.thread_stats()
-            rep = est.estimate_training(
-                req.fwd_bwd_fn, req.params, req.batch,
-                update_fn=req.update_fn, opt_init_fn=req.opt_init_fn,
-                shard_factor_fn=req.shard_factor_fn,
-                collective_specs=req.collective_specs)
-            min_cap = None
-            if req.probe_min_capacity:
-                min_cap = est.min_feasible_capacity(
-                    req.fwd_bwd_fn, req.params, req.batch, report=rep)
+            # an offload request runs with the orchestrator's offload
+            # pass swapped in for exactly this estimate (per-thread
+            # estimator, so no cross-request bleed; restored either way)
+            prev_policy = est.orchestrator.policy
+            if req.offload is not None:
+                est.orchestrator.policy = dataclasses.replace(
+                    prev_policy, offload=req.offload)
+            try:
+                rep = est.estimate_training(
+                    req.fwd_bwd_fn, req.params, req.batch,
+                    update_fn=req.update_fn, opt_init_fn=req.opt_init_fn,
+                    shard_factor_fn=req.shard_factor_fn,
+                    collective_specs=req.collective_specs)
+                min_cap = None
+                if req.probe_min_capacity:
+                    min_cap = est.min_feasible_capacity(
+                        req.fwd_bwd_fn, req.params, req.batch, report=rep)
+            finally:
+                est.orchestrator.policy = prev_policy
             return rep, _provenance(cache, before), min_cap
 
         rep, prov, min_cap = _call_with_deadline(run, timeout)

@@ -91,9 +91,12 @@ def request_family(req) -> tuple | None:
                  tuple((len(getattr(l, "shape", ())),
                         str(getattr(l, "dtype", None)))
                        for l in batch_leaves))
-    # per-device execution models must not cross-pollinate families
+    # per-device execution models must not cross-pollinate families;
+    # neither may offload plans — an offloaded peak is lower, and using
+    # it as evidence for a non-offload request would under-answer
     shard_sig = (req.shard_factor_fn is not None,
-                 bool(req.collective_specs))
+                 bool(req.collective_specs),
+                 getattr(req, "offload", None))
     return (idents, params_sig, batch_sig, shard_sig)
 
 

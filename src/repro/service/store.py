@@ -274,8 +274,12 @@ class TraceStore:
                 self.invalidated += 1
                 self.load_misses += 1
             return None
+        # trace schema v3 dumps load compatibly (the space column defaults
+        # every event to DEVICE_HBM — code 0, so all-device semantics are
+        # bit-identical); anything newer or older still quarantines
         if (d.get("store_version") != STORE_VERSION
-                or d.get("trace_schema") != TRACE_SCHEMA_VERSION):
+                or d.get("trace_schema")
+                not in (3, TRACE_SCHEMA_VERSION)):
             self._quarantine(path, "version")
             with self._lock:
                 self.invalidated += 1

@@ -1,0 +1,500 @@
+"""Multi-space memory model + host-offload tests (ISSUE 8).
+
+Pins the tentpole guarantees:
+
+* **schema v4** — the memory-space column round-trips through both dump
+  formats; v3 dumps (no space column) load with every event on
+  DEVICE_HBM; newer-than-current schemas are refused; the persistent
+  trace store serves v3 entries and still quarantines unknown versions;
+* **no-offload bit-identity** — with no offload plan (or a disabled
+  one) estimates are bit-identical to the baseline across allocator
+  policies and replay engines, and the breakdown carries no space keys;
+* **offload semantics** — an enabled plan moves optimizer state /
+  selected activations to a host space: the device peak drops, both
+  replay engines agree bit-identically, per-space peaks appear in the
+  breakdown, and transfer accounting grows monotonically with the
+  activation fraction;
+* **planner** — a previously-infeasible job gains a feasible ``offload``
+  counter-offer at zero fresh traces, reproducible bit-identically via
+  ``CounterOffer.admission_request`` -> direct ``decide``;
+* **analytic bound** (registry-wide property) — ``analytic_peak_bytes``
+  stays an upper bound on the estimated peak under offload;
+* **daemon** — ``train`` requests accept an ``offload`` object and
+  ``plan`` requests accept the offload grid keys, over a real socket.
+"""
+import dataclasses
+import json
+import os
+import threading
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (BlockKind, MemorySimulator, OrchestratorPolicy,
+                        Phase, TraceCache, XMemEstimator)
+from repro.core.allocator import (CUDA_CACHING, TPU_ARENA, XLA_BFC,
+                                  default_space_specs)
+from repro.core.events import (MemoryEvent, MemorySpace, SPACE_TABLE,
+                               Trace, TraceSchemaError,
+                               TRACE_SCHEMA_VERSION)
+from repro.core.orchestrator import OffloadPlan
+from repro.core.simulator import split_blocks_by_space
+from repro.service import AdmissionRequest, AdmissionService
+
+MIB = 2**20
+D, H, B = 128, 256, 32
+
+
+def _loss(params, batch):
+    h = jnp.tanh(batch["x"] @ params["w1"])
+    y = h @ params["w2"]
+    return jnp.mean((y - batch["y"]) ** 2)
+
+
+def _fwd_bwd(p, b):
+    return jax.value_and_grad(_loss)(p, b)
+
+
+def _adam_init(p):
+    return jax.tree.map(lambda x: (jnp.zeros_like(x), jnp.zeros_like(x)), p)
+
+
+def _adam(p, g, s):
+    def upd(pp, gg, ss):
+        m, v = ss
+        m = 0.9 * m + 0.1 * gg
+        v = 0.999 * v + 0.001 * gg * gg
+        return pp - 1e-3 * m / (jnp.sqrt(v) + 1e-8), (m, v)
+    out = jax.tree.map(upd, p, g, s, is_leaf=lambda x: isinstance(x, tuple))
+    return {k: out[k][0] for k in out}, {k: out[k][1] for k in out}
+
+
+def _shapes():
+    params = {"w1": jax.ShapeDtypeStruct((D, H), jnp.float32),
+              "w2": jax.ShapeDtypeStruct((H, D), jnp.float32)}
+    batch = {"x": jax.ShapeDtypeStruct((B, D), jnp.float32),
+             "y": jax.ShapeDtypeStruct((B, D), jnp.float32)}
+    return params, batch
+
+
+def _estimate(offload=None, *, engine="auto", fastpath=True,
+              allocator_policy=TPU_ARENA, iterations=3):
+    params, batch = _shapes()
+    opolicy = OrchestratorPolicy(grad_release="auto", donate_params=True,
+                                 donate_opt_state=True, fusion_folding=True,
+                                 offload=offload)
+    est = XMemEstimator(allocator_policy=allocator_policy,
+                        orchestrator_policy=opolicy, engine=engine,
+                        fastpath=fastpath, iterations=iterations,
+                        trace_cache=TraceCache())
+    return est.estimate_training(_fwd_bwd, params, batch,
+                                 update_fn=_adam, opt_init_fn=_adam_init)
+
+
+OFFLOAD_FULL = OffloadPlan(optimizer_state=True, activations=0.5,
+                           min_block_bytes=4096)
+
+
+# ---------------------------------------------------------------------------
+class TestSchemaV4:
+    def _events(self):
+        mk = lambda kind, bid, t, space: MemoryEvent(  # noqa: E731
+            kind, bid, 4096, t, 0, Phase.FORWARD_BACKWARD, "op", "scope",
+            BlockKind.ACTIVATION, (32, 32), space)
+        return [mk("alloc", 1, 0, MemorySpace.DEVICE_HBM),
+                mk("alloc", 2, 1, MemorySpace.HOST_PINNED),
+                mk("free", 2, 2, MemorySpace.HOST_PINNED),
+                mk("free", 1, 3, MemorySpace.DEVICE_HBM)]
+
+    @pytest.mark.parametrize("columnar", [False, True])
+    def test_v4_round_trip_preserves_spaces(self, tmp_path, columnar):
+        from repro.core.analyzer import load_trace
+        path = str(tmp_path / "t.json")
+        Trace(self._events()).save(path, columnar=columnar)
+        back = load_trace(path)
+        assert [e.space for e in back.events] \
+            == [e.space for e in self._events()]
+        with open(path) as f:
+            assert json.load(f)["schema_version"] == TRACE_SCHEMA_VERSION
+
+    @pytest.mark.parametrize("columnar", [False, True])
+    def test_v3_dump_loads_all_device(self, tmp_path, columnar):
+        """A v3 dump (no space column) loads with every event on
+        DEVICE_HBM — the seed semantics, bit-identically."""
+        from repro.core.analyzer import load_trace
+        path = str(tmp_path / "t.json")
+        Trace(self._events()).save(path, columnar=columnar)
+        with open(path) as f:
+            d = json.load(f)
+        d["schema_version"] = 3
+        if columnar:
+            d["columns"].pop("space")
+        else:
+            for e in d["events"]:
+                e.pop("space")
+        with open(path, "w") as f:
+            json.dump(d, f)
+        back = load_trace(path)
+        assert all(e.space is MemorySpace.DEVICE_HBM for e in back.events)
+        assert [e.block_id for e in back.events] \
+            == [e.block_id for e in self._events()]
+
+    def test_newer_schema_rejected(self, tmp_path):
+        path = str(tmp_path / "t.json")
+        Trace(self._events()).save(path)
+        with open(path) as f:
+            d = json.load(f)
+        d["schema_version"] = TRACE_SCHEMA_VERSION + 1
+        with open(path, "w") as f:
+            json.dump(d, f)
+        with pytest.raises(TraceSchemaError):
+            Trace.load(path)
+
+    def test_space_code_zero_is_device(self):
+        # a missing v3 space column loads as zeros; code 0 must stay
+        # DEVICE_HBM forever or old dumps silently change meaning
+        assert SPACE_TABLE[0] is MemorySpace.DEVICE_HBM
+
+    def test_reconstructed_lifecycles_keep_spaces(self):
+        from repro.core.analyzer import reconstruct_lifecycles
+        blocks = reconstruct_lifecycles(Trace(self._events()))
+        spaces = {b.block_id: b.space for b in blocks}
+        assert spaces[1] is MemorySpace.DEVICE_HBM
+        assert spaces[2] is MemorySpace.HOST_PINNED
+
+
+class TestStoreV3Compat:
+    def _decide(self, store_dir, offload=None):
+        params, batch = _shapes()
+        svc = AdmissionService(workers=1, store_dir=store_dir)
+        d = svc.decide(AdmissionRequest(
+            "job", _fwd_bwd, params, batch, update_fn=_adam,
+            opt_init_fn=_adam_init, capacity=1 << 62, offload=offload))
+        svc.close()
+        return d
+
+    def _entries(self, store_dir):
+        return [os.path.join(store_dir, n) for n in os.listdir(store_dir)
+                if n.endswith(".json")]
+
+    def test_v3_entries_served_from_disk(self, tmp_path):
+        """Satellite: entries persisted by a v3 build (trace_schema 3,
+        no space columns) still answer warm — same peak, no quarantine,
+        no re-trace."""
+        sd = str(tmp_path / "store")
+        ref = self._decide(sd)
+        for p in self._entries(sd):
+            with open(p) as f:
+                d = json.load(f)
+            d["trace_schema"] = 3
+            d["phase"]["trace"]["columns"].pop("space", None)
+            d["phase"]["lifecycles"].pop("space", None)
+            with open(p, "w") as f:
+                json.dump(d, f)
+        svc2 = AdmissionService(workers=1, store_dir=sd)
+        d = svc2.decide(AdmissionRequest(
+            "job", _fwd_bwd, _shapes()[0], _shapes()[1], update_fn=_adam,
+            opt_init_fn=_adam_init, capacity=1 << 62))
+        assert d.peak_bytes == ref.peak_bytes
+        assert d.provenance["source"] == "disk"
+        assert svc2.cache.store.stats()["quarantined"] == 0
+        svc2.close()
+
+    def test_unknown_trace_schema_still_quarantined(self, tmp_path):
+        sd = str(tmp_path / "store")
+        ref = self._decide(sd)
+        for p in self._entries(sd):
+            with open(p) as f:
+                d = json.load(f)
+            d["trace_schema"] = TRACE_SCHEMA_VERSION + 7
+            with open(p, "w") as f:
+                json.dump(d, f)
+        svc2 = AdmissionService(workers=1, store_dir=sd)
+        d = svc2.decide(AdmissionRequest(
+            "job", _fwd_bwd, _shapes()[0], _shapes()[1], update_fn=_adam,
+            opt_init_fn=_adam_init, capacity=1 << 62))
+        assert d.peak_bytes == ref.peak_bytes
+        assert d.provenance["source"] == "traced"
+        assert svc2.cache.store.stats()["quarantined"] == 3
+        svc2.close()
+
+
+# ---------------------------------------------------------------------------
+class TestNoOffloadBitIdentity:
+    @pytest.mark.parametrize("policy", [CUDA_CACHING, XLA_BFC, TPU_ARENA])
+    @pytest.mark.parametrize("offload", [None, OffloadPlan()])
+    def test_identical_to_baseline(self, policy, offload):
+        """No plan and a disabled plan are both the seed pipeline:
+        every estimate-bearing field bit-identical, no space keys."""
+        base = _estimate(None, allocator_policy=policy)
+        got = _estimate(offload, allocator_policy=policy)
+        assert got.peak_bytes == base.peak_bytes
+        assert got.persistent_bytes == base.persistent_bytes
+        assert got.breakdown == base.breakdown
+        assert "space_peaks" not in got.breakdown
+        assert "offload" not in got.breakdown
+
+    def test_engines_agree_without_offload(self):
+        a = _estimate(None, engine="object")
+        b = _estimate(None, engine="columnar")
+        assert a.peak_bytes == b.peak_bytes
+        assert a.breakdown == b.breakdown
+
+    def test_split_all_device_returns_original(self):
+        # the no-offload fast path must not even copy: bit-identity by
+        # construction
+        from repro.core.events import BlockLifecycle, PeriodicBlocks
+        blk = BlockLifecycle(1, 4096, 0, 5)
+        pb = PeriodicBlocks([blk], [blk], 3, 10, [])
+        groups = split_blocks_by_space(pb)
+        assert groups[MemorySpace.DEVICE_HBM] is pb
+        lst = [blk, blk]
+        assert split_blocks_by_space(lst)[MemorySpace.DEVICE_HBM] is lst
+
+
+# ---------------------------------------------------------------------------
+class TestOffloadSemantics:
+    def test_offload_reduces_device_peak(self):
+        base = _estimate(None)
+        off = _estimate(OFFLOAD_FULL)
+        assert off.peak_bytes < base.peak_bytes
+        peaks = off.breakdown["space_peaks"]
+        assert peaks["device_hbm"] == off.peak_bytes
+        assert peaks["host_pinned"] > 0
+        stats = off.breakdown["offload"]
+        assert stats["opt_state_blocks"] > 0
+        assert stats["activation_blocks"] > 0
+        assert stats["transfer_bytes_per_iter"] > 0
+        assert stats["space"] == "host_pinned"
+
+    def test_engines_agree_under_offload(self):
+        a = _estimate(OFFLOAD_FULL, engine="object")
+        b = _estimate(OFFLOAD_FULL, engine="columnar")
+        assert a.peak_bytes == b.peak_bytes
+        assert a.breakdown == b.breakdown
+
+    def test_transfer_bytes_monotone_in_fraction(self):
+        prev = -1
+        for frac in (0.25, 0.5, 1.0):
+            plan = OffloadPlan(activations=frac, min_block_bytes=4096)
+            rep = _estimate(plan)
+            cur = rep.breakdown["offload"]["activation_bytes"]
+            assert cur >= prev
+            prev = cur
+
+    def test_pageable_space_uses_malloc_policy(self):
+        plan = dataclasses.replace(OFFLOAD_FULL,
+                                   space=MemorySpace.HOST_PAGEABLE)
+        rep = _estimate(plan)
+        host = rep.sim.stats["host_spaces"]["host_pageable"]
+        assert host["policy"] == "host_pageable"
+        assert rep.breakdown["space_peaks"]["host_pageable"] > 0
+
+    def test_default_space_specs_cover_all_spaces(self):
+        specs = default_space_specs(TPU_ARENA)
+        assert set(specs) == set(MemorySpace)
+        assert specs[MemorySpace.DEVICE_HBM].policy is TPU_ARENA
+        assert not specs[MemorySpace.HOST_PINNED].bounded
+
+    def test_reference_path_rejects_offload(self):
+        with pytest.raises(NotImplementedError):
+            _estimate(OFFLOAD_FULL, fastpath=False)
+
+    def test_min_feasible_capacity_is_device_space(self):
+        """Capacity probing under offload answers for the DEVICE space
+        (the capacity a scheduler actually provisions)."""
+        params, batch = _shapes()
+        opolicy = OrchestratorPolicy(grad_release="auto",
+                                     donate_params=True,
+                                     donate_opt_state=True,
+                                     fusion_folding=True,
+                                     offload=OFFLOAD_FULL)
+        est = XMemEstimator(allocator_policy=TPU_ARENA,
+                            orchestrator_policy=opolicy,
+                            trace_cache=TraceCache())
+        rep = est.estimate_training(_fwd_bwd, params, batch,
+                                    update_fn=_adam,
+                                    opt_init_fn=_adam_init)
+        mfc = est.min_feasible_capacity(_fwd_bwd, params, batch,
+                                        update_fn=_adam,
+                                        opt_init_fn=_adam_init,
+                                        report=rep)
+        assert mfc >= rep.peak_bytes
+        # feasible at the probed capacity: replay the device split
+        sim = MemorySimulator(TPU_ARENA, capacity=mfc)
+        groups = split_blocks_by_space(rep.composition)
+        assert not sim.replay(groups[MemorySpace.DEVICE_HBM]).oom
+
+
+# ---------------------------------------------------------------------------
+class TestPlannerOffload:
+    SPACE_KW = dict(devices=(), batches=(), microbatches=(), remat=(),
+                    pad_vocab_multiple=None)
+
+    def _reject_capacity(self, svc, cfg, policy, shape):
+        from repro.plan import RemediationPlanner
+        probe = RemediationPlanner(svc).plan(cfg, policy, shape,
+                                             capacity=1 << 62)
+        peak = probe.baseline.peak_bytes
+        return peak - max(peak // 50, 1)     # just below the base peak
+
+    def test_offload_offer_feasible_zero_traces_reproducible(self):
+        """Acceptance: a previously-infeasible job gains a feasible
+        offload counter-offer at ZERO fresh traces (the offload pass is
+        trace-independent), and a direct decide on the offer's request
+        reproduces its estimate bit-identically."""
+        from repro.configs import get_smoke
+        from repro.configs.base import smoke_shape
+        from repro.plan import PlanSpace, RemediationPlanner
+        from repro.train import TrainPolicy
+        cfg = get_smoke("qwen3-32b")
+        policy = TrainPolicy(optimizer="adamw", microbatches=1)
+        shape = smoke_shape(48, 32)
+        svc = AdmissionService(workers=1, cache=TraceCache())
+        cap = self._reject_capacity(svc, cfg, policy, shape)
+        space = PlanSpace(offload_opt_state=True,
+                          offload_activations=(0.5,), **self.SPACE_KW)
+        res = RemediationPlanner(svc).plan(cfg, policy, shape,
+                                           capacity=cap, space=space,
+                                           job_id="offload")
+        assert not res.baseline.admit
+        offers = [o for o in res.offers if o.knob == "offload"]
+        assert offers, "no feasible offload counter-offer"
+        assert res.stats["axes"]["offload"] == 2
+        assert res.stats["fresh_traces"] == 0
+        for o in offers:
+            assert o.peak_bytes <= cap
+            assert o.space_peaks and o.space_peaks["host_pinned"] > 0
+            assert o.offload_opt_state or o.offload_activations > 0
+            # wire form carries the knobs
+            j = o.to_json()
+            assert "offload_opt_state" in j and "space_peaks" in j
+            # bit-identical reproduction from a cold service
+            cold = AdmissionService(workers=1, cache=TraceCache())
+            d = cold.decide(o.admission_request(cfg, policy, shape,
+                                                capacity=cap))
+            assert d.admit and d.peak_bytes == o.peak_bytes
+            assert d.breakdown["space_peaks"] == o.space_peaks
+
+    def test_offload_requests_do_not_pollute_sweep_evidence(self):
+        """An offloaded decision must not answer a non-offload request
+        from the decision log (its peak is lower -> underestimate)."""
+        from repro.service.degrade import request_family
+        params, batch = _shapes()
+        req = AdmissionRequest("a", _fwd_bwd, params, batch,
+                               update_fn=_adam, opt_init_fn=_adam_init)
+        off = dataclasses.replace(req, offload=OFFLOAD_FULL)
+        assert request_family(req) != request_family(off)
+
+
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+class TestAnalyticBoundUnderOffload:
+    from repro.configs import ARCH_IDS as _ARCHS
+
+    @pytest.mark.parametrize("arch", _ARCHS)
+    def test_analytic_remains_upper_bound(self, arch):
+        """Property (satellite): ``analytic_peak_bytes`` never models
+        offload, so it REMAINS an upper bound under any offload plan iff
+        offload never raises the device peak — that is the invariant
+        pinned here, per arch and per plan: offloaded device peak <=
+        no-offload peak <= max(bound, no-offload peak). (At smoke scale
+        the raw bound itself can sit below the exact estimate — constant
+        transients dominate tiny shapes, which is why the degradation
+        ladder widens it by ``analytic_margin`` — so the bound side is
+        asserted relative to wherever it held without offload.)"""
+        from repro.configs import get_smoke
+        from repro.configs.base import smoke_shape
+        from repro.configs.registry import input_specs
+        from repro.launch.analytic import analytic_peak_bytes
+        from repro.models import model as M
+        from repro.train import TrainPolicy, make_estimator_hooks
+        cfg = get_smoke(arch)
+        policy = TrainPolicy(optimizer="adamw", microbatches=1)
+        shape = smoke_shape(48, 8)
+        bound = analytic_peak_bytes(cfg, shape, microbatches=1,
+                                    with_optimizer=True)
+        assert bound > 0
+        fwd, upd, init = make_estimator_hooks(cfg, policy)
+        svc = AdmissionService(workers=1, cache=TraceCache())
+
+        def peak(i, plan):
+            return svc.decide(AdmissionRequest(
+                f"{arch}-{i}", fwd, M.abstract_params(cfg),
+                input_specs(cfg, shape), update_fn=upd, opt_init_fn=init,
+                capacity=1 << 62, offload=plan)).peak_bytes
+
+        base = peak(0, None)
+        ceiling = max(bound, base)
+        plans = (OffloadPlan(optimizer_state=True),
+                 OffloadPlan(optimizer_state=True, activations=1.0))
+        for i, plan in enumerate(plans, start=1):
+            p = peak(i, plan)
+            assert p <= base, (arch, plan, p, base)
+            assert p <= ceiling, (arch, plan, p, ceiling)
+
+
+# ---------------------------------------------------------------------------
+class TestDaemonOffload:
+    TRAIN_REQ = {"kind": "train", "arch": "qwen3-32b", "smoke": True,
+                 "seq": 48, "batch": 32, "hbm_gib": 1.0}
+    OFF = {"offload": {"optimizer_state": True, "activations": 0.5,
+                       "min_block_bytes": 4096}}
+
+    def test_handle_request_train_offload(self):
+        from repro.launch.served import handle_request
+        svc = AdmissionService(workers=1, cache=TraceCache())
+        base = handle_request(svc, dict(self.TRAIN_REQ))
+        off = handle_request(svc, {**self.TRAIN_REQ, **self.OFF})
+        assert base["ok"] and off["ok"]
+        assert off["peak_bytes"] < base["peak_bytes"]
+        peaks = off["breakdown"]["space_peaks"]
+        assert peaks["device_hbm"] == off["peak_bytes"]
+        assert peaks["host_pinned"] > 0
+        assert "space_peaks" not in base["breakdown"]
+        json.dumps(off)
+
+    def test_build_offload_plan_parses_and_gates(self):
+        from repro.launch.served import build_offload_plan
+        assert build_offload_plan({}) is None
+        assert build_offload_plan(
+            {"offload": {"optimizer_state": False}}) is None
+        p = build_offload_plan({"offload": {
+            "activations": 0.25, "space": "host_pageable"}})
+        assert p.activations == 0.25
+        assert p.space is MemorySpace.HOST_PAGEABLE
+
+    @pytest.mark.slow
+    def test_socket_round_trip_plan_offload(self):
+        """Satellite: the daemon's ``plan`` kind honors the offload grid
+        keys over a real socket — offers carry the knobs + per-space
+        peaks on the wire."""
+        from repro.launch.served import AdmissionServer, request_once
+        svc = AdmissionService(workers=2, cache=TraceCache())
+        server = AdmissionServer(("127.0.0.1", 0), svc)
+        t = threading.Thread(target=server.serve_forever, daemon=True)
+        t.start()
+        try:
+            host, port = server.server_address[:2]
+            # capacity just below the base peak (probed via train kind)
+            probe = request_once(host, port, {**self.TRAIN_REQ,
+                                              "hbm_gib": 16.0},
+                                 timeout=300.0)
+            cap_gib = probe["peak_bytes"] * 0.98 / 2**30
+            req = {"kind": "plan", "arch": "qwen3-32b", "smoke": True,
+                   "seq": 48, "batch": 32, "hbm_gib": cap_gib,
+                   "devices": [], "batch_grid": [],
+                   "microbatch_grid": [], "remat_grid": [],
+                   "offload_opt_state": True,
+                   "offload_activations": [0.5]}
+            r = request_once(host, port, req, timeout=300.0)
+            assert r["ok"] and not r["admit"]
+            offs = [o for o in r["counter_offers"]
+                    if o["knob"] == "offload"]
+            assert offs
+            assert all(o["space_peaks"]["host_pinned"] > 0 for o in offs)
+            assert r["stats"]["axes"]["offload"] == 2
+        finally:
+            server.shutdown()
+            server.server_close()
