@@ -3,7 +3,7 @@ export PYTHONPATH
 
 .PHONY: test test-fast chaos-test bench bench-check serve-bench \
 	plan-bench degrade-bench fleet-bench fleet-chaos offload-bench \
-	report
+	serve-plan-bench report
 
 test:            ## tier-1 test suite
 	python -m pytest -x -q
@@ -57,6 +57,12 @@ fleet-chaos:     ## fleet-scheduler chaos + evacuation test suite
 # the ISSUE 8 perf gate's record
 offload-bench:   ## host-offload planning benchmark only
 	python -m benchmarks.perf_estimator --offload-only
+
+# merges the serving_* keys (serving-plan trace budget, request-stream
+# replay ev/s, cold-service offer reproduction) into
+# BENCH_estimator.json — the ISSUE 9 perf gate's record
+serve-plan-bench:  ## request-driven serving benchmark only
+	python -m benchmarks.perf_estimator --serving-only
 
 report:          ## render artifact tables
 	python -m benchmarks.report

@@ -281,6 +281,35 @@ def perf_check(baseline_path: str = "BENCH_estimator.json",
     else:
         print("[bench-check] baseline predates host offload; "
               "skipping that check (refresh BENCH_estimator.json)")
+    rec_srv_budget = baseline.get("serving_trace_budget")
+    if rec_srv_budget is not None:
+        # ISSUE 9: serving knob candidates must re-lower the CPU request
+        # stream against the cached decode trace — a fresh >=12-candidate
+        # serving-plan search over the trace budget is a design
+        # regression; request-stream replay throughput gets the same 30%
+        # floor as training replay
+        from benchmarks.perf_estimator import quick_serving_snapshot
+        snap = quick_serving_snapshot()
+        rec_sev = baseline.get("serving_replay_events_per_s", 0)
+        svfloor = rec_sev * (1.0 - max_regression)
+        svok = (snap["serving_fresh_traces"] <= rec_srv_budget
+                and snap["serving_candidates"] >= 12
+                and snap["serving_offers"] >= 1
+                and snap["serving_replay_events_per_s"] >= svfloor)
+        print(f"[bench-check] serving plan + replay: "
+              f"{snap['serving_fresh_traces']} fresh traces for "
+              f"{snap['serving_candidates']} knob candidates, "
+              f"{snap['serving_offers']} offers "
+              f"(budget {rec_srv_budget}, "
+              f"{snap['serving_cold_search_s']*1e3:.0f} ms); "
+              f"stream replay fresh="
+              f"{snap['serving_replay_events_per_s']:,} "
+              f"recorded={rec_sev:,} floor={int(svfloor):,} -> "
+              f"{'OK' if svok else 'REGRESSION'}")
+        ok = ok and svok
+    else:
+        print("[bench-check] baseline predates request-driven serving; "
+              "skipping that check (refresh BENCH_estimator.json)")
     return 0 if ok else 1
 
 

@@ -1045,3 +1045,151 @@ class XMemEstimator:
             breakdown={"num_blocks": len(blocks)},
             wall_time_s=time.perf_counter() - t0,
             num_events=len(entry.trace.events))
+
+    def estimate_request_stream(self, decode_fn: Callable, params, cache,
+                                batch, *, stream, knobs=None,
+                                kv_bytes_per_token: int,
+                                resident_bytes_per_request: int = 0,
+                                base_dtype_bytes: int = 2,
+                                shard_factor_fn=None,
+                                capacity: int | None = None
+                                ) -> "ServingEstimate":
+        """Estimate a serving runtime over a request-driven timeline.
+
+        Two CPU-side components compose additively:
+
+        * **step working set** — the decode step is traced once via the
+          SAME trace key as :meth:`estimate_serving` (so a knob sweep
+          over page size / concurrency / KV dtype re-lowers the request
+          stream but never re-traces); its transient peak (activations
+          above params+cache) is scaled batch-linearly from the traced
+          batch to ``knobs.max_concurrent`` — decode activations are
+          per-sequence, so the linear model is exact for attention-free
+          layers and a documented upper bound for the rest;
+        * **paged KV pressure** — the request stream is lowered by the
+          continuous-batching scheduler to page-granular allocations
+          and replayed through the allocator simulator exactly (no
+          approximation: join/extend/leave/evict at the tick each
+          happens).
+
+        ``worst_case_peak_bytes`` is what the admission gate must trust;
+        ``steady_state_peak_bytes`` (median live paged bytes) is what a
+        capacity planner provisions for sustained load.
+        """
+        from .orchestrator import (ContinuousBatchingScheduler,
+                                   ServingKnobs)
+        t0 = time.perf_counter()
+        knobs = knobs or ServingKnobs()
+        entry = self._trace_phase(
+            decode_fn,
+            [(params, BlockKind.PARAM, "params"),
+             (cache, BlockKind.CACHE, "cache"),
+             (batch, BlockKind.INPUT, "batch")],
+            Phase.DECODE, tag="decode")
+        blocks = list(entry.lifecycles)
+        blocks = self.orchestrator.mark_persistent(
+            blocks, kinds=(BlockKind.PARAM, BlockKind.CACHE))
+        blocks = self.orchestrator.fold_fused(blocks)
+        if shard_factor_fn is not None:
+            blocks = self.orchestrator.apply_sharding(blocks,
+                                                      shard_factor_fn)
+        step_sim = MemorySimulator(self.allocator_policy, self.capacity,
+                                   engine=self.engine).replay(blocks)
+        persistent_all = sum(b.sharded_size for b in blocks
+                             if b.free_t is None)
+        params_bytes = sum(b.sharded_size for b in blocks
+                           if b.free_t is None
+                           and b.block_kind == BlockKind.PARAM)
+        transient = max(step_sim.peak_allocated - persistent_all, 0)
+        traced_batch = _leading_dim(batch)
+        transient_scaled = -(-transient * knobs.max_concurrent
+                             // max(traced_batch, 1))
+
+        sched = ContinuousBatchingScheduler(knobs)
+        rb = sched.lower(stream, kv_bytes_per_token,
+                         resident_bytes_per_request=resident_bytes_per_request,
+                         base_dtype_bytes=base_dtype_bytes)
+        paged_sim = MemorySimulator(self.allocator_policy, self.capacity,
+                                    engine=self.engine).replay(rb)
+        live = [v for v in rb.meta["live_paged"] if v > 0]
+        live.sort()
+        paged_steady = live[len(live) // 2] if live else 0
+        tok_b = rb.meta["kv_bytes_per_token"]
+        monolithic = knobs.max_concurrent * (
+            stream.max_seq_len * tok_b + int(resident_bytes_per_request))
+
+        worst = params_bytes + transient_scaled + paged_sim.peak_reserved
+        steady = params_bytes + transient_scaled + paged_steady
+        cap = capacity if capacity is not None else self.capacity
+        return ServingEstimate(
+            steady_state_peak_bytes=int(steady),
+            worst_case_peak_bytes=int(worst),
+            persistent_bytes=int(params_bytes),
+            step_transient_bytes=int(transient_scaled),
+            paged_kv_peak_bytes=int(paged_sim.peak_reserved),
+            paged_kv_steady_bytes=int(paged_steady),
+            monolithic_cache_bytes=int(monolithic),
+            oom=worst > cap,
+            sim=paged_sim,
+            breakdown={
+                "num_blocks": rb.num_blocks,
+                "ticks": rb.meta["ticks"],
+                "evictions": rb.meta["evictions"],
+                "max_occupancy": max(rb.meta["occupancy"], default=0),
+                "page_bytes": rb.meta["page_bytes"],
+                "knobs": rb.meta["knobs"],
+            },
+            wall_time_s=time.perf_counter() - t0,
+            num_events=len(entry.trace.events) + 2 * rb.num_blocks)
+
+
+def _leading_dim(tree) -> int:
+    """Batch size of a traced decode input: leading dim of the first
+    array leaf (1 for scalars/empty trees)."""
+    for leaf in jax.tree_util.tree_leaves(tree):
+        shape = getattr(leaf, "shape", ())
+        if shape:
+            return int(shape[0])
+    return 1
+
+
+@dataclasses.dataclass
+class ServingEstimate:
+    """Serving-runtime estimate over a request-mix timeline.
+
+    Unlike :class:`EstimateReport`'s single number, serving capacity has
+    two operating points: the worst-case peak (admission gate — must fit
+    or the server OOMs under the scripted burst) and the steady-state
+    median (provisioning — what sustained load actually holds). The
+    paged-vs-monolithic pair quantifies what paged attention buys."""
+
+    steady_state_peak_bytes: int
+    worst_case_peak_bytes: int
+    persistent_bytes: int         # params (sharded) — always resident
+    step_transient_bytes: int     # decode working set at max_concurrent
+    paged_kv_peak_bytes: int      # allocator peak of the paged stream
+    paged_kv_steady_bytes: int    # median live paged bytes
+    monolithic_cache_bytes: int   # max_concurrent x max_seq full cache
+    oom: bool
+    sim: SimResult
+    breakdown: dict
+    wall_time_s: float
+    num_events: int
+
+    def fits(self, capacity: int) -> bool:
+        return self.worst_case_peak_bytes <= capacity
+
+    def to_json(self) -> dict:
+        return {
+            "steady_state_peak_bytes": self.steady_state_peak_bytes,
+            "worst_case_peak_bytes": self.worst_case_peak_bytes,
+            "persistent_bytes": self.persistent_bytes,
+            "step_transient_bytes": self.step_transient_bytes,
+            "paged_kv_peak_bytes": self.paged_kv_peak_bytes,
+            "paged_kv_steady_bytes": self.paged_kv_steady_bytes,
+            "monolithic_cache_bytes": self.monolithic_cache_bytes,
+            "oom": self.oom,
+            "breakdown": {k: v for k, v in self.breakdown.items()
+                          if k != "knobs"},
+            "knobs": self.breakdown.get("knobs", {}),
+        }

@@ -27,9 +27,13 @@ import numpy as np
 #: metadata for columnar traces. v3 adds per-block shape metadata (the
 #: spec-driven per-device estimation input); v2 dumps load with shapes
 #: unknown. v4 adds the memory-space column (host-offload semantics);
-#: v3 dumps load with every event in DEVICE_HBM. Loaders accept <=
-#: current, reject newer.
-TRACE_SCHEMA_VERSION = 4
+#: v3 dumps load with every event in DEVICE_HBM. v5 marks the
+#: request-driven composition era (``ComposedBlocks`` workloads: periodic
+#: training iterations AND continuous-batching request timelines compile
+#: to the same replay currency); per-event payloads are unchanged, so v4
+#: and v3 dumps load bit-identically. Loaders accept <= current, reject
+#: newer.
+TRACE_SCHEMA_VERSION = 5
 
 
 class MemorySpace(enum.Enum):
@@ -610,6 +614,67 @@ def lifecycles_to_events(blocks: Sequence[BlockLifecycle]) -> list[MemoryEvent]:
     return [e for _, _, e in evs]
 
 
+# -- composed workloads (estimation fast path) ------------------------------
+class ComposedBlocks:
+    """Base class for composed allocation workloads.
+
+    A composed workload is anything that compiles down to a flat
+    :class:`BlockLifecycle` list — the replay currency both simulator
+    engines consume. Two specializations exist:
+
+    * :class:`PeriodicBlocks` — N training iterations in O(blocks)
+      space (prefix / replicated cycle / suffix). The simulator keeps
+      its dedicated fast paths (steady-state skipping, tiled columnar
+      expansion) for this shape, so the training pipeline is
+      byte-identical to the pre-``ComposedBlocks`` engine.
+    * :class:`RequestBlocks` — a request-driven allocation stream
+      (continuous-batching serving timeline: per-request join/leave,
+      paged KV blocks, prefix-shared pages, speculative scratch). No
+      periodic structure to exploit; replays through the ordinary flat
+      paths of both engines.
+
+    Subclasses provide ``materialize()``, ``num_blocks``,
+    ``iter_groups()`` and a ``meta`` dict.
+    """
+
+    meta: dict
+
+    @property
+    def num_blocks(self) -> int:  # pragma: no cover — abstract
+        raise NotImplementedError
+
+    def materialize(self) -> list:  # pragma: no cover — abstract
+        raise NotImplementedError
+
+    def iter_groups(self):  # pragma: no cover — abstract
+        raise NotImplementedError
+
+
+@dataclasses.dataclass
+class RequestBlocks(ComposedBlocks):
+    """Flat request-driven allocation stream (serving workloads).
+
+    Produced by the continuous-batching scheduler
+    (``core.orchestrator.ContinuousBatchingScheduler.lower``): one
+    lifecycle per KV page / scratch / per-request state block, at the
+    exact tick it joins and leaves. ``meta`` carries the timeline
+    accounting (ticks, occupancy, evictions, knobs).
+    """
+
+    blocks: list
+    meta: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def num_blocks(self) -> int:
+        return len(self.blocks)
+
+    def materialize(self) -> list:
+        return list(self.blocks)
+
+    def iter_groups(self):
+        yield from self.blocks
+
+
 # -- periodic composition (estimation fast path) ----------------------------
 #: Block-id namespace stride for replicated cycle instances. Instance k of
 #: a PeriodicBlocks cycle re-ids block ``b`` as ``b + (k + 1) * STRIDE`` so
@@ -631,7 +696,7 @@ def split_cycle_bid(bid: int) -> tuple[int, int]:
 
 
 @dataclasses.dataclass
-class PeriodicBlocks:
+class PeriodicBlocks(ComposedBlocks):
     """N-iteration composition in O(blocks) space (fast path, ISSUE 1).
 
     ``prefix`` holds iteration 0 (params + optimizer-init included),

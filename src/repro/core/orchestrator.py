@@ -692,3 +692,334 @@ class MemoryOrchestrator:
         if shard_factor_fn is not None:
             blocks = self.apply_sharding(blocks, shard_factor_fn)
         return blocks
+
+
+# -- request-driven serving workloads (ISSUE 9) ------------------------------
+@dataclasses.dataclass(frozen=True)
+class RequestSpec:
+    """One serving request of a :class:`RequestStream`.
+
+    Ticks are discrete scheduler steps: the request arrives at
+    ``arrival_t``, prefills ``prompt_len`` tokens the tick it joins a
+    batch slot, then decodes one token per tick for ``decode_len``
+    ticks and leaves. ``shared_prefix_len`` marks how many of its
+    prompt tokens are the stream-wide common prefix (system prompt /
+    few-shot header) eligible for prefix-cache page sharing.
+    ``evict_at`` scripts a preemption: at that absolute tick the
+    request is evicted (all private pages freed), re-queues, and
+    re-prefills everything generated so far when a slot frees.
+    """
+
+    arrival_t: int
+    prompt_len: int
+    decode_len: int
+    shared_prefix_len: int = 0
+    evict_at: int | None = None
+
+
+@dataclasses.dataclass(frozen=True)
+class ServingKnobs:
+    """The serving-runtime knobs the planner searches.
+
+    ``page_size`` is the KV block granularity in tokens;
+    ``max_concurrent`` caps in-flight sequences (arrivals queue);
+    ``kv_dtype_bytes`` is the stored KV element width (2 = bf16,
+    1 = fp8) scaling the per-token page bytes relative to the traced
+    base dtype; ``prefix_cache`` enables shared-prompt page dedup;
+    ``speculative_k`` reserves a k-token draft-KV scratch block per
+    active request (speculative decoding).
+    """
+
+    page_size: int = 16
+    max_concurrent: int = 8
+    kv_dtype_bytes: int = 2
+    prefix_cache: bool = True
+    speculative_k: int = 0
+
+    def signature(self) -> tuple:
+        """Hashable identity for degradation-family separation."""
+        return (self.page_size, self.max_concurrent,
+                self.kv_dtype_bytes, self.prefix_cache,
+                self.speculative_k)
+
+
+@dataclasses.dataclass(frozen=True)
+class RequestStream:
+    """A concrete request timeline (the serving workload)."""
+
+    requests: tuple = ()
+
+    def __len__(self) -> int:
+        return len(self.requests)
+
+    @property
+    def max_seq_len(self) -> int:
+        """Longest total sequence any request reaches — what a
+        monolithic (non-paged) cache must provision per slot."""
+        return max((r.prompt_len + r.decode_len for r in self.requests),
+                   default=0)
+
+
+@dataclasses.dataclass(frozen=True)
+class RequestMix:
+    """A request-mix distribution: deterministic stand-in for arrival
+    randomness so serving decisions reproduce bit-identically.
+
+    ``buckets`` is ``((prompt_len, decode_len, count), ...)``;
+    ``stream()`` expands it round-robin across buckets with one arrival
+    every ``arrival_period`` ticks — a worst-case-dense, fully
+    deterministic timeline (no RNG anywhere near an admission answer).
+    """
+
+    buckets: tuple
+    arrival_period: int = 1
+    shared_prefix_len: int = 0
+
+    def stream(self) -> RequestStream:
+        remaining = [[int(p), int(d), int(c)] for p, d, c in self.buckets
+                     if c > 0]
+        reqs, t, i = [], 0, 0
+        while remaining:
+            b = remaining[i % len(remaining)]
+            reqs.append(RequestSpec(
+                arrival_t=t, prompt_len=b[0], decode_len=b[1],
+                shared_prefix_len=min(self.shared_prefix_len, b[0])))
+            b[2] -= 1
+            if b[2] == 0:
+                remaining.remove(b)
+            t += self.arrival_period
+            i += 1
+        return RequestStream(tuple(reqs))
+
+    @property
+    def n_requests(self) -> int:
+        return sum(c for _p, _d, c in self.buckets)
+
+    def to_json(self) -> dict:
+        return {"buckets": [list(b) for b in self.buckets],
+                "arrival_period": self.arrival_period,
+                "shared_prefix_len": self.shared_prefix_len}
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+class ContinuousBatchingScheduler:
+    """Lower a :class:`RequestStream` to a request-driven allocation
+    stream (:class:`~repro.core.events.RequestBlocks`).
+
+    This is the serving analogue of the periodic composer: a CPU-side
+    replay of the continuous-batching runloop that emits one
+    ``BlockLifecycle`` per KV page / scratch / per-request state block
+    at the exact tick it is allocated and freed, so the allocator
+    simulator sees the same dynamic pressure a paged-attention server
+    produces — page-granular allocations (never one monolithic cache
+    tensor), prefix-shared pages refcounted across requests, and
+    speculative-decoding scratch riding along per active sequence.
+
+    Determinism contract: identical (stream, knobs, byte parameters)
+    inputs produce an identical lifecycle list — serving decisions and
+    counter-offers reproduce bit-identically from cold services.
+    """
+
+    #: runaway guard: a lowering may not emit more lifecycles than this
+    MAX_BLOCKS = 2_000_000
+
+    def __init__(self, knobs: ServingKnobs = ServingKnobs()):
+        if knobs.page_size <= 0 or knobs.max_concurrent <= 0 \
+                or knobs.kv_dtype_bytes <= 0:
+            raise ValueError(f"invalid serving knobs: {knobs}")
+        self.knobs = knobs
+
+    def page_bytes(self, kv_bytes_per_token: int,
+                   base_dtype_bytes: int = 2) -> int:
+        """Device bytes of one KV page under these knobs' dtype."""
+        k = self.knobs
+        tok = _ceil_div(int(kv_bytes_per_token) * k.kv_dtype_bytes,
+                        max(int(base_dtype_bytes), 1))
+        return k.page_size * max(tok, 1)
+
+    def lower(self, stream: RequestStream, kv_bytes_per_token: int, *,
+              resident_bytes_per_request: int = 0,
+              base_dtype_bytes: int = 2):
+        """Run the continuous-batching timeline; return RequestBlocks.
+
+        ``kv_bytes_per_token`` is the per-token KV footprint at the
+        model's base dtype (all layers summed); the knobs' dtype scales
+        it. ``resident_bytes_per_request`` covers non-paged per-slot
+        state (SSM / hybrid recurrent state — constant-size, not
+        length-dependent, so it never pages).
+        """
+        from .events import RequestBlocks
+        k = self.knobs
+        page_b = self.page_bytes(kv_bytes_per_token, base_dtype_bytes)
+        tok_b = max(page_b // k.page_size, 1)
+        scratch_b = k.speculative_k * tok_b
+
+        blocks: list[BlockLifecycle] = []
+        next_bid = [1]
+
+        def open_block(t: int, size: int, kind: BlockKind, op: str,
+                       scope: str) -> int:
+            bid = next_bid[0]
+            next_bid[0] += 1
+            blocks.append(BlockLifecycle(
+                bid, int(size), int(t), None, 0, Phase.DECODE, op,
+                scope, kind))
+            return len(blocks) - 1
+
+        def close_block(idx: int, t: int) -> None:
+            blocks[idx] = dataclasses.replace(blocks[idx], free_t=int(t))
+
+        # shared prefix pages: page index -> [block idx, refcount]
+        shared_pages: dict[int, list] = {}
+        live_now = [0]
+
+        def acquire_shared(t: int, n_pages: int) -> list[int]:
+            out = []
+            for p in range(n_pages):
+                ent = shared_pages.get(p)
+                if ent is None or blocks[ent[0]].free_t is not None:
+                    ent = [open_block(t, page_b, BlockKind.CACHE,
+                                      "kv_page",
+                                      f"serving/prefix/page{p}"), 0]
+                    shared_pages[p] = ent
+                    live_now[0] += page_b
+                ent[1] += 1
+                out.append(p)
+            return out
+
+        def release_shared(t: int, pages: list[int]) -> None:
+            for p in pages:
+                ent = shared_pages[p]
+                ent[1] -= 1
+                if ent[1] == 0:
+                    close_block(ent[0], t)
+                    live_now[0] -= page_b
+
+        class _Active:
+            __slots__ = ("r", "ridx", "tokens", "pages", "shared",
+                         "aux", "decoded")
+
+            def __init__(self):
+                self.pages: list[int] = []      # private page block idxs
+                self.shared: list[int] = []     # shared page indices
+                self.aux: list[int] = []        # scratch/state block idxs
+
+        waiting = sorted(range(len(stream.requests)),
+                         key=lambda i: (stream.requests[i].arrival_t, i))
+        waiting = list(waiting)
+        requeued: list[int] = []            # evicted, FIFO, by index
+        evicted_tokens: dict[int, int] = {}  # ridx -> tokens at eviction
+        evicted_once: set[int] = set()       # scripted evictions fire once
+        active: list[_Active] = []
+        occupancy: list[int] = []
+        live_paged: list[int] = []          # per-tick paged+aux live bytes
+        evictions = 0
+        t = 0
+
+        def open_counted(t, size, kind, op, scope):
+            live_now[0] += int(size)
+            return open_block(t, size, kind, op, scope)
+
+        def close_counted(idx, t):
+            live_now[0] -= blocks[idx].size
+            close_block(idx, t)
+
+        def join(ridx: int, t: int) -> _Active:
+            r = stream.requests[ridx]
+            a = _Active()
+            a.r, a.ridx = r, ridx
+            a.tokens = evicted_tokens.pop(ridx, r.prompt_len)
+            a.decoded = max(a.tokens - r.prompt_len, 0)
+            shared_tokens = (r.shared_prefix_len if k.prefix_cache
+                             else 0)
+            n_shared = min(shared_tokens, a.tokens) // k.page_size
+            if n_shared:
+                a.shared = acquire_shared(t, n_shared)
+            n_total = _ceil_div(a.tokens, k.page_size) if a.tokens else 0
+            for p in range(len(a.shared), max(n_total, len(a.shared))):
+                a.pages.append(open_counted(
+                    t, page_b, BlockKind.CACHE, "kv_page",
+                    f"serving/req{ridx}/page{p}"))
+            if resident_bytes_per_request:
+                a.aux.append(open_counted(
+                    t, resident_bytes_per_request, BlockKind.CACHE,
+                    "decode_state", f"serving/req{ridx}/state"))
+            if scratch_b:
+                a.aux.append(open_counted(
+                    t, scratch_b, BlockKind.TEMP, "spec_scratch",
+                    f"serving/req{ridx}/scratch"))
+            return a
+
+        def leave(a: _Active, t: int) -> None:
+            for idx in a.pages:
+                close_counted(idx, t)
+            for idx in a.aux:
+                close_counted(idx, t)
+            if a.shared:
+                release_shared(t, a.shared)
+
+        while waiting or requeued or active:
+            if len(blocks) > self.MAX_BLOCKS:
+                raise ValueError(
+                    f"request stream lowers to more than "
+                    f"{self.MAX_BLOCKS} blocks — shrink the stream or "
+                    f"raise the page size")
+            # 1) departures: requests that finished last tick's decode
+            still = []
+            for a in active:
+                if a.decoded >= a.r.decode_len:
+                    leave(a, t)
+                else:
+                    still.append(a)
+            active = still
+            # 2) scripted evictions
+            still = []
+            for a in active:
+                if a.r.evict_at is not None and t >= a.r.evict_at \
+                        and a.ridx not in evicted_once:
+                    evicted_once.add(a.ridx)
+                    evicted_tokens[a.ridx] = a.tokens
+                    leave(a, t)
+                    requeued.append(a.ridx)
+                    evictions += 1
+                else:
+                    still.append(a)
+            active = still
+            # 3) admissions: re-queued first, then arrivals in order
+            while len(active) < k.max_concurrent and (
+                    requeued
+                    or (waiting and stream.requests[waiting[0]].arrival_t
+                        <= t)):
+                ridx = (requeued.pop(0) if requeued
+                        else waiting.pop(0))
+                active.append(join(ridx, t))
+            # 4) decode one token per active request
+            for a in active:
+                a.tokens += 1
+                a.decoded += 1
+                if a.tokens > (len(a.shared) + len(a.pages)) \
+                        * k.page_size:
+                    p = len(a.shared) + len(a.pages)
+                    a.pages.append(open_counted(
+                        t, page_b, BlockKind.CACHE, "kv_page",
+                        f"serving/req{a.ridx}/page{p}"))
+            occupancy.append(len(active))
+            live_paged.append(live_now[0])
+            t += 1
+
+        meta = {
+            "workload": "request_stream",
+            "ticks": t,
+            "n_requests": len(stream.requests),
+            "evictions": evictions,
+            "page_bytes": page_b,
+            "kv_bytes_per_token": tok_b,
+            "resident_bytes_per_request": int(resident_bytes_per_request),
+            "occupancy": occupancy,
+            "live_paged": live_paged,
+            "knobs": dataclasses.asdict(k),
+        }
+        return RequestBlocks(blocks, meta)

@@ -40,8 +40,8 @@ import numpy as np
 from .allocator import (AllocatorPolicy, CachingAllocatorSim, CUDA_CACHING,
                         DeviceAllocatorSim, SimOOMError, default_space_specs,
                         round_size_array, round_up, round_up_array)
-from .events import (CYCLE_ID_STRIDE, BlockLifecycle, MemorySpace,
-                     PeriodicBlocks, lifecycles_to_events,
+from .events import (CYCLE_ID_STRIDE, BlockLifecycle, ComposedBlocks,
+                     MemorySpace, PeriodicBlocks, lifecycles_to_events,
                      sharded_sizes_array, shift_cycle_bid, split_cycle_bid)
 
 _UNBOUNDED = 1 << 62
@@ -230,6 +230,15 @@ def split_blocks_by_space(blocks):
                 [b for b in blocks.suffix if b.space is s],
                 dict(blocks.meta))
         return out
+    if isinstance(blocks, ComposedBlocks):
+        # non-periodic composition (e.g. RequestBlocks): all-device
+        # inputs keep the ORIGINAL object (single-space replay path is
+        # byte-for-byte the composed replay); mixed-space inputs fall
+        # through to the flat partition over the materialized stream
+        spaces = {b.space for b in blocks.iter_groups()}
+        if spaces <= {MemorySpace.DEVICE_HBM}:
+            return {MemorySpace.DEVICE_HBM: blocks}
+        blocks = blocks.materialize()
     spaces = {b.space for b in blocks}
     if spaces <= {MemorySpace.DEVICE_HBM}:
         return {MemorySpace.DEVICE_HBM: blocks}
@@ -299,6 +308,10 @@ class MemorySimulator:
                 return None
             prog = program_from_periodic(blocks)
         else:
+            if isinstance(blocks, ComposedBlocks):
+                blocks = blocks.materialize()
+            if 2 * len(blocks) > _MAX_COLUMNAR_EVENTS:
+                return None
             prog = program_from_lifecycles(blocks)
         if self.policy.arena and not prog.unique_bids:
             # the vectorized pairing assumes one lifecycle per id; the
@@ -320,6 +333,8 @@ class MemorySimulator:
                 return self.replay_program(prog)
         if isinstance(blocks, PeriodicBlocks):
             return self._replay_periodic(blocks, steady_state)
+        if isinstance(blocks, ComposedBlocks):
+            blocks = blocks.materialize()
         events = lifecycles_to_events(blocks)
         device = DeviceAllocatorSim(self.capacity, self.policy.device_page)
         sim = CachingAllocatorSim(self.policy, device)

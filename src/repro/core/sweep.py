@@ -159,6 +159,25 @@ class MeshSweepResult:
                                          tr[1].peak_bytes))
 
 
+@dataclasses.dataclass
+class ServingSweepResult:
+    """Per-knob serving estimates from one cached decode trace."""
+
+    knobs: list            # ServingKnobs grid, aligned with estimates
+    estimates: list        # ServingEstimate per knob point
+    stats: dict
+
+    def __iter__(self):
+        return iter(zip(self.knobs, self.estimates))
+
+    def __len__(self):
+        return len(self.estimates)
+
+    def admitted(self, capacity: int) -> list:
+        return [k for k, e in zip(self.knobs, self.estimates)
+                if e.fits(capacity)]
+
+
 # -- affine trace model ------------------------------------------------------
 def _fit_affine(y_lo, y_hi, b_lo: int, b_hi: int):
     """Integer affine fit through two probes, or None if non-integral."""
@@ -937,6 +956,40 @@ class SweepService:
             "shard_factors": shard_factors,
         }
         return MeshSweepResult(list(topologies), reports, stats)
+
+    def estimate_serving_sweep(self, decode_fn, params, cache, batch, *,
+                               stream, knob_grid: Sequence,
+                               kv_bytes_per_token: int,
+                               resident_bytes_per_request: int = 0,
+                               capacity: int | None = None
+                               ) -> ServingSweepResult:
+        """Serving estimates for a grid of :class:`ServingKnobs` from at
+        most ONE fresh decode trace (the serving analogue of
+        :meth:`estimate_mesh_sweep`).
+
+        Tracing is knob-independent — page size, concurrency, and KV
+        dtype only change the CPU-side request-stream lowering and the
+        allocator replay, so the whole grid shares one cached trace.
+        The fresh-trace count is reported in ``stats["trace_cache"]``
+        and bench-asserted (``SERVING_TRACE_BUDGET``)."""
+        t0 = time.perf_counter()
+        est = self.estimator
+        tcache = est.trace_cache
+        h0, m0 = tcache.hits, tcache.misses
+        estimates = [
+            est.estimate_request_stream(
+                decode_fn, params, cache, batch, stream=stream,
+                knobs=k, kv_bytes_per_token=kv_bytes_per_token,
+                resident_bytes_per_request=resident_bytes_per_request,
+                capacity=capacity)
+            for k in knob_grid]
+        stats = {
+            "knobs": len(estimates),
+            "trace_cache": {"hits": tcache.hits - h0,
+                            "misses": tcache.misses - m0},
+            "wall_s": time.perf_counter() - t0,
+        }
+        return ServingSweepResult(list(knob_grid), estimates, stats)
 
     def estimate_many(self, points: Sequence[SweepPoint],
                       interpolate: bool = True) -> SweepResult:

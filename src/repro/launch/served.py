@@ -155,6 +155,32 @@ def build_plan_space(d: dict):
             float(f) for f in d.get("offload_activations", ())))
 
 
+def build_serving_knobs(d: dict):
+    """ServingKnobs from a wire-level ``serve_plan`` request."""
+    from ..core.orchestrator import ServingKnobs
+    return ServingKnobs(
+        page_size=int(d.get("page_size", 16)),
+        max_concurrent=int(d.get("max_concurrent", 8)),
+        kv_dtype_bytes=int(d.get("kv_dtype_bytes", 2)),
+        prefix_cache=bool(d.get("prefix_cache", True)),
+        speculative_k=int(d.get("speculative_k", 0)))
+
+
+def build_serving_space(d: dict):
+    """Serving-axis PlanSpace from a wire request, or None when the
+    request enables no axis (gate only, no counter-offer search)."""
+    from ..plan import PlanSpace
+    pages = tuple(int(p) for p in d.get("page_sizes", ()))
+    concs = tuple(int(c) for c in d.get("max_concurrents", ()))
+    dtypes = tuple(int(b) for b in d.get("kv_dtypes", ()))
+    prefixes = tuple(bool(x) for x in d.get("prefix_cache_grid", ()))
+    if not (pages or concs or dtypes or prefixes):
+        return None
+    return PlanSpace(page_sizes=pages, max_concurrents=concs,
+                     kv_dtypes=dtypes, prefix_cache=prefixes,
+                     max_offers=int(d.get("max_offers", 5)))
+
+
 def build_fleet_arrival(d: dict):
     """JobArrival (fleet placement) from a wire-level train job."""
     from ..service.cluster import JobArrival
@@ -252,7 +278,28 @@ def handle_request(service, d: dict, server=None) -> dict:
                             source=gate["decode"].provenance["source"])
             elif gate.get("error"):
                 resp["error"] = gate["error"]
+                resp["errors"] = gate.get("errors", [])
             return resp
+        if kind == "serve_plan":
+            from ..configs import get_config, get_smoke
+            from .serve import parse_mix, pick_serving
+            arch = d["arch"]
+            cfg = (get_smoke(arch) if d.get("smoke", True)
+                   else get_config(arch))
+            hbm = int(float(d.get("hbm_gib", 16.0)) * 2**30)
+            mix = parse_mix(str(d["mix"]),
+                            int(d.get("arrival_period", 1)),
+                            int(d.get("shared_prefix", 0)))
+            max_len = d.get("max_len")
+            decision, gate = pick_serving(
+                cfg, mix, hbm, knobs=build_serving_knobs(d),
+                space=build_serving_space(d),
+                max_len=int(max_len) if max_len is not None else None,
+                service=service)
+            return {"ok": True, **decision.to_json(),
+                    "kv_bytes_per_token": gate["kv_bytes_per_token"],
+                    "resident_bytes_per_request":
+                        gate["resident_bytes_per_request"]}
         return {"ok": False, "error": f"unknown request kind {kind!r}"}
     except Exception as e:  # noqa: BLE001 — a bad request must not kill the daemon
         return {"ok": False, "error": f"{type(e).__name__}: {e}"}

@@ -22,10 +22,11 @@ Entry points:
 * :func:`run_plan_search` — the ``--xmem-plan`` CLI / bench entry.
 """
 from ..core.orchestrator import OffloadPlan  # noqa: F401
-from .cost import plan_cost  # noqa: F401
+from .cost import plan_cost, serving_cost  # noqa: F401
 from .planner import (CounterOffer, PlanContext, PlanResult,  # noqa: F401
-                      PlanSpace, RemediationPlanner, run_plan_search)
+                      PlanSpace, RemediationPlanner, ServingPlanContext,
+                      run_plan_search)
 
 __all__ = ["CounterOffer", "OffloadPlan", "PlanContext", "PlanResult",
-           "PlanSpace", "RemediationPlanner", "plan_cost",
-           "run_plan_search"]
+           "PlanSpace", "RemediationPlanner", "ServingPlanContext",
+           "plan_cost", "run_plan_search", "serving_cost"]

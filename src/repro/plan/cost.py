@@ -80,3 +80,46 @@ def plan_cost(cfg: ModelConfig, shape: ShapeSpec, *,
     if offload_transfer_bytes:
         out["t_transfer_s"] = t_transfer
     return out
+
+
+def serving_cost(*, params_bytes: int, kv_bytes_per_token: int, knobs,
+                 avg_seq_len: float, shared_prefix_len: int = 0,
+                 flops_per_token: float | None = None) -> dict:
+    """Roofline terms + device-seconds-per-token for one serving plan.
+
+    A decode step over ``c = knobs.max_concurrent`` sequences streams
+    the parameters once plus every active sequence's paged KV cache —
+    page-quantized (a 512-token prompt at page 16 reads 32 full pages;
+    larger pages waste tail bytes), dtype-scaled (fp8 KV halves the
+    traffic), prefix-shared pages counted ONCE instead of per sequence,
+    and speculative drafts adding ``k`` extra KV columns per sequence.
+    The step emits ``c`` tokens, so concurrency amortizes the fixed
+    parameter read — exactly the tension the planner must price: bigger
+    ``c`` lowers device-s/token until the KV traffic term (or capacity)
+    binds.
+    """
+    c = max(int(knobs.max_concurrent), 1)
+    page = max(int(knobs.page_size), 1)
+    tok_b = max(int(kv_bytes_per_token), 1) * knobs.kv_dtype_bytes / 2.0
+    pages_per_seq = -(-max(avg_seq_len, 1.0) // page)
+    seq_bytes = pages_per_seq * page * tok_b
+    shared_bytes = 0.0
+    if knobs.prefix_cache and shared_prefix_len > 0:
+        shared_pages = int(shared_prefix_len) // page
+        shared_bytes = shared_pages * page * tok_b
+    kv_traffic = c * (seq_bytes - shared_bytes) + shared_bytes \
+        + c * knobs.speculative_k * tok_b
+    if flops_per_token is None:
+        # bf16 params: n_params ~ params_bytes/2; ~2 FLOPs per param
+        # per token — the standard dense-decoder estimate
+        flops_per_token = float(params_bytes)
+    t_compute = c * flops_per_token / PEAK_FLOPS
+    t_memory = (params_bytes + kv_traffic) / HBM_BW
+    t_step = max(t_compute, t_memory)
+    return {
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "step_time_s": t_step,
+        "device_s_per_token": t_step / c,
+        "kv_traffic_bytes": kv_traffic,
+    }

@@ -74,6 +74,15 @@ class PlanSpace:
     offload_activations: tuple = ()     # activation fractions to try
     #                                     (each combined with opt-state
     #                                     offload when that is enabled)
+    # -- serving axes (ISSUE 9) -- knobs only change the CPU-side
+    # request-stream lowering and the allocator replay, never the traced
+    # decode step, so the whole grid shares the baseline's cached trace
+    # (SERVING_TRACE_BUDGET-asserted). Empty tuple = keep the rejected
+    # plan's value for that knob.
+    page_sizes: tuple = ()              # KV page sizes (tokens) to try
+    max_concurrents: tuple = ()         # in-flight sequence caps to try
+    kv_dtypes: tuple = ()               # KV element widths (bytes)
+    prefix_cache: tuple = ()            # (True, False) toggles to try
 
 
 @dataclasses.dataclass(frozen=True)
@@ -85,6 +94,28 @@ class PlanContext:
     cfg: ModelConfig
     policy: TrainPolicy
     shape: ShapeSpec
+    space: PlanSpace = PlanSpace()
+
+
+@dataclasses.dataclass(frozen=True)
+class ServingPlanContext:
+    """The serving job description a ``plan_serving`` search needs —
+    pass as ``AdmissionService.decide_serving(..., plan=ctx)`` and a
+    request-driven rejection comes back with serving counter-offers.
+
+    Carries the exact decode tuple so every probe shares the rejected
+    request's cached trace, plus the request mix the offers must serve
+    and the knob axes (``space.page_sizes`` / ``max_concurrents`` /
+    ``kv_dtypes`` / ``prefix_cache``) the planner may turn."""
+
+    decode_fn: Any
+    params: Any
+    cache: Any
+    batch: Any
+    mix: Any                            # RequestMix (or RequestStream)
+    knobs: Any = None                   # base ServingKnobs (rejected plan)
+    kv_bytes_per_token: int = 0
+    resident_bytes_per_request: int = 0
     space: PlanSpace = PlanSpace()
 
 
@@ -110,6 +141,9 @@ class CounterOffer:
     offload_opt_state: bool = False
     offload_activations: float = 0.0
     space_peaks: dict | None = None     # per-space peak bytes
+    # serving knobs (ISSUE 9) — the offered ServingKnobs as a dict plus
+    # the ServingEstimate summary; None for training offers
+    serving: dict | None = None
 
     @property
     def n_devices(self) -> int:
@@ -149,7 +183,22 @@ class CounterOffer:
         }
         if self.space_peaks:
             d["space_peaks"] = dict(self.space_peaks)
+        if self.serving is not None:
+            d["serving"] = dict(self.serving)
         return d
+
+    def serving_knobs(self):
+        """The :class:`~repro.core.orchestrator.ServingKnobs` this offer
+        promises, or None for a training offer."""
+        if self.serving is None:
+            return None
+        from ..core.orchestrator import ServingKnobs
+        k = self.serving["knobs"]
+        return ServingKnobs(page_size=k["page_size"],
+                            max_concurrent=k["max_concurrent"],
+                            kv_dtype_bytes=k["kv_dtype_bytes"],
+                            prefix_cache=k["prefix_cache"],
+                            speculative_k=k["speculative_k"])
 
     # -- reproduction --------------------------------------------------------
     def apply(self, cfg: ModelConfig, policy: TrainPolicy,
@@ -546,6 +595,132 @@ class RemediationPlanner:
                      fresh_traces=after["misses"] - before["misses"],
                      wall_s=time.perf_counter() - t0)
         return PlanResult(offers, baseline, stats)
+
+    # -- the serving search (ISSUE 9) ----------------------------------------
+    def plan_serving(self, ctx: ServingPlanContext, *, capacity: int,
+                     job_id: str = "serve",
+                     baseline: AdmissionDecision | None = None
+                     ) -> PlanResult:
+        """Ranked serving counter-offers for a rejected request mix.
+
+        Every candidate only re-lowers the CPU request stream and
+        replays — the decode trace is shared across the whole page-size
+        x concurrency x KV-dtype x prefix-cache grid, so the search
+        costs at most the baseline's one fresh trace
+        (``stats["fresh_traces"]``, bench-asserted against
+        ``SERVING_TRACE_BUDGET``). Offers are ranked by the serving
+        roofline (``plan/cost.py:serving_cost``) so the first offer is
+        the cheapest modeled device-time per generated token, and each
+        reproduces bit-identically via a direct ``decide_serving`` with
+        ``CounterOffer.serving_knobs()``."""
+        from ..core.orchestrator import ServingKnobs
+        from .cost import serving_cost
+        svc = self.service
+        cache = svc.cache
+        t0 = time.perf_counter()
+        space = ctx.space or PlanSpace()
+        base_knobs = ctx.knobs or ServingKnobs()
+
+        def decide(tag, knobs):
+            return svc.decide_serving(
+                f"{job_id}/{tag}", ctx.decode_fn, ctx.params, ctx.cache,
+                ctx.batch, capacity=capacity, mix=ctx.mix, knobs=knobs,
+                kv_bytes_per_token=ctx.kv_bytes_per_token,
+                resident_bytes_per_request=ctx.resident_bytes_per_request)
+
+        before = cache.thread_stats()
+        if baseline is None:
+            baseline = decide("baseline", base_knobs)
+        baseline_traces = cache.thread_stats()["misses"] \
+            - before["misses"]
+        avg_seq, shared_prefix = _mix_profile(ctx.mix)
+        stats = {"capacity": capacity, "candidates": 0, "feasible": 0,
+                 "axes": {}, "baseline_traces": baseline_traces,
+                 "already_fits": bool(baseline.admit)}
+        if baseline.admit:
+            stats.update(fresh_traces=0, offers=0,
+                         wall_s=time.perf_counter() - t0)
+            return PlanResult([], baseline, stats)
+
+        before = cache.thread_stats()
+        grid = _serving_grid(space, base_knobs)
+        stats["axes"]["serving"] = len(grid)
+        params_bytes = baseline.persistent_bytes
+        base_cost = serving_cost(
+            params_bytes=params_bytes,
+            kv_bytes_per_token=ctx.kv_bytes_per_token, knobs=base_knobs,
+            avg_seq_len=avg_seq, shared_prefix_len=shared_prefix)
+        offers: list[CounterOffer] = []
+        for knobs in grid:
+            stats["candidates"] += 1
+            tag = (f"pg{knobs.page_size}-c{knobs.max_concurrent}"
+                   f"-kv{knobs.kv_dtype_bytes}"
+                   f"-px{int(knobs.prefix_cache)}")
+            d = decide(tag, knobs)
+            if not d.admit or d.degraded:
+                continue
+            stats["feasible"] += 1
+            cost = serving_cost(
+                params_bytes=params_bytes,
+                kv_bytes_per_token=ctx.kv_bytes_per_token, knobs=knobs,
+                avg_seq_len=avg_seq, shared_prefix_len=shared_prefix)
+            serving = dict(d.breakdown.get("serving", {}))
+            serving["knobs"] = dataclasses.asdict(knobs)
+            offers.append(CounterOffer(
+                job_id=job_id, knob="serving",
+                global_batch=knobs.max_concurrent, microbatches=1,
+                remat="none", topology=None, pad_vocab_multiple=None,
+                capacity=capacity, peak_bytes=d.peak_bytes,
+                safe_threshold=d.safe_threshold, cost=cost,
+                slowdown=(cost["device_s_per_token"]
+                          / max(base_cost["device_s_per_token"], 1e-30)),
+                source=d.provenance["source"], report=d.report,
+                serving=serving))
+        after = cache.thread_stats()
+        offers.sort(key=lambda o: (o.cost["device_s_per_token"],
+                                   o.peak_bytes, o.global_batch))
+        offers = offers[:max(space.max_offers, 0)]
+        stats.update(offers=len(offers),
+                     fresh_traces=after["misses"] - before["misses"],
+                     wall_s=time.perf_counter() - t0)
+        return PlanResult(offers, baseline, stats)
+
+
+# ---------------------------------------------------------------------------
+def _serving_grid(space: PlanSpace, base) -> list:
+    """The ServingKnobs candidates of a plan space — full product over
+    the enabled axes (base value where an axis is empty), base point
+    excluded (it is the rejected plan)."""
+    import itertools
+    pages = space.page_sizes or (base.page_size,)
+    concs = space.max_concurrents or (base.max_concurrent,)
+    dtypes = space.kv_dtypes or (base.kv_dtype_bytes,)
+    prefixes = space.prefix_cache or (base.prefix_cache,)
+    out = []
+    for p, c, d, x in itertools.product(pages, concs, dtypes, prefixes):
+        k = dataclasses.replace(base, page_size=p, max_concurrent=c,
+                                kv_dtype_bytes=d, prefix_cache=x)
+        if k != base:
+            out.append(k)
+    return out
+
+
+def _mix_profile(mix) -> tuple[float, int]:
+    """(average total sequence length, shared prefix tokens) of a
+    RequestMix or a concrete RequestStream — the serving cost model's
+    traffic inputs."""
+    buckets = getattr(mix, "buckets", None)
+    if buckets is not None:
+        total = sum(c for _p, _d, c in buckets)
+        avg = (sum((p + d) * c for p, d, c in buckets)
+               / max(total, 1))
+        return avg, int(getattr(mix, "shared_prefix_len", 0))
+    reqs = getattr(mix, "requests", ())
+    if reqs:
+        avg = sum(r.prompt_len + r.decode_len for r in reqs) / len(reqs)
+        shared = min(r.shared_prefix_len for r in reqs)
+        return avg, int(shared)
+    return 1.0, 0
 
 
 # ---------------------------------------------------------------------------

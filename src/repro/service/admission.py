@@ -80,6 +80,9 @@ class AdmissionRequest:
     # estimate runs with the orchestrator's offload pass enabled and the
     # decision carries per-space peaks in its breakdown
     offload: Any | None = None
+    # serving-knob signature (ServingKnobs.signature()) — separates
+    # degradation-ladder evidence families per serving configuration
+    serving: Any | None = None
     meta: dict = dataclasses.field(default_factory=dict)
 
 
@@ -128,7 +131,7 @@ class AdmissionDecision:
         d["breakdown"] = {k: v for k, v in self.breakdown.items()
                           if k in ("phase_peaks", "num_blocks",
                                    "liveness_peak", "degraded",
-                                   "space_peaks", "offload")}
+                                   "space_peaks", "offload", "serving")}
         if self.counter_offers is not None:
             d["counter_offers"] = [o.to_json()
                                    for o in self.counter_offers]
@@ -524,28 +527,71 @@ class AdmissionService:
     def decide_serving(self, job_id: str, decode_fn: Callable, params,
                        cache_tree, batch, *, capacity: int,
                        shard_factor_fn=None,
-                       deadline_s: float | None = None
-                       ) -> AdmissionDecision:
-        """Single-phase serving decision (decode / prefill step with a
-        persistent KV cache) — the ``launch/serve.py`` gate. Degrades
-        like ``decide``: a failed or over-deadline serving estimate is
+                       deadline_s: float | None = None,
+                       mix=None, stream=None, knobs=None,
+                       kv_bytes_per_token: int | None = None,
+                       resident_bytes_per_request: int = 0,
+                       plan=None) -> AdmissionDecision:
+        """Serving decision — the ``launch/serve.py`` gate.
+
+        Two modes share one cached decode trace:
+
+        * **static** (no ``mix``/``stream``): the original single-phase
+          estimate of a decode step with a persistent monolithic cache;
+        * **request-driven** (ISSUE 9): pass a ``RequestMix`` (or a
+          concrete ``RequestStream``) plus ``knobs``/
+          ``kv_bytes_per_token`` and the decision gates on the
+          continuous-batching worst-case peak, with the full
+          :class:`~repro.core.estimator.ServingEstimate` under
+          ``breakdown["serving"]`` (whitelisted onto the wire).
+
+        Degrades like ``decide``: a failed or over-deadline estimate is
         answered from the analytic rung over (params + cache + batch)
-        avals."""
+        avals, with serving knobs separating evidence families. A
+        request-driven rejection carrying a ``plan``
+        (``repro.plan.ServingPlanContext``) comes back with ranked
+        serving counter-offers."""
         t0 = time.perf_counter()
         if deadline_s is None:
             deadline_s = self.degrade.default_deadline_s
+        if stream is None and mix is not None:
+            stream = mix.stream()
+        if stream is not None and kv_bytes_per_token is None:
+            raise ValueError(
+                "request-driven serving decisions need kv_bytes_per_token")
+        if stream is not None and knobs is None:
+            from ..core.orchestrator import ServingKnobs
+            knobs = ServingKnobs()
+        knob_sig = knobs.signature() if knobs is not None else None
 
         def run():
             est = self.estimator
             cache = est.trace_cache
             before = cache.thread_stats()
-            rep = est.estimate_serving(decode_fn, params, cache_tree,
-                                       batch,
-                                       shard_factor_fn=shard_factor_fn)
+            if stream is not None:
+                se = est.estimate_request_stream(
+                    decode_fn, params, cache_tree, batch, stream=stream,
+                    knobs=knobs, kv_bytes_per_token=kv_bytes_per_token,
+                    resident_bytes_per_request=resident_bytes_per_request,
+                    shard_factor_fn=shard_factor_fn, capacity=capacity)
+                rep = EstimateReport(
+                    peak_bytes=se.worst_case_peak_bytes,
+                    peak_tensor_bytes=se.steady_state_peak_bytes,
+                    persistent_bytes=se.persistent_bytes,
+                    oom=se.oom, sim=se.sim,
+                    breakdown={"num_blocks": se.breakdown["num_blocks"],
+                               "serving": se.to_json()},
+                    wall_time_s=se.wall_time_s,
+                    num_events=se.num_events)
+            else:
+                rep = est.estimate_serving(decode_fn, params, cache_tree,
+                                           batch,
+                                           shard_factor_fn=shard_factor_fn)
             return rep, _provenance(cache, before)
 
         req = AdmissionRequest(job_id, decode_fn, params, batch,
-                               capacity=capacity, deadline_s=deadline_s)
+                               capacity=capacity, deadline_s=deadline_s,
+                               serving=knob_sig)
         with self._lock:
             self._in_flight += 1
         try:
@@ -564,17 +610,40 @@ class AdmissionService:
                     # with the params for the aval bound
                     proxy = AdmissionRequest(
                         job_id, decode_fn, (params, cache_tree), batch,
-                        capacity=capacity)
+                        capacity=capacity, serving=knob_sig)
                     return self._decide_degraded(proxy, errors, t0,
                                                  deadline_s)
             self._count_rung(RUNG_EXACT)
             decision = self._decision(req, rep, prov,
                                       time.perf_counter() - t0, None)
             decision.deadline_s = deadline_s
+            if plan is not None and not decision.admit \
+                    and not decision.degraded:
+                decision = self._attach_serving_offers(plan, decision,
+                                                       capacity)
             return decision
         finally:
             with self._lock:
                 self._in_flight -= 1
+
+    def _attach_serving_offers(self, ctx, decision: AdmissionDecision,
+                               capacity: int) -> AdmissionDecision:
+        """A request-driven serving rejection with a
+        ``ServingPlanContext`` comes back with ranked serving
+        counter-offers (page size / concurrency / KV dtype /
+        prefix-cache) — trace-free against the already-cached decode
+        trace. Planning failures leave the bare rejection intact."""
+        from ..plan import RemediationPlanner
+        try:
+            result = RemediationPlanner(self).plan_serving(
+                ctx, capacity=capacity, job_id=decision.job_id,
+                baseline=decision)
+            decision.counter_offers = result.offers
+            decision.provenance["plan"] = result.stats
+        except Exception as e:   # noqa: BLE001 — offers are best-effort
+            decision.provenance["plan"] = {
+                "error": f"{type(e).__name__}: {e}"}
+        return decision
 
     def _decision(self, req: AdmissionRequest, rep: EstimateReport,
                   provenance: dict, wall_s: float,

@@ -93,10 +93,13 @@ def request_family(req) -> tuple | None:
                        for l in batch_leaves))
     # per-device execution models must not cross-pollinate families;
     # neither may offload plans — an offloaded peak is lower, and using
-    # it as evidence for a non-offload request would under-answer
+    # it as evidence for a non-offload request would under-answer.
+    # Serving knobs separate too: a paged fp8 small-page peak is no
+    # evidence for a monolithic bf16 request (ISSUE 9)
     shard_sig = (req.shard_factor_fn is not None,
                  bool(req.collective_specs),
-                 getattr(req, "offload", None))
+                 getattr(req, "offload", None),
+                 getattr(req, "serving", None))
     return (idents, params_sig, batch_sig, shard_sig)
 
 

@@ -274,12 +274,15 @@ class TraceStore:
                 self.invalidated += 1
                 self.load_misses += 1
             return None
-        # trace schema v3 dumps load compatibly (the space column defaults
-        # every event to DEVICE_HBM — code 0, so all-device semantics are
-        # bit-identical); anything newer or older still quarantines
+        # trace schema v3/v4 entries load compatibly (v3: the space
+        # column defaults every event to DEVICE_HBM — code 0; v4: same
+        # payload columns as v5, the bump marks the request-driven
+        # composition era, not a format change) — all bit-identical.
+        # Anything newer or older still quarantines, so a v5 entry read
+        # by an older (v4-max) build quarantines symmetrically.
         if (d.get("store_version") != STORE_VERSION
                 or d.get("trace_schema")
-                not in (3, TRACE_SCHEMA_VERSION)):
+                not in (3, 4, TRACE_SCHEMA_VERSION)):
             self._quarantine(path, "version")
             with self._lock:
                 self.invalidated += 1

@@ -1,0 +1,530 @@
+"""Request-driven serving estimation (ISSUE 9).
+
+Covers the acceptance criteria of the continuous-batching refactor:
+
+* training-path bit-identity — with no serving workload, the
+  ``ComposedBlocks`` generalization replays byte-identically across all
+  three device allocator policies and both engines, and v4/v3 dumps and
+  store entries still load bit-identically under schema v5;
+* exact continuous-batching replay — a scripted timeline (staggered
+  arrivals, mixed prompt/decode lengths, one eviction) replays
+  event-for-event identically through the columnar and object engines,
+  and the paged-KV peak is strictly below the monolithic-cache peak for
+  a fragmented mix;
+* serving-plan trace frugality — a >=12-candidate page-size x
+  concurrency x KV-dtype search costs <=2 fresh traces, and
+  ``serve_plan`` offers reproduce bit-identically via a direct
+  ``decide_serving`` from a cold service;
+* the serving gate across non-text families (VLM ``patch_embeds``,
+  audio ``codes``) including no-fit and estimate-raises paths
+  (satellite), and the v5-store-entry-read-by-a-v4-reader quarantine
+  (satellite).
+"""
+import dataclasses
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.allocator import CUDA_CACHING, TPU_ARENA, XLA_BFC
+from repro.core.cache import TraceCache
+from repro.core.estimator import XMemEstimator
+from repro.core.events import (ComposedBlocks, MemorySpace, PeriodicBlocks,
+                               RequestBlocks, TRACE_SCHEMA_VERSION)
+from repro.core.orchestrator import (ContinuousBatchingScheduler, RequestMix,
+                                     RequestSpec, RequestStream, ServingKnobs)
+from repro.core.simulator import MemorySimulator, split_blocks_by_space
+from repro.service import AdmissionRequest, AdmissionService
+
+MIB = 2**20
+KV_TOK = 1 << 20        # 1 MiB/token keeps paged deltas above allocator
+#                         segment granularity
+
+
+def _decode_fn(params, cache, batch):
+    h = batch @ params["w"]
+    return (h + jnp.sum(cache["k"]) + jnp.sum(cache["v"])) @ params["w"].T
+
+
+def _decode_shapes(b=4):
+    params = {"w": jnp.zeros((64, 128))}
+    cache = {"k": jnp.zeros((4, 32, 2, 64)), "v": jnp.zeros((4, 32, 2, 64))}
+    batch = jnp.zeros((b, 64))
+    return params, cache, batch
+
+
+def _scripted_stream():
+    """Staggered arrivals, mixed prompt/decode lengths, one eviction."""
+    return RequestStream((
+        RequestSpec(0, 32, 24),
+        RequestSpec(1, 8, 64, shared_prefix_len=8),
+        RequestSpec(3, 48, 8, shared_prefix_len=8),
+        RequestSpec(5, 16, 40, evict_at=12),
+        RequestSpec(9, 24, 16),
+    ))
+
+
+# ---------------------------------------------------------------------------
+class TestComposedBlocks:
+    def test_periodic_is_composed(self):
+        assert issubclass(PeriodicBlocks, ComposedBlocks)
+        assert issubclass(RequestBlocks, ComposedBlocks)
+
+    def test_request_blocks_protocol(self):
+        rb = ContinuousBatchingScheduler(ServingKnobs()).lower(
+            _scripted_stream(), KV_TOK)
+        assert rb.num_blocks == len(rb.blocks) > 0
+        assert rb.materialize() == list(rb.blocks)
+        assert list(rb.iter_groups()) == list(rb.blocks)
+
+    def test_split_all_device_returns_original(self):
+        # serving blocks are device-resident: the space split must keep
+        # the ORIGINAL object (bit-identity by construction, no copy)
+        rb = ContinuousBatchingScheduler(ServingKnobs()).lower(
+            _scripted_stream(), KV_TOK)
+        out = split_blocks_by_space(rb)
+        assert out[MemorySpace.DEVICE_HBM] is rb
+
+
+# ---------------------------------------------------------------------------
+class TestTrainingBitIdentity:
+    """Acceptance: no serving workload configured => the ComposedBlocks
+    refactor answers training estimates byte-identically across all
+    three device allocators and both engines."""
+
+    def _train(self, policy, engine):
+        D, H, B = 64, 128, 16
+
+        def loss(p, b):
+            return jnp.mean((jnp.tanh(b["x"] @ p["w1"]) @ p["w2"]
+                             - b["y"]) ** 2)
+
+        def fwd_bwd(p, b):
+            return jax.value_and_grad(loss)(p, b)
+
+        params = {"w1": jax.ShapeDtypeStruct((D, H), jnp.float32),
+                  "w2": jax.ShapeDtypeStruct((H, D), jnp.float32)}
+        batch = {"x": jax.ShapeDtypeStruct((B, D), jnp.float32),
+                 "y": jax.ShapeDtypeStruct((B, D), jnp.float32)}
+        est = XMemEstimator(allocator_policy=policy, engine=engine,
+                            trace_cache=TraceCache())
+        return est.estimate_training(fwd_bwd, params, batch)
+
+    @pytest.mark.parametrize("policy", [CUDA_CACHING, XLA_BFC, TPU_ARENA])
+    def test_engines_agree_per_policy(self, policy):
+        a = self._train(policy, "object")
+        b = self._train(policy, "columnar")
+        assert a.peak_bytes == b.peak_bytes
+        assert a.peak_tensor_bytes == b.peak_tensor_bytes
+        assert a.persistent_bytes == b.persistent_bytes
+        assert a.breakdown == b.breakdown
+
+    def test_v4_dump_loads_bit_identically(self, tmp_path):
+        """A v4 dump (space column present, version stamp 4) loads
+        under the v5 reader with identical events."""
+        from repro.core.analyzer import load_trace
+        from repro.core.events import (BlockKind, MemoryEvent, Phase,
+                                       Trace)
+        mk = lambda kind, bid, t: MemoryEvent(  # noqa: E731
+            kind, bid, 4096, t, 0, Phase.FORWARD_BACKWARD, "op", "scope",
+            BlockKind.ACTIVATION, (32, 32), MemorySpace.DEVICE_HBM)
+        events = [mk("alloc", 1, 0), mk("alloc", 2, 1),
+                  mk("free", 2, 2), mk("free", 1, 3)]
+        path = str(tmp_path / "t.json")
+        Trace(events).save(path)
+        with open(path) as f:
+            d = json.load(f)
+        assert d["schema_version"] == TRACE_SCHEMA_VERSION == 5
+        d["schema_version"] = 4
+        with open(path, "w") as f:
+            json.dump(d, f)
+        back = load_trace(path)
+        assert [(e.block_id, e.size, e.t, e.space) for e in back.events] \
+            == [(e.block_id, e.size, e.t, e.space) for e in events]
+
+
+# ---------------------------------------------------------------------------
+class TestStoreV5Quarantine:
+    """Satellite: version-bump symmetry in the TraceStore."""
+
+    def _shapes(self):
+        params = {"w": jax.ShapeDtypeStruct((64, 64), jnp.float32)}
+        batch = {"x": jax.ShapeDtypeStruct((8, 64), jnp.float32),
+                 "y": jax.ShapeDtypeStruct((8, 64), jnp.float32)}
+        return params, batch
+
+    @staticmethod
+    def _fwd(p, b):
+        def loss(p, b):
+            return jnp.mean((b["x"] @ p["w"] - b["y"]) ** 2)
+        return jax.value_and_grad(loss)(p, b)
+
+    def _decide(self, store_dir):
+        params, batch = self._shapes()
+        svc = AdmissionService(workers=1, store_dir=store_dir)
+        d = svc.decide(AdmissionRequest("job", self._fwd, params, batch,
+                                        capacity=1 << 62))
+        svc.close()
+        return d
+
+    def _entries(self, sd):
+        return [os.path.join(sd, n) for n in os.listdir(sd)
+                if n.endswith(".json")]
+
+    def test_v4_entries_served_from_disk(self, tmp_path):
+        """Entries persisted by a v4 build answer warm under v5."""
+        sd = str(tmp_path / "store")
+        ref = self._decide(sd)
+        for p in self._entries(sd):
+            with open(p) as f:
+                d = json.load(f)
+            assert d["trace_schema"] == TRACE_SCHEMA_VERSION == 5
+            d["trace_schema"] = 4
+            with open(p, "w") as f:
+                json.dump(d, f)
+        svc2 = AdmissionService(workers=1, store_dir=sd)
+        params, batch = self._shapes()
+        d = svc2.decide(AdmissionRequest("job", self._fwd, params, batch,
+                                         capacity=1 << 62))
+        assert d.peak_bytes == ref.peak_bytes
+        assert d.provenance["source"] == "disk"
+        assert svc2.cache.store.stats()["quarantined"] == 0
+        svc2.close()
+
+    def test_v5_entry_read_by_v4_reader_quarantines(self, tmp_path,
+                                                    monkeypatch):
+        """Satellite: a v5 store entry read by an OLDER (v4-max) build
+        must quarantine — never mis-load. Simulated by pinning the
+        reader's schema ceiling back to 4."""
+        import repro.service.store as store_mod
+        sd = str(tmp_path / "store")
+        ref = self._decide(sd)
+        assert len(self._entries(sd)) > 0
+        monkeypatch.setattr(store_mod, "TRACE_SCHEMA_VERSION", 4)
+        svc2 = AdmissionService(workers=1, store_dir=sd)
+        params, batch = self._shapes()
+        d = svc2.decide(AdmissionRequest("job", self._fwd, params, batch,
+                                         capacity=1 << 62))
+        # answered fresh (the v5 entries were refused), bit-identically
+        assert d.peak_bytes == ref.peak_bytes
+        assert d.provenance["source"] == "traced"
+        stats = svc2.cache.store.stats()
+        assert stats["quarantined"] > 0
+        svc2.close()
+
+
+# ---------------------------------------------------------------------------
+class TestContinuousBatchingReplay:
+    """Acceptance: the scripted timeline replays exactly — engines agree
+    event-for-event — and paged-KV beats the monolithic cache."""
+
+    def test_engines_agree_event_for_event(self):
+        rb = ContinuousBatchingScheduler(
+            ServingKnobs(page_size=8, max_concurrent=3,
+                         speculative_k=2)).lower(
+            _scripted_stream(), KV_TOK, resident_bytes_per_request=4096)
+        assert rb.meta["evictions"] == 1
+        obj = MemorySimulator(engine="object").replay(rb)
+        col = MemorySimulator(engine="columnar").replay(rb)
+        assert obj.peak_reserved == col.peak_reserved
+        assert obj.peak_allocated == col.peak_allocated
+        assert list(obj.curve) == list(col.curve)
+
+    def test_lowering_is_deterministic(self):
+        mk = lambda: ContinuousBatchingScheduler(  # noqa: E731
+            ServingKnobs(page_size=8, max_concurrent=3)).lower(
+            _scripted_stream(), KV_TOK)
+        a, b = mk(), mk()
+        assert [dataclasses.astuple(x) for x in a.blocks] \
+            == [dataclasses.astuple(x) for x in b.blocks]
+        assert a.meta == b.meta
+
+    def test_eviction_frees_and_rejoins(self):
+        rb = ContinuousBatchingScheduler(
+            ServingKnobs(page_size=8, max_concurrent=2)).lower(
+            RequestStream((RequestSpec(0, 16, 32),
+                           RequestSpec(1, 16, 32, evict_at=10),
+                           RequestSpec(2, 16, 32))), KV_TOK)
+        assert rb.meta["evictions"] == 1
+        # every block freed (the stream drains), occupancy capped
+        assert all(b.free_t is not None for b in rb.blocks)
+        assert max(rb.meta["occupancy"]) <= 2
+
+    def test_paged_below_monolithic_for_fragmented_mix(self):
+        """A fragmented mix (many short requests inside a long max-seq
+        envelope) is exactly where paged allocation wins: the monolithic
+        cache provisions max_concurrent x max_seq while pages track the
+        actual live tokens."""
+        params, cache, batch = _decode_shapes()
+        mix = RequestMix(buckets=((8, 8, 12), (16, 16, 6), (240, 16, 1)),
+                         arrival_period=1)
+        est = XMemEstimator.for_tpu(trace_cache=TraceCache())
+        se = est.estimate_request_stream(
+            _decode_fn, params, cache, batch, stream=mix.stream(),
+            knobs=ServingKnobs(page_size=16, max_concurrent=8),
+            kv_bytes_per_token=KV_TOK)
+        assert se.paged_kv_peak_bytes < se.monolithic_cache_bytes
+        assert se.steady_state_peak_bytes <= se.worst_case_peak_bytes
+
+    def test_prefix_cache_and_kv_dtype_reduce_peak(self):
+        mix = RequestMix(buckets=((64, 8, 6),), arrival_period=1,
+                         shared_prefix_len=48)
+        stream = mix.stream()
+
+        def peak(knobs):
+            rb = ContinuousBatchingScheduler(knobs).lower(stream, KV_TOK)
+            return MemorySimulator().replay(rb).peak_reserved
+
+        on = peak(ServingKnobs(page_size=8, max_concurrent=4))
+        off = peak(ServingKnobs(page_size=8, max_concurrent=4,
+                                prefix_cache=False))
+        fp8 = peak(ServingKnobs(page_size=8, max_concurrent=4,
+                                kv_dtype_bytes=1))
+        assert on < off
+        assert fp8 < off
+
+
+# ---------------------------------------------------------------------------
+class TestServingPlanFrugality:
+    """Acceptance: >=12-candidate knob search <=2 fresh traces; offers
+    reproduce bit-identically from a cold service."""
+
+    MIX = RequestMix(buckets=((256, 64, 8), (64, 256, 8)),
+                     arrival_period=1, shared_prefix_len=64)
+    KV = 1 << 18
+
+    def test_sweep_trace_budget(self):
+        import itertools
+        from repro.core.sweep import SweepService
+        params, cache, batch = _decode_shapes()
+        est = XMemEstimator.for_tpu(trace_cache=TraceCache())
+        grid = [ServingKnobs(page_size=p, max_concurrent=c,
+                             kv_dtype_bytes=d)
+                for p, c, d in itertools.product((8, 16), (4, 8, 16),
+                                                 (1, 2))]
+        assert len(grid) >= 12
+        res = SweepService(est).estimate_serving_sweep(
+            _decode_fn, params, cache, batch, stream=self.MIX.stream(),
+            knob_grid=grid, kv_bytes_per_token=self.KV)
+        assert len(res) == len(grid)
+        assert res.stats["trace_cache"]["misses"] <= 2
+
+    def test_offers_reproduce_from_cold_service(self):
+        from repro.plan import PlanSpace, ServingPlanContext
+        params, cache, batch = _decode_shapes()
+        base = ServingKnobs(max_concurrent=16)
+        space = PlanSpace(page_sizes=(8, 16, 32),
+                          max_concurrents=(2, 4, 8),
+                          kv_dtypes=(1, 2))
+        ctx = ServingPlanContext(_decode_fn, params, cache, batch,
+                                 self.MIX, knobs=base,
+                                 kv_bytes_per_token=self.KV, space=space)
+        cap = 220 * MIB
+        svc = AdmissionService(workers=1, cache=TraceCache())
+        d = svc.decide_serving("job", _decode_fn, params, cache, batch,
+                               capacity=cap, mix=self.MIX, knobs=base,
+                               kv_bytes_per_token=self.KV, plan=ctx)
+        assert not d.admit
+        assert d.counter_offers
+        stats = d.provenance["plan"]
+        assert stats["candidates"] >= 12
+        assert stats["fresh_traces"] + stats["baseline_traces"] <= 2
+        for offer in d.counter_offers:
+            cold = AdmissionService(workers=1, cache=TraceCache())
+            d2 = cold.decide_serving(
+                "repro", _decode_fn, params, cache, batch, capacity=cap,
+                mix=self.MIX, knobs=offer.serving_knobs(),
+                kv_bytes_per_token=self.KV)
+            assert d2.admit
+            assert d2.peak_bytes == offer.peak_bytes
+
+    def test_serving_breakdown_on_the_wire(self):
+        svc = AdmissionService(workers=1, cache=TraceCache())
+        params, cache, batch = _decode_shapes()
+        d = svc.decide_serving("job", _decode_fn, params, cache, batch,
+                               capacity=1 << 40, mix=self.MIX,
+                               kv_bytes_per_token=self.KV)
+        wire = d.to_json()
+        json.dumps(wire)    # must be JSON-safe
+        s = wire["breakdown"]["serving"]
+        assert s["worst_case_peak_bytes"] == d.peak_bytes
+        assert s["knobs"]["page_size"] == 16
+
+    def test_serving_cost_monotonicity(self):
+        from repro.plan import serving_cost
+        kw = dict(params_bytes=6e9, kv_bytes_per_token=KV_TOK,
+                  avg_seq_len=512)
+        base = serving_cost(knobs=ServingKnobs(), **kw)
+        more = serving_cost(knobs=ServingKnobs(max_concurrent=32), **kw)
+        fp8 = serving_cost(knobs=ServingKnobs(max_concurrent=32,
+                                              kv_dtype_bytes=1), **kw)
+        assert more["device_s_per_token"] < base["device_s_per_token"]
+        assert fp8["device_s_per_token"] < more["device_s_per_token"]
+        shared = serving_cost(knobs=ServingKnobs(max_concurrent=32),
+                              shared_prefix_len=256, **kw)
+        assert shared["kv_traffic_bytes"] < more["kv_traffic_bytes"]
+
+
+# ---------------------------------------------------------------------------
+class TestServingDegradation:
+    def test_request_family_separates_serving_knobs(self):
+        from repro.service.degrade import request_family
+        params, _, batch = _decode_shapes()
+        mk = lambda sig: AdmissionRequest(  # noqa: E731
+            "j", _decode_fn, params, batch, serving=sig)
+        plain = request_family(mk(None))
+        paged = request_family(mk(ServingKnobs().signature()))
+        fp8 = request_family(mk(ServingKnobs(kv_dtype_bytes=1).signature()))
+        assert plain != paged != fp8
+        assert request_family(mk(ServingKnobs().signature())) == paged
+
+    def test_degraded_serving_decision_answers(self):
+        """A decode fn that always raises still gets an answer from the
+        degraded rungs — with the knob signature on the proxy request."""
+        def broken(params, cache, batch):
+            raise RuntimeError("tracer down")
+
+        params, cache, batch = _decode_shapes()
+        svc = AdmissionService(workers=1, cache=TraceCache())
+        d = svc.decide_serving(
+            "job", broken, params, cache, batch, capacity=1 << 40,
+            deadline_s=5.0, mix=RequestMix(buckets=((8, 8, 2),)),
+            knobs=ServingKnobs(), kv_bytes_per_token=4096)
+        assert d.degraded
+        assert d.provenance["source"] == "degraded"
+
+
+# ---------------------------------------------------------------------------
+class TestServeGateFamilies:
+    """Satellite: the serving gate across non-text families, including
+    no-fit and estimate-raises paths."""
+
+    @pytest.fixture(scope="class")
+    def vlm(self):
+        from repro.configs import get_smoke
+        return get_smoke("internvl2-1b")
+
+    @pytest.fixture(scope="class")
+    def audio(self):
+        from repro.configs import get_smoke
+        return get_smoke("musicgen-medium")
+
+    def _fits(self, cfg):
+        from repro.launch.serve import pick_batch
+        svc = AdmissionService(workers=1, cache=TraceCache())
+        batch, gate = pick_batch(cfg, 32, hbm_bytes=1 << 40,
+                                 candidates=(2, 1), service=svc)
+        assert batch == 2
+        assert gate["candidates"][0]["fits"]
+        assert gate["prefill"].peak_bytes > 0
+        return gate
+
+    def test_vlm_admits(self, vlm):
+        assert vlm.family == "vlm"
+        self._fits(vlm)
+
+    def test_audio_admits(self, audio):
+        assert audio.family == "audio"
+        self._fits(audio)
+
+    @pytest.mark.parametrize("arch", ["internvl2-1b", "musicgen-medium"])
+    def test_no_fit_is_explicit(self, arch):
+        from repro.configs import get_smoke
+        from repro.launch.serve import pick_batch
+        svc = AdmissionService(workers=1, cache=TraceCache())
+        batch, gate = pick_batch(get_smoke(arch), 32, hbm_bytes=64,
+                                 candidates=(2, 1), service=svc)
+        assert batch is None
+        assert len(gate["candidates"]) == 2
+        assert all(not c["fits"] for c in gate["candidates"])
+
+    @pytest.mark.parametrize("arch", ["internvl2-1b", "musicgen-medium"])
+    def test_estimate_raises_records_per_candidate(self, arch):
+        from repro.configs import get_smoke
+        from repro.launch.serve import pick_batch
+        svc = AdmissionService(workers=1, cache=TraceCache())
+        calls = {"n": 0}
+        real = svc.decide_serving
+
+        def flaky(*a, **kw):
+            calls["n"] += 1
+            if calls["n"] <= 2:     # decode raise fails the candidate
+                raise RuntimeError(f"transient trace failure {calls['n']}")
+            return real(*a, **kw)
+
+        svc.decide_serving = flaky
+        batch, gate = pick_batch(get_smoke(arch), 32, hbm_bytes=1 << 40,
+                                 candidates=(4, 2, 1), service=svc)
+        # batches 4 and 2 failed on their decode estimate, batch 1
+        # admitted
+        assert batch == 1
+        assert len(gate["errors"]) == 2
+        assert [e["batch"] for e in gate["errors"]] == [4, 2]
+        assert all("transient trace failure" in e["error"]
+                   for e in gate["errors"])
+        # the compact error slot keeps the LAST failure, per-candidate
+        # detail is no longer overwritten (satellite)
+        assert gate["error"] == gate["errors"][-1]["error"]
+
+    def test_store_dir_threads_through_library_calls(self, tmp_path):
+        """Satellite: ``pick_batch(service=None, store_dir=...)`` builds
+        a service WITH the persistent store — a second cold call answers
+        from disk instead of re-tracing."""
+        from repro.configs import get_smoke
+        from repro.launch.serve import pick_batch
+        cfg = get_smoke("starcoder2-3b")
+        sd = str(tmp_path / "store")
+        batch, gate = pick_batch(cfg, 32, hbm_bytes=1 << 40,
+                                 candidates=(1,), store_dir=sd)
+        assert batch == 1
+        assert os.path.isdir(sd) and len(os.listdir(sd)) > 0
+        batch2, gate2 = pick_batch(cfg, 32, hbm_bytes=1 << 40,
+                                   candidates=(1,), store_dir=sd)
+        assert batch2 == 1
+        assert gate2["decode"].provenance["source"] == "disk"
+
+
+# ---------------------------------------------------------------------------
+class TestServeMixGate:
+    def test_pick_serving_profiles_and_gates(self):
+        from repro.configs import get_smoke
+        from repro.launch.serve import pick_serving, serving_cache_profile
+        cfg = get_smoke("starcoder2-3b")
+        kv_tok, resident = serving_cache_profile(cfg, 64)
+        assert kv_tok > 0
+        assert resident == 0        # attention-only: everything pages
+        mix = RequestMix(buckets=((24, 8, 4), (8, 24, 4)))
+        decision, gate = pick_serving(cfg, mix, 1 << 40)
+        assert decision.admit
+        assert gate["kv_bytes_per_token"] == kv_tok
+        assert gate["serving"]["worst_case_peak_bytes"] \
+            == decision.peak_bytes
+
+    def test_ssm_family_has_resident_state(self):
+        from repro.configs import get_smoke
+        from repro.launch.serve import serving_cache_profile
+        cfg = get_smoke("xlstm-1.3b")
+        kv_tok, resident = serving_cache_profile(cfg, 64)
+        # recurrent state is length-independent: resident, not paged
+        assert resident > 0
+        assert kv_tok == 0
+
+    def test_serve_plan_wire_kind(self):
+        from repro.launch.served import handle_request
+        svc = AdmissionService(workers=1, cache=TraceCache())
+        resp = handle_request(svc, {
+            "kind": "serve_plan", "arch": "starcoder2-3b",
+            "mix": "192:64:16,64:192:16", "max_concurrent": 32,
+            "hbm_gib": 0.0042, "page_sizes": [8, 16],
+            "max_concurrents": [16, 32], "kv_dtypes": [1, 2]})
+        assert resp["ok"], resp
+        json.dumps(resp)            # line-JSON daemon safety
+        assert not resp["admit"]
+        assert resp["counter_offers"]
+        assert resp["breakdown"]["serving"]["knobs"]["max_concurrent"] \
+            == 32
+        offer = resp["counter_offers"][0]
+        assert offer["knob"] == "serving"
+        assert offer["serving"]["knobs"]["kv_dtype_bytes"] in (1, 2)
