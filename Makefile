@@ -3,7 +3,7 @@ export PYTHONPATH
 
 .PHONY: test test-fast chaos-test bench bench-check serve-bench \
 	plan-bench degrade-bench fleet-bench fleet-chaos offload-bench \
-	serve-plan-bench report
+	serve-plan-bench obs-bench report
 
 test:            ## tier-1 test suite
 	python -m pytest -x -q
@@ -63,6 +63,13 @@ offload-bench:   ## host-offload planning benchmark only
 # BENCH_estimator.json — the ISSUE 9 perf gate's record
 serve-plan-bench:  ## request-driven serving benchmark only
 	python -m benchmarks.perf_estimator --serving-only
+
+# merges the obs_* keys (instrumented-vs-bare warm decide rps,
+# bit-identity under instrumentation, Chrome-trace + Prometheus
+# round-trips) into BENCH_estimator.json — the ISSUE 10 perf gate's
+# record
+obs-bench:       ## observability-overhead benchmark only
+	python -m benchmarks.perf_estimator --obs-only
 
 report:          ## render artifact tables
 	python -m benchmarks.report

@@ -310,6 +310,31 @@ def perf_check(baseline_path: str = "BENCH_estimator.json",
     else:
         print("[bench-check] baseline predates request-driven serving; "
               "skipping that check (refresh BENCH_estimator.json)")
+    rec_obs = baseline.get("obs_overhead_frac")
+    if rec_obs is not None:
+        # ISSUE 10: the observability layer must stay effectively free
+        # on the warm admission path (<3% vs a bare service) and its
+        # two export formats must stay machine-readable — Chrome-trace
+        # JSON must load and Prometheus text must round-trip through
+        # the parser
+        from benchmarks.perf_estimator import quick_obs_snapshot
+        snap = quick_obs_snapshot()
+        obok = (snap["obs_overhead_frac"] <= 0.03
+                and snap["obs_trace_export_ok"]
+                and snap["obs_prometheus_roundtrip_ok"])
+        print(f"[bench-check] observability overhead: "
+              f"fresh={snap['obs_overhead_frac']*100:.1f}% "
+              f"recorded={rec_obs*100:.1f}% budget=3.0% "
+              f"(bare={snap['obs_bare_rps']:,.1f} rps, "
+              f"instrumented={snap['obs_instrumented_rps']:,.1f} rps), "
+              f"trace_export={snap['obs_trace_export_ok']}, "
+              f"prometheus_roundtrip="
+              f"{snap['obs_prometheus_roundtrip_ok']} -> "
+              f"{'OK' if obok else 'REGRESSION'}")
+        ok = ok and obok
+    else:
+        print("[bench-check] baseline predates the observability layer; "
+              "skipping that check (refresh BENCH_estimator.json)")
     return 0 if ok else 1
 
 

@@ -43,6 +43,7 @@ from typing import Callable, Sequence
 
 import jax
 
+from ..obs import spans as obs_spans
 from .allocator import AllocatorPolicy, CUDA_CACHING
 from .analyzer import classify_blocks, phase_peaks
 from .cache import (BlockInfo, GLOBAL_TRACE_CACHE, TraceCache, TracedPhase,
@@ -375,9 +376,11 @@ class XMemEstimator:
                 idx += n
             return fn(*rebuilt)
 
-        trace, tr, out_shape, closed = trace_fn_with_shape(
-            flat_fn, *flat, arg_kinds=kinds, arg_scopes=scopes,
-            scan_unroll_cap=self.scan_unroll_cap, phase=phase)
+        with obs_spans.span("estimator.trace", phase=str(phase),
+                            tag=tag):
+            trace, tr, out_shape, closed = trace_fn_with_shape(
+                flat_fn, *flat, arg_kinds=kinds, arg_scopes=scopes,
+                scan_unroll_cap=self.scan_unroll_cap, phase=phase)
         out_kinds = out_kind_fn(out_shape) if out_kind_fn is not None else None
         kind_by_bid = {}
         if out_kinds is not None:
@@ -802,7 +805,9 @@ class XMemEstimator:
                   if N >= 2 else [])
         pb = PeriodicBlocks(prefix, cyc, pb.n_cycles, pb.period, suffix,
                             meta=pb.meta)
-        sim = sim_runner.replay_spaces(pb)
+        with obs_spans.span("estimator.replay", engine=self.engine,
+                            num_blocks=pb.num_blocks):
+            sim = sim_runner.replay_spaces(pb)
         is_cycle = (lambda b: N >= 3 and b.iteration == 1)
         persistent = sum(
             b.sharded_size * (pb.n_cycles if is_cycle(b) else 1)

@@ -295,7 +295,8 @@ def iter_cells():
 def xmem_gate(arch: str, hbm_gib: float = 0.25, seq: int = 64,
               batches: tuple = (1, 2, 4, 8, 12, 16, 24, 32, 48, 64),
               out_dir: str = "artifacts/dryrun", microbatches: int = 1,
-              service=None, store_dir: str | None = None) -> dict:
+              service=None, store_dir: str | None = None,
+              obs=None, timeline_out: str | None = None) -> dict:
     """Estimator-side admission gate for a dry-run cell family: sweep
     the candidate batch sizes through the admission service's batched
     path (``AdmissionService.decide_sweep`` -> columnar trace
@@ -321,7 +322,8 @@ def xmem_gate(arch: str, hbm_gib: float = 0.25, seq: int = 64,
     tpolicy = TrainPolicy(optimizer="adamw", microbatches=m)
     fwd_bwd, update, opt_init = make_estimator_hooks(cfg, tpolicy)
     params = M.abstract_params(cfg)
-    svc = service or AdmissionService(workers=1, store_dir=store_dir)
+    svc = service or AdmissionService(workers=1, store_dir=store_dir,
+                                      obs=obs)
     hbm = int(hbm_gib * 2**30)
     reqs = [AdmissionRequest(
         job_id=f"{cfg.name}-b{b}", fwd_bwd_fn=fwd_bwd, params=params,
@@ -339,6 +341,16 @@ def xmem_gate(arch: str, hbm_gib: float = 0.25, seq: int = 64,
     }
     record["admitted"] = [s["batch"] for s in record["settings"]
                           if s["fits"]]
+    cid = decisions[0].correlation_id if decisions else None
+    if cid is not None:
+        record["correlation_id"] = cid
+    if timeline_out is not None:
+        # Perfetto memory timeline of the largest batch's replay
+        rep = next((d.report for d in reversed(decisions)
+                    if d.report is not None), None)
+        if rep is not None:
+            from ..obs.timeline import write_timeline
+            record["timeline"] = write_timeline(rep, timeline_out)
     os.makedirs(out_dir, exist_ok=True)
     _write(os.path.join(out_dir, f"{arch}__xmem_gate.json"), record)
     return record
@@ -429,15 +441,22 @@ def main():
     ap.add_argument("--microbatches", type=int, default=1,
                     help="gradient-accumulation factor for --xmem-gate "
                          "(the candidate grid snaps to its multiples)")
+    ap.add_argument("--timeline-out", default=None,
+                    help="write a Perfetto/chrome-trace memory timeline "
+                         "of the gated replay to this path "
+                         "(--xmem-gate only)")
     args = ap.parse_args()
 
     if args.xmem_plan:
+        from ..obs import Observability
         from ..plan import run_plan_search
+        from ..service import AdmissionService
         devices = tuple(int(d) for d in args.devices.split(","))
+        svc = AdmissionService(workers=1, obs=Observability(enabled=True))
         r = run_plan_search(args.xmem_plan, int(args.hbm_gib * 2**30),
                             seq=args.plan_seq, batch=args.plan_batch,
                             microbatches=args.microbatches,
-                            devices=devices)
+                            devices=devices, service=svc)
         os.makedirs(args.out, exist_ok=True)
         _write(os.path.join(args.out, f"{args.xmem_plan}__xmem_plan.json"),
                r)
@@ -448,6 +467,8 @@ def main():
             print(f"[xmem-plan] {r['arch']}: {len(r['counter_offers'])} "
                   f"offers from {s['candidates']} candidates "
                   f"({s['fresh_traces']} fresh traces)")
+        if r.get("correlation_id"):
+            print(f"[xmem-plan] correlation_id={r['correlation_id']}")
         return
 
     if args.xmem_mesh_gate:
@@ -463,14 +484,21 @@ def main():
         return
 
     if args.xmem_gate:
+        from ..obs import Observability
         r = xmem_gate(args.xmem_gate, hbm_gib=args.hbm_gib,
-                      out_dir=args.out, microbatches=args.microbatches)
+                      out_dir=args.out, microbatches=args.microbatches,
+                      obs=Observability(enabled=True),
+                      timeline_out=args.timeline_out)
         s = r["sweep"]
         print(f"[xmem-gate] {r['arch']}: admitted batches "
               f"{r['admitted']} of "
               f"{[x['batch'] for x in r['settings']]} "
               f"({s['traced']} traced / {s['interpolated']} "
               f"interpolated)")
+        if r.get("correlation_id"):
+            print(f"[xmem-gate] correlation_id={r['correlation_id']}")
+        if r.get("timeline"):
+            print(f"[xmem-gate] timeline written to {r['timeline']}")
         return
 
     meshes = (False, True) if (args.both_meshes or args.all) \

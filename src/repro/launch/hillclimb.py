@@ -174,7 +174,8 @@ CELLS = {"A": cell_A, "B": cell_B, "C": cell_C}
 def xmem_batch_hillclimb(arch: str, hbm_bytes: int, seq: int = 64,
                          max_batch: int = 512, smoke: bool = True,
                          verbose: bool = True,
-                         microbatches: int = 1) -> dict:
+                         microbatches: int = 1, obs=None,
+                         timeline_out: str | None = None) -> dict:
     """Estimator-driven batch-size search: the memory-gate workload the
     estimation fast path exists for (ISSUE 1, re-based on the sweep
     service in ISSUE 2).
@@ -220,7 +221,14 @@ def xmem_batch_hillclimb(arch: str, hbm_bytes: int, seq: int = 64,
         fwd_bwd, params,
         input_specs(cfg, smoke_shape(seq_len=seq, global_batch=gb)),
         update_fn=update, opt_init_fn=opt_init) for gb in grid]
-    result = svc.estimate_many(points)
+    cid = None
+    if obs is not None and obs.enabled:
+        # one correlation ID covers the whole gated search — every
+        # trace/replay span under it carries the same ID
+        with obs.request("hillclimb", job_id=f"{cfg.name}-climb") as cid:
+            result = svc.estimate_many(points)
+    else:
+        result = svc.estimate_many(points)
     probes = []
     best = None
     for gb, rep in zip(grid, result.reports):
@@ -239,6 +247,19 @@ def xmem_batch_hillclimb(arch: str, hbm_bytes: int, seq: int = 64,
            "sweep": {k: result.stats[k] for k in
                      ("points", "traced", "interpolated", "fallback",
                       "wall_s")}}
+    if cid is not None:
+        out["correlation_id"] = cid
+        if verbose:
+            print(f"[xmem-hillclimb] correlation_id={cid}", flush=True)
+    if timeline_out is not None:
+        rep_tl = (best[1] if best is not None
+                  else result.reports[-1] if result.reports else None)
+        if rep_tl is not None:
+            from ..obs.timeline import write_timeline
+            out["timeline"] = write_timeline(rep_tl, timeline_out)
+            if verbose:
+                print(f"[xmem-hillclimb] timeline written to "
+                      f"{timeline_out}", flush=True)
     if verbose:
         s = out["sweep"]
         print(f"[xmem-hillclimb] sweep: {s['points']} points, "
@@ -344,18 +365,29 @@ def main():
     ap.add_argument("--microbatches", type=int, default=1,
                     help="gradient-accumulation factor for --xmem-batch "
                          "(the sweep grid snaps to its multiples)")
+    ap.add_argument("--timeline-out", default=None,
+                    help="write a Perfetto/chrome-trace memory timeline "
+                         "of the winning probe's replay to this path "
+                         "(--xmem-batch only)")
     args = ap.parse_args()
     if args.xmem_plan:
+        from ..obs import Observability
         from ..plan import run_plan_search
+        from ..service import AdmissionService
         devices = tuple(int(d) for d in args.devices.split(","))
+        svc = AdmissionService(workers=1,
+                               obs=Observability(enabled=True))
         r = run_plan_search(args.xmem_plan, int(args.hbm_gib * 2**30),
                             seq=args.seq, batch=args.batch,
                             microbatches=args.microbatches,
-                            remat=args.remat, devices=devices)
+                            remat=args.remat, devices=devices,
+                            service=svc)
         os.makedirs(args.out, exist_ok=True)
         path = os.path.join(args.out, f"xmem_plan__{args.xmem_plan}.json")
         with open(path, "w") as f:
             json.dump(r, f, indent=1)
+        if r.get("correlation_id"):
+            print(f"[xmem-plan] correlation_id={r['correlation_id']}")
         print(f"[xmem-plan] wrote {path}")
         return
     if args.xmem_mesh:
@@ -370,9 +402,12 @@ def main():
         print(f"[xmem-mesh] wrote {path}")
         return
     if args.xmem_batch:
+        from ..obs import Observability
         r = xmem_batch_hillclimb(args.xmem_batch,
                                  int(args.hbm_gib * 2**30),
-                                 microbatches=args.microbatches)
+                                 microbatches=args.microbatches,
+                                 obs=Observability(enabled=True),
+                                 timeline_out=args.timeline_out)
         os.makedirs(args.out, exist_ok=True)
         path = os.path.join(args.out, f"xmem_batch__{args.xmem_batch}.json")
         with open(path, "w") as f:

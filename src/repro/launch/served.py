@@ -208,7 +208,8 @@ def fleet_scheduler(service, d: dict, server=None):
                       getattr(server, "fleet_nodes", None) or 4))
         hbm = float(d.get("fleet_hbm_gib",
                           getattr(server, "fleet_hbm_gib", None) or 16.0))
-        sched = FleetScheduler(service, build_fleet(n, int(hbm * 2**30)))
+        sched = FleetScheduler(service, build_fleet(n, int(hbm * 2**30)),
+                               obs=service.obs)
         service._fleet_scheduler = sched
     return sched
 
@@ -216,6 +217,9 @@ def fleet_scheduler(service, d: dict, server=None):
 def handle_request(service, d: dict, server=None) -> dict:
     """One wire request -> one JSON-safe response dict."""
     kind = d.get("kind", "train")
+    service.obs.registry.counter(
+        "xmem_daemon_requests_total",
+        "Daemon requests by wire kind", labels={"kind": kind}).inc()
     try:
         if kind == "ping":
             return {"ok": True, "pong": True}
@@ -226,6 +230,12 @@ def handle_request(service, d: dict, server=None) -> dict:
             if server is not None:
                 h["daemon"] = server.daemon_stats()
             return {"ok": True, "health": h}
+        if kind == "metrics":
+            # the whole registry — service + daemon + fleet + collectors
+            # — in both wire shapes, from the one source of truth
+            reg = service.obs.registry
+            return {"ok": True, "metrics": reg.to_json(),
+                    "prometheus": reg.to_prometheus()}
         if kind == "shutdown":
             return {"ok": True, "shutdown": True}
         if kind == "train":
@@ -342,7 +352,7 @@ class _Handler(socketserver.StreamRequestHandler):
                     return None
                 if not chunk or chunk.endswith(b"\n"):
                     break
-            self.server.oversized += 1
+            self.server._m_oversized.inc()
             self._send({"ok": False, "kind": "error",
                         "error": f"request line exceeds "
                                  f"{limit} bytes"})
@@ -373,7 +383,7 @@ class _Handler(socketserver.StreamRequestHandler):
                 if not isinstance(d, dict):
                     raise ValueError("request must be a JSON object")
             except ValueError as e:
-                server.malformed += 1
+                server._m_malformed.inc()
                 self._send({"ok": False, "kind": "error",
                             "error": f"bad JSON: {e}"})
                 continue
@@ -382,7 +392,7 @@ class _Handler(socketserver.StreamRequestHandler):
                             "error": "daemon is shutting down"})
                 continue
             if not server.enter():
-                server.rejected_overload += 1
+                server._m_rejected.inc()
                 self._send({"ok": False, "kind": "overloaded",
                             "error": f"daemon at max in-flight "
                                      f"({server.max_in_flight})"})
@@ -423,24 +433,53 @@ class AdmissionServer(socketserver.ThreadingTCPServer):
         self.max_in_flight = int(max_in_flight)
         self.faults = faults
         self.draining = False
-        self.in_flight = 0
-        self.rejected_overload = 0
-        self.malformed = 0
-        self.oversized = 0
+        # daemon counters live in the service's metrics registry
+        # (ISSUE 10 satellite): daemon_stats(), health's "daemon"
+        # block, and the "metrics" wire kind all read the same
+        # objects, so the three surfaces cannot drift
+        reg = service.obs.registry
+        self._m_in_flight = reg.gauge(
+            "xmem_daemon_in_flight", "Requests currently executing")
+        self._m_rejected = reg.counter(
+            "xmem_daemon_rejected_overload_total",
+            "Requests shed at the in-flight cap")
+        self._m_malformed = reg.counter(
+            "xmem_daemon_malformed_total", "Unparseable request lines")
+        self._m_oversized = reg.counter(
+            "xmem_daemon_oversized_total",
+            "Request lines over --max-line-bytes")
+        reg.register_collector("xmem_daemon", self.daemon_stats)
         self._flight_lock = threading.Lock()
         self._idle = threading.Condition(self._flight_lock)
 
+    # read-only legacy surface over the registry counters
+    @property
+    def in_flight(self) -> int:
+        return self._m_in_flight.value
+
+    @property
+    def rejected_overload(self) -> int:
+        return self._m_rejected.value
+
+    @property
+    def malformed(self) -> int:
+        return self._m_malformed.value
+
+    @property
+    def oversized(self) -> int:
+        return self._m_oversized.value
+
     def enter(self) -> bool:
         with self._flight_lock:
-            if self.in_flight >= self.max_in_flight:
+            if self._m_in_flight.value >= self.max_in_flight:
                 return False
-            self.in_flight += 1
+            self._m_in_flight.inc()
             return True
 
     def leave(self) -> None:
         with self._flight_lock:
-            self.in_flight -= 1
-            if self.in_flight == 0:
+            self._m_in_flight.dec()
+            if self._m_in_flight.value == 0:
                 self._idle.notify_all()
 
     def daemon_stats(self) -> dict:
@@ -502,13 +541,24 @@ def main():
                     help="fleet size for 'place'/'evacuate' requests")
     ap.add_argument("--fleet-hbm-gib", type=float, default=None,
                     help="per-node HBM (GiB) for the fleet scheduler")
+    ap.add_argument("--metrics", action="store_true",
+                    help="enable observability (spans + correlation "
+                         "IDs); the 'metrics' wire kind serves the "
+                         "registry either way")
+    ap.add_argument("--audit-dir", default=None,
+                    help="append-only decision audit trail directory "
+                         "(crash-safe JSONL; implies --metrics)")
     args = ap.parse_args()
 
     from ..service import AdmissionService
+    obs = None
+    if args.metrics or args.audit_dir:
+        from ..obs import Observability
+        obs = Observability(enabled=True, audit_dir=args.audit_dir)
     service = AdmissionService(workers=args.workers,
                                store_dir=args.store_dir,
                                store_max_entries=args.store_max_entries,
-                               deadline_s=args.deadline_s)
+                               deadline_s=args.deadline_s, obs=obs)
     if args.once:
         d = json.loads(sys.stdin.readline())
         print(json.dumps(handle_request(service, d)))

@@ -39,6 +39,7 @@ from typing import Any
 
 from ..configs.base import ModelConfig, ShapeSpec
 from ..core.sweep import MeshTopology, topology_grid
+from ..obs import spans as obs_spans
 from ..service.admission import (AdmissionDecision, AdmissionRequest,
                                  AdmissionService)
 from ..train.train_step import TrainPolicy, make_estimator_hooks
@@ -263,13 +264,16 @@ class PlanResult:
         return len(self.offers)
 
     def to_json(self) -> dict:
-        return {
+        d = {
             "admit": self.baseline.admit,
             "peak_bytes": self.baseline.peak_bytes,
             "capacity": self.baseline.capacity,
             "counter_offers": [o.to_json() for o in self.offers],
             "stats": self.stats,
         }
+        if self.baseline.correlation_id is not None:
+            d["correlation_id"] = self.baseline.correlation_id
+        return d
 
 
 # ---------------------------------------------------------------------------
@@ -403,6 +407,43 @@ class RemediationPlanner:
         decision, when the planner has to make it, is accounted
         separately as ``baseline_traces``).
         """
+        # ISSUE 10: capture the rejecting decision's correlation ID
+        # NOW — candidate probe decides below re-activate their own
+        # scoped contexts — so the plan audit record chains to the
+        # rejection it remediates
+        cid = obs_spans.current_correlation_id()
+        with obs_spans.span("planner.plan", job_id=job_id):
+            result = self._plan_search(
+                cfg, policy, shape, capacity=capacity, space=space,
+                job_id=job_id, baseline=baseline,
+                shard_factor_fn=shard_factor_fn,
+                collective_specs=collective_specs)
+        self._audit_plan("training", job_id, cid, result)
+        return result
+
+    def _audit_plan(self, mode: str, job_id: str, cid: str | None,
+                    result: "PlanResult") -> None:
+        """One audit record per planner search (kind="plan")."""
+        obs = getattr(self.service, "obs", None)
+        if obs is None or obs.audit is None:
+            return
+        obs.record(
+            "plan", correlation_id=cid, mode=mode, job_id=job_id,
+            offers=[{"knob": o.knob, "global_batch": o.global_batch,
+                     "peak_bytes": o.peak_bytes,
+                     "slowdown": o.slowdown}
+                    for o in result.offers[:5]],
+            stats={k: result.stats.get(k) for k in
+                   ("candidates", "feasible", "offers",
+                    "fresh_traces", "already_fits")})
+
+    def _plan_search(self, cfg: ModelConfig, policy: TrainPolicy,
+                     shape: ShapeSpec, *, capacity: int,
+                     space: PlanSpace | None = None,
+                     job_id: str = "job",
+                     baseline: AdmissionDecision | None = None,
+                     shard_factor_fn=None,
+                     collective_specs=()) -> PlanResult:
         from ..configs.registry import input_specs
         from ..models import model as M
         space = space or PlanSpace()
@@ -613,6 +654,18 @@ class RemediationPlanner:
         the cheapest modeled device-time per generated token, and each
         reproduces bit-identically via a direct ``decide_serving`` with
         ``CounterOffer.serving_knobs()``."""
+        cid = obs_spans.current_correlation_id()
+        with obs_spans.span("planner.plan_serving", job_id=job_id):
+            result = self._plan_serving_search(
+                ctx, capacity=capacity, job_id=job_id,
+                baseline=baseline)
+        self._audit_plan("serving", job_id, cid, result)
+        return result
+
+    def _plan_serving_search(self, ctx: ServingPlanContext, *,
+                             capacity: int, job_id: str = "serve",
+                             baseline: AdmissionDecision | None = None
+                             ) -> PlanResult:
         from ..core.orchestrator import ServingKnobs
         from .cost import serving_cost
         svc = self.service

@@ -39,6 +39,8 @@ import dataclasses
 import time
 from typing import Any
 
+from ..obs import CounterDict, Observability
+from ..obs import spans as obs_spans
 from ..service.cluster import JobArrival
 from ..train.elastic import StragglerMonitor
 from .fleet import Assignment, Fleet
@@ -110,7 +112,8 @@ class FleetScheduler:
 
     def __init__(self, service, fleet: Fleet, *, colocate: bool = True,
                  preempt: bool = True, backfill: bool = True,
-                 deadline_s: float | None = None):
+                 deadline_s: float | None = None,
+                 obs: Observability | None = None):
         self.service = service
         self.fleet = fleet
         self.colocate = colocate
@@ -119,16 +122,36 @@ class FleetScheduler:
         self.deadline_s = deadline_s
         self._node_index = {nid: i for i, nid in enumerate(fleet.nodes)}
         self.monitor = StragglerMonitor(len(fleet.nodes))
-        self.counters = {k: 0 for k in (
-            "placed", "colocated", "backfills", "preemptions",
-            "preempted_lost", "lost", "evacuations", "evacuated",
-            "re_placed", "lost_after_evacuation", "migrations")}
+        self.obs = obs if obs is not None else Observability(enabled=False)
+        self.counters = CounterDict(
+            ("placed", "colocated", "backfills", "preemptions",
+             "preempted_lost", "lost", "evacuations", "evacuated",
+             "re_placed", "lost_after_evacuation", "migrations"),
+            registry=self.obs.registry, name="xmem_fleet_events_total",
+            label="event", help="Fleet scheduler placement/evacuation events")
+        self._m_evac_s = self.obs.registry.histogram(
+            "xmem_fleet_evacuation_seconds",
+            help="Evacuation latency (displacement to re-placement)")
+        self.obs.registry.register_collector("xmem_fleet", lambda: {
+            "fragmentation": self.fleet.fragmentation(),
+            "utilization": self.fleet.utilization(),
+            "jobs_resident": len(self.fleet.assignments)})
 
     # -- placement -----------------------------------------------------------
     def place(self, job: JobArrival, tick: int = 0, *,
               allow_preempt: bool | None = None,
               source: str = "decide") -> PlacementOutcome:
         """Place one arrival (see module docstring for the policy)."""
+        with obs_spans.span("fleet.place", job_id=job.job_id,
+                            source=source):
+            out = self._place(job, tick, allow_preempt=allow_preempt,
+                              source=source)
+        self._audit_place(out, tick)
+        return out
+
+    def _place(self, job: JobArrival, tick: int = 0, *,
+               allow_preempt: bool | None = None,
+               source: str = "decide") -> PlacementOutcome:
         t0 = time.perf_counter()
         allow_preempt = (self.preempt if allow_preempt is None
                          else allow_preempt)
@@ -186,6 +209,41 @@ class FleetScheduler:
         self.counters["placed"] += 1
         if any(len(self.fleet.residents(nid)) > 1 for nid in a.shares):
             self.counters["colocated"] += 1
+
+    def _audit_place(self, out: PlacementOutcome, tick: int) -> None:
+        """One audit record per placement attempt, chained to the
+        admission decision's correlation ID (the same ID the planner's
+        counter-offer record carries — reject → plan → place is one
+        trail)."""
+        if self.obs.audit is None:
+            return
+        # "outcome", not "kind": the record kind is "place"
+        rec = {"job_id": out.job_id, "placed": out.placed,
+               "outcome": out.kind, "nodes": out.node_ids, "tick": tick,
+               "reason": out.reason, "wall_s": round(out.wall_s, 6)}
+        cid = None
+        if out.decision is not None:
+            cid = getattr(out.decision, "correlation_id", None)
+            rec.update(rung=out.decision.rung,
+                       peak_bytes=out.decision.peak_bytes,
+                       safe_threshold=out.decision.safe_threshold,
+                       degraded=out.decision.degraded)
+        if out.offer is not None:
+            rec["offer"] = {"knob": out.offer.knob,
+                            "safe_threshold": out.offer.safe_threshold}
+        if out.preempted or out.preempted_lost:
+            rec["preempted"] = list(out.preempted)
+            rec["preempted_lost"] = list(out.preempted_lost)
+        self.obs.record("place", correlation_id=cid, **rec)
+
+    def _audit_evacuation(self, out: EvacuationOutcome,
+                          tick: int) -> None:
+        if self.obs.audit is None:
+            return
+        self.obs.record(
+            "evacuate", node=out.node_id, event=out.event, tick=tick,
+            displaced=list(out.displaced), replaced=list(out.replaced),
+            lost=list(out.lost), wall_s=round(out.wall_s, 6))
 
     def _lost(self, job: JobArrival, decision, reason: str, t0: float,
               tick: int) -> PlacementOutcome:
@@ -332,19 +390,23 @@ class FleetScheduler:
         simulator restores it later) / ``node.shrink`` (partial
         capacity loss, node stays up)."""
         t0 = time.perf_counter()
-        if event == "node.shrink":
-            displaced = self.fleet.shrink(node_id, shrink_frac)
-        else:
-            displaced = self.fleet.fail(node_id)
-        self.monitor.forget(self._node_index[node_id])
-        replaced, lost = self._replace_all(displaced, tick)
+        with obs_spans.span("fleet.evacuate", node=node_id, event=event):
+            if event == "node.shrink":
+                displaced = self.fleet.shrink(node_id, shrink_frac)
+            else:
+                displaced = self.fleet.fail(node_id)
+            self.monitor.forget(self._node_index[node_id])
+            replaced, lost = self._replace_all(displaced, tick)
         self.counters["evacuations"] += 1
         self.counters["evacuated"] += len(displaced)
         self.counters["re_placed"] += len(replaced)
         self.counters["lost_after_evacuation"] += len(lost)
-        return EvacuationOutcome(
+        out = EvacuationOutcome(
             node_id, event, [a.job_id for a in displaced], replaced,
             lost, wall_s=time.perf_counter() - t0)
+        self._m_evac_s.observe(out.wall_s)
+        self._audit_evacuation(out, tick)
+        return out
 
     def _replace_all(self, displaced, tick: int) -> tuple[list, list]:
         replaced, lost = [], []
@@ -439,9 +501,12 @@ class FleetScheduler:
             self.counters["evacuated"] += len(displaced)
             self.counters["re_placed"] += len(replaced)
             self.counters["lost_after_evacuation"] += len(lost)
-            out.append(EvacuationOutcome(
+            ev = EvacuationOutcome(
                 nid, "straggler", [a.job_id for a in displaced],
-                replaced, lost, wall_s=time.perf_counter() - t0))
+                replaced, lost, wall_s=time.perf_counter() - t0)
+            self._m_evac_s.observe(ev.wall_s)
+            self._audit_evacuation(ev, tick)
+            out.append(ev)
         return out
 
     def stats(self) -> dict:

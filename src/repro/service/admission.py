@@ -40,6 +40,7 @@ existing bench gate.
 from __future__ import annotations
 
 import contextlib
+import contextvars
 import copy
 import dataclasses
 import math
@@ -51,6 +52,8 @@ from typing import Any, Callable, Sequence
 from ..core.cache import GLOBAL_TRACE_CACHE, TraceCache
 from ..core.estimator import EstimateReport, XMemEstimator
 from ..core.sweep import SweepPoint, SweepService
+from ..obs import CounterDict, Observability
+from ..obs import spans as obs_spans
 from .degrade import (RUNG_ANALYTIC, RUNG_EXACT, RUNG_SWEEP, DecisionLog,
                       DegradePolicy, RungTimeout, analytic_request_bound,
                       backoff_delays, request_family, request_scalar)
@@ -116,6 +119,10 @@ class AdmissionDecision:
     margin: float = 1.0             # safety widening applied to the peak
     raw_peak_bytes: int | None = None   # rung estimate before widening
     deadline_s: float | None = None     # budget this answer honored
+    # per-request correlation ID (ISSUE 10) — set only when the
+    # service runs with observability enabled; the same ID appears on
+    # every span and audit record this decision produced
+    correlation_id: str | None = None
 
     @property
     def degraded(self) -> bool:
@@ -135,6 +142,8 @@ class AdmissionDecision:
         if self.counter_offers is not None:
             d["counter_offers"] = [o.to_json()
                                    for o in self.counter_offers]
+        if self.correlation_id is not None:
+            d["correlation_id"] = self.correlation_id
         return d
 
 
@@ -167,10 +176,14 @@ def _call_with_deadline(fn: Callable[[], Any], timeout: float | None):
         return fn()
     box: dict = {}
     done = threading.Event()
+    # ContextVars don't follow a fresh thread — copy the caller's
+    # context so the observability span/correlation state (and any
+    # other contextvar) survives onto the rung thread
+    ctx = contextvars.copy_context()
 
     def run():
         try:
-            box["value"] = fn()
+            box["value"] = ctx.run(fn)
         except BaseException as e:   # noqa: BLE001 — re-raised below
             box["error"] = e
         finally:
@@ -205,7 +218,7 @@ class AdmissionService:
                  store_max_entries: int = 256,
                  degrade: DegradePolicy | None = None,
                  deadline_s: float | None = None,
-                 faults=None):
+                 faults=None, obs: Observability | None = None):
         self._factory = estimator_factory or XMemEstimator.for_tpu
         store = None
         if store_dir is not None:
@@ -240,14 +253,64 @@ class AdmissionService:
         # decide_sweep runs on ONE estimator (SweepService is stateful)
         # — serialize it; decide()/submit() stay concurrent
         self._sweep_lock = threading.Lock()
-        self.requests_served = 0
-        self.rung_counts = {RUNG_EXACT: 0, RUNG_SWEEP: 0, RUNG_ANALYTIC: 0}
-        self.retry_count = 0
-        self.timeout_count = 0
-        self.abandoned_rungs = 0
-        self._in_flight = 0
+        # ISSUE 10: every service owns an Observability handle. The
+        # metrics registry is the SINGLE source for the service
+        # counters — stats()/health() and the daemon's metrics kind
+        # all read the same objects; spans/audit/correlation IDs only
+        # activate when the handle is enabled (default: disabled).
+        self.obs = obs if obs is not None else Observability(enabled=False)
+        reg = self.obs.registry
+        self._m_requests = reg.counter(
+            "xmem_service_requests_total", "decisions served")
+        self.rung_counts = CounterDict(
+            (RUNG_EXACT, RUNG_SWEEP, RUNG_ANALYTIC), registry=reg,
+            name="xmem_service_rung_total", label="rung",
+            help="decisions answered per degradation-ladder rung")
+        self._m_retries = reg.counter(
+            "xmem_service_retries_total",
+            "transient-fault retries on the exact rung")
+        self._m_timeouts = reg.counter(
+            "xmem_service_timeouts_total", "rung deadline expiries")
+        self._m_abandoned = reg.counter(
+            "xmem_service_abandoned_rungs_total",
+            "rungs abandoned at the deadline")
+        self._m_in_flight = reg.gauge(
+            "xmem_service_in_flight", "decisions currently executing")
+        self._m_decide_s = reg.histogram(
+            "xmem_service_decide_seconds", "decide wall time")
+        reg.register_collector("xmem_trace_cache",
+                               lambda: self.cache.stats())
+        reg.register_collector("xmem_decision_log",
+                               lambda: self.log.stats())
+        reg.register_collector(
+            "xmem_faults",
+            lambda: self.faults.stats() if self.faults is not None
+            else {})
         self.sweep = SweepService(self._make_estimator(),
                                   processes=processes)
+
+    # legacy counter surface — reads delegate to the registry so the
+    # stats/health dict shapes (pinned by tests and old callers) can
+    # never drift from the metrics export
+    @property
+    def requests_served(self) -> int:
+        return self._m_requests.value
+
+    @property
+    def retry_count(self) -> int:
+        return self._m_retries.value
+
+    @property
+    def timeout_count(self) -> int:
+        return self._m_timeouts.value
+
+    @property
+    def abandoned_rungs(self) -> int:
+        return self._m_abandoned.value
+
+    @property
+    def _in_flight(self) -> int:
+        return self._m_in_flight.value
 
     # -- estimator plumbing --------------------------------------------------
     def _make_estimator(self) -> XMemEstimator:
@@ -287,6 +350,7 @@ class AdmissionService:
         if pool is not None:
             pool.shutdown()
         self.sweep.close()
+        self.obs.close()
 
     def __enter__(self):
         return self
@@ -331,9 +395,37 @@ class AdmissionService:
         return self.degrade.default_deadline_s
 
     def _count_rung(self, rung: str, served: int = 1) -> None:
-        with self._lock:
-            self.requests_served += served
-            self.rung_counts[rung] = self.rung_counts.get(rung, 0) + served
+        self._m_requests.inc(served)
+        self.rung_counts.inc(rung, served)
+
+    def _audit_decision(self, decision: AdmissionDecision,
+                        via: str = "decide") -> None:
+        """One audit record per decision (kind="decide") carrying the
+        correlation ID, cache provenance, rung, and chosen offer — the
+        offline reject→plan→retry reconstruction substrate."""
+        obs = self.obs
+        if obs.audit is None:
+            return
+        rec = {"via": via, "job_id": decision.job_id,
+               "admit": decision.admit,
+               "capacity": decision.capacity,
+               "peak_bytes": decision.peak_bytes,
+               "safe_threshold": decision.safe_threshold,
+               "rung": decision.rung, "margin": decision.margin,
+               "degraded": decision.degraded,
+               "source": decision.provenance.get("source"),
+               "wall_s": decision.wall_s}
+        offers = decision.counter_offers
+        if offers is not None:
+            rec["n_offers"] = len(offers)
+            if offers:
+                top = offers[0].to_json()
+                rec["chosen_offer"] = {
+                    k: top.get(k) for k in
+                    ("knob", "global_batch", "microbatches",
+                     "peak_bytes", "slowdown")}
+        obs.record("decide", correlation_id=decision.correlation_id,
+                   **rec)
 
     # -- decisions -----------------------------------------------------------
     def decide(self, req: AdmissionRequest) -> AdmissionDecision:
@@ -343,21 +435,33 @@ class AdmissionService:
         can propagate."""
         t0 = time.perf_counter()
         deadline_s = self._deadline_for(req)
-        with self._lock:
-            self._in_flight += 1
+        self._m_in_flight.inc()
         try:
-            if deadline_s is None and self.faults is None:
-                # fault-free fast path: exact rung inline, no extra
-                # threads — bit-identical to the pre-ladder service
-                decision = self._decide_exact(req, t0, None)
-                return self._attach_counter_offers(req, decision)
-            decision = self._decide_ladder(req, deadline_s, t0)
-            if not decision.degraded:
-                decision = self._attach_counter_offers(req, decision)
-            return decision
+            # ISSUE 10: mint the per-request correlation ID and open
+            # the root span. decide() executes ON the worker thread
+            # for submit()/decide_many(), so the context var reaches
+            # every layer this decision touches. Observers never feed
+            # back into the decision — the instrumented path stays
+            # bit-identical.
+            with self.obs.request("decide", job_id=req.job_id) as cid:
+                if deadline_s is None and self.faults is None:
+                    # fault-free fast path: exact rung inline, no
+                    # extra threads — bit-identical to the pre-ladder
+                    # service
+                    decision = self._decide_exact(req, t0, None)
+                    decision = self._attach_counter_offers(req, decision)
+                else:
+                    decision = self._decide_ladder(req, deadline_s, t0)
+                    if not decision.degraded:
+                        decision = self._attach_counter_offers(req,
+                                                               decision)
+                if cid is not None:
+                    decision.correlation_id = cid
+                self._m_decide_s.observe(decision.wall_s)
+                self._audit_decision(decision)
+                return decision
         finally:
-            with self._lock:
-                self._in_flight -= 1
+            self._m_in_flight.dec()
 
     def _decide_exact(self, req: AdmissionRequest, t0: float,
                       deadline_s: float | None,
@@ -390,7 +494,8 @@ class AdmissionService:
                 est.orchestrator.policy = prev_policy
             return rep, _provenance(cache, before), min_cap
 
-        rep, prov, min_cap = _call_with_deadline(run, timeout)
+        with obs_spans.span("rung.exact", job_id=req.job_id):
+            rep, prov, min_cap = _call_with_deadline(run, timeout)
         self._count_rung(RUNG_EXACT)
         self._record_exact(req, rep)
         decision = self._decision(req, rep, prov,
@@ -437,14 +542,13 @@ class AdmissionService:
                     # never sleep past the budget — keep enough of it to
                     # still answer from a lower rung
                     delay = max(min(delay, remaining * 0.5), 0.0)
-                with self._lock:
-                    self.retry_count += 1
+                self._m_retries.inc()
+                obs_spans.event("rung.retry", attempt=attempt)
                 time.sleep(delay)
             except RungTimeout as e:
                 errors.append(f"timeout: {e}")
-                with self._lock:
-                    self.timeout_count += 1
-                    self.abandoned_rungs += 1
+                self._m_timeouts.inc()
+                self._m_abandoned.inc()
                 break
             except Exception as e:   # noqa: BLE001 — rung falls, never propagates
                 errors.append(f"{type(e).__name__}: {e}")
@@ -481,6 +585,7 @@ class AdmissionService:
                            ) -> AdmissionDecision:
         margin = self.degrade.margin_for(rung)
         peak = int(math.ceil(raw_peak * margin))
+        obs_spans.event(f"rung.{rung}", derived=how, margin=margin)
         prov = {"source": "degraded", "rung": rung, "margin": margin,
                 "derived": how, "rung_errors": list(errors),
                 "trace_cache": {}}
@@ -592,39 +697,44 @@ class AdmissionService:
         req = AdmissionRequest(job_id, decode_fn, params, batch,
                                capacity=capacity, deadline_s=deadline_s,
                                serving=knob_sig)
-        with self._lock:
-            self._in_flight += 1
+        self._m_in_flight.inc()
         try:
-            if deadline_s is None and self.faults is None:
-                rep, prov = run()
-            else:
-                try:
-                    rep, prov = _call_with_deadline(run, deadline_s)
-                except Exception as e:   # noqa: BLE001 — degrade, never fail
-                    errors = [f"{type(e).__name__}: {e}"]
-                    if isinstance(e, RungTimeout):
-                        with self._lock:
-                            self.timeout_count += 1
-                            self.abandoned_rungs += 1
-                    # the resident KV cache is persistent state: count it
-                    # with the params for the aval bound
-                    proxy = AdmissionRequest(
-                        job_id, decode_fn, (params, cache_tree), batch,
-                        capacity=capacity, serving=knob_sig)
-                    return self._decide_degraded(proxy, errors, t0,
-                                                 deadline_s)
-            self._count_rung(RUNG_EXACT)
-            decision = self._decision(req, rep, prov,
-                                      time.perf_counter() - t0, None)
-            decision.deadline_s = deadline_s
-            if plan is not None and not decision.admit \
-                    and not decision.degraded:
-                decision = self._attach_serving_offers(plan, decision,
-                                                       capacity)
-            return decision
+            with self.obs.request("serve", job_id=job_id) as cid:
+                decision = None
+                if deadline_s is None and self.faults is None:
+                    rep, prov = run()
+                else:
+                    try:
+                        rep, prov = _call_with_deadline(run, deadline_s)
+                    except Exception as e:   # noqa: BLE001 — degrade, never fail
+                        errors = [f"{type(e).__name__}: {e}"]
+                        if isinstance(e, RungTimeout):
+                            self._m_timeouts.inc()
+                            self._m_abandoned.inc()
+                        # the resident KV cache is persistent state:
+                        # count it with the params for the aval bound
+                        proxy = AdmissionRequest(
+                            job_id, decode_fn, (params, cache_tree),
+                            batch, capacity=capacity, serving=knob_sig)
+                        decision = self._decide_degraded(proxy, errors,
+                                                         t0, deadline_s)
+                if decision is None:
+                    self._count_rung(RUNG_EXACT)
+                    decision = self._decision(req, rep, prov,
+                                              time.perf_counter() - t0,
+                                              None)
+                    decision.deadline_s = deadline_s
+                    if plan is not None and not decision.admit \
+                            and not decision.degraded:
+                        decision = self._attach_serving_offers(
+                            plan, decision, capacity)
+                if cid is not None:
+                    decision.correlation_id = cid
+                self._m_decide_s.observe(decision.wall_s)
+                self._audit_decision(decision, via="serve")
+                return decision
         finally:
-            with self._lock:
-                self._in_flight -= 1
+            self._m_in_flight.dec()
 
     def _attach_serving_offers(self, ctx, decision: AdmissionDecision,
                                capacity: int) -> AdmissionDecision:
@@ -706,40 +816,55 @@ class AdmissionService:
             result = self.sweep.estimate_many(points)
             return result, _provenance(cache, before)
 
-        with self._sweep_lock:
-            if timeout is None and self.faults is None:
-                result, prov = run_sweep()
-            else:
-                try:
-                    result, prov = _call_with_deadline(run_sweep, timeout)
-                except Exception as e:   # noqa: BLE001 — degrade every point
-                    errors = [f"{type(e).__name__}: {e}"]
-                    if isinstance(e, RungTimeout):
-                        with self._lock:
-                            self.timeout_count += 1
-                            self.abandoned_rungs += 1
-                        # the abandoned worker still owns the old sweep
-                        # estimator — swap in a fresh one for later calls
-                        self.sweep = SweepService(self._make_estimator(),
-                                                  processes=self._processes)
-                    return [self._decide_degraded(r, list(errors), t0, d)
+        # one correlation ID covers the whole batched sweep — the
+        # points share probe traces, so their spans and audit records
+        # genuinely belong to one operation
+        with self.obs.request("sweep") as cid:
+            decisions = None
+            with self._sweep_lock:
+                if timeout is None and self.faults is None:
+                    result, prov = run_sweep()
+                else:
+                    try:
+                        result, prov = _call_with_deadline(run_sweep,
+                                                           timeout)
+                    except Exception as e:   # noqa: BLE001 — degrade every point
+                        errors = [f"{type(e).__name__}: {e}"]
+                        if isinstance(e, RungTimeout):
+                            self._m_timeouts.inc()
+                            self._m_abandoned.inc()
+                            # the abandoned worker still owns the old
+                            # sweep estimator — swap in a fresh one for
+                            # later calls
+                            self.sweep = SweepService(
+                                self._make_estimator(),
+                                processes=self._processes)
+                        decisions = [
+                            self._decide_degraded(r, list(errors), t0, d)
                             for r, d in zip(reqs, deadlines)]
-        prov["sweep"] = {k: result.stats[k] for k in
-                         ("points", "traced", "interpolated", "fallback",
-                          "pooled")}
-        # per-decision wall_s is the AMORTIZED share of the batched
-        # sweep (summing per-job costs must not over-count the sweep N
-        # times); each decision gets its own provenance copy so callers
-        # mutating one cannot alter siblings
-        wall = (time.perf_counter() - t0) / max(len(reqs), 1)
-        self._count_rung(RUNG_EXACT, served=len(reqs))
-        decisions = []
-        for r, rep, d in zip(reqs, result.reports, deadlines):
-            self._record_exact(r, rep)
-            dec = self._decision(r, rep, copy.deepcopy(prov), wall, None)
-            dec.deadline_s = d
-            decisions.append(dec)
-        return decisions
+            if decisions is None:
+                prov["sweep"] = {k: result.stats[k] for k in
+                                 ("points", "traced", "interpolated",
+                                  "fallback", "pooled")}
+                # per-decision wall_s is the AMORTIZED share of the
+                # batched sweep (summing per-job costs must not
+                # over-count the sweep N times); each decision gets its
+                # own provenance copy so callers mutating one cannot
+                # alter siblings
+                wall = (time.perf_counter() - t0) / max(len(reqs), 1)
+                self._count_rung(RUNG_EXACT, served=len(reqs))
+                decisions = []
+                for r, rep, d in zip(reqs, result.reports, deadlines):
+                    self._record_exact(r, rep)
+                    dec = self._decision(r, rep, copy.deepcopy(prov),
+                                         wall, None)
+                    dec.deadline_s = d
+                    decisions.append(dec)
+            for dec in decisions:
+                if cid is not None:
+                    dec.correlation_id = cid
+                self._audit_decision(dec, via="sweep")
+            return decisions
 
     def mesh_sweep(self, fwd_bwd_fn, params, batch, topologies, *,
                    update_fn=None, opt_init_fn=None, cfg=None,
@@ -749,14 +874,13 @@ class AdmissionService:
         cached trace (``SweepService.estimate_mesh_sweep``), serialized
         on the service's single sweep estimator like ``decide_sweep`` —
         the remediation planner's trace-free topology axis."""
-        with self._sweep_lock:
+        with self.obs.request("mesh_sweep"), self._sweep_lock:
             result = self.sweep.estimate_mesh_sweep(
                 fwd_bwd_fn, params, batch, topologies,
                 update_fn=update_fn, opt_init_fn=opt_init_fn, cfg=cfg,
                 shard_factors=shard_factors, collectives=collectives,
                 capacity=capacity)
-        with self._lock:
-            self.requests_served += len(result)
+        self._m_requests.inc(len(result))
         return result
 
     def stats(self) -> dict:

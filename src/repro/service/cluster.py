@@ -32,6 +32,7 @@ import time
 from typing import Any, Callable, Sequence
 
 from ..core import metrics
+from ..obs.metrics import Counter, CounterDict
 from .admission import AdmissionDecision, AdmissionRequest, AdmissionService
 
 
@@ -166,16 +167,25 @@ class ClusterSimulator:
                 truth=int(truth), runtime_s=d.wall_s))
         wall = time.perf_counter() - t0
         summary = score(records)
-        degraded = [d for d in decisions if d.degraded]
-        rungs: dict[str, int] = {}
+        # per-replay chaos accounting through the registry counter
+        # types (ISSUE 10): the summary keys/values stay bit-for-bit
+        # with the old hand-rolled dict — CounterDict preserves
+        # first-seen rung order and plain-int values
+        served_c = Counter("xmem_replay_served_total")
+        degraded_c = Counter("xmem_replay_degraded_total")
+        rung_counts = CounterDict(name="xmem_replay_rung_total",
+                                  label="rung")
         for d in decisions:
-            rungs[d.rung] = rungs.get(d.rung, 0) + 1
+            served_c.inc()
+            if d.degraded:
+                degraded_c.inc()
+            rung_counts.inc(d.rung)
         summary.update(
             wall_s=wall,
             replanned=len(retries),
-            served=len(decisions),
-            degraded=len(degraded),
-            rungs=rungs,
+            served=served_c.value,
+            degraded=degraded_c.value,
+            rungs=dict(rung_counts.items()),
             requests_per_s=(len(arrivals) / wall if wall > 0
                             and arrivals else 0.0))
         if chaos and summary["oom_admitted"]:

@@ -46,6 +46,7 @@ import time
 
 import numpy as np
 
+from ..obs import spans as obs_spans
 from ..core.cache import BlockInfo, TracedPhase, stable_key_digest
 from ..core.events import (BlockKind, ColumnarBlocks, ColumnarTrace, Trace,
                            TRACE_SCHEMA_VERSION)
@@ -222,6 +223,7 @@ class TraceStore:
             return None
         with self._lock:
             self.quarantined += 1
+        obs_spans.event("store.quarantine", reason=reason)
         return dest
 
     def _recover(self) -> dict:
@@ -262,7 +264,7 @@ class TraceStore:
         if self.faults is not None:
             self.faults.check("store.load", path=path)
         try:
-            with open(path) as f:
+            with obs_spans.span("store.load"), open(path) as f:
                 d = json.load(f)
         except OSError:             # absent: a plain miss, no evidence
             with self._lock:
@@ -333,15 +335,17 @@ class TraceStore:
         # another writer's temp file.
         tmp = None
         try:
-            fd, tmp = tempfile.mkstemp(dir=self.directory,
-                                       prefix=_PREFIX + "w", suffix=".tmp")
-            with os.fdopen(fd, "w") as f:
-                json.dump(d, f)
-                f.flush()
-                os.fsync(f.fileno())
-            os.replace(tmp, path)
-            tmp = None
-            self._fsync_dir()
+            with obs_spans.span("store.save"):
+                fd, tmp = tempfile.mkstemp(
+                    dir=self.directory,
+                    prefix=_PREFIX + "w", suffix=".tmp")
+                with os.fdopen(fd, "w") as f:
+                    json.dump(d, f)
+                    f.flush()
+                    os.fsync(f.fileno())
+                os.replace(tmp, path)
+                tmp = None
+                self._fsync_dir()
         except OSError:
             if tmp is not None:
                 self._remove(tmp)   # our own temp only

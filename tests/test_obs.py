@@ -1,0 +1,507 @@
+"""Observability-layer tests (ISSUE 10).
+
+Pins the tentpole guarantees:
+
+* **crash-safe audit trail** — torn tails are quarantined (never
+  silently discarded) and every intact record survives a reopen;
+  rotation keeps append order; ``decide_many`` writes exactly one
+  record per decision;
+* **correlation chain** — one request-scoped correlation ID links the
+  decide span, the audit record, the remediation-planner record for a
+  rejection, and the fleet-scheduler placement record;
+* **observer neutrality** — an instrumented service's decisions are
+  bit-identical to a bare one's, and the uninstrumented wire format is
+  unchanged (no ``correlation_id`` key);
+* **metrics registry** — thread-safe under concurrent mutation, and
+  both export formats are machine-readable (Prometheus text
+  round-trips through the parser, Chrome-trace JSON loads);
+* **timeline + ingestion** — a decision's report renders as a Perfetto
+  document whose headline numbers match the decision, and observed
+  peaks persist as residual records across reopen.
+"""
+import json
+import os
+import threading
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.cache import TraceCache
+from repro.obs import (AuditLog, CounterDict, MetricsRegistry,
+                       Observability, Tracer, mint_correlation_id,
+                       parse_prometheus)
+from repro.obs import spans as obs_spans
+from repro.obs.ingest import GPUMemorySnapshot, TelemetryIngestor
+from repro.obs.timeline import timeline_events, write_timeline
+from repro.service import AdmissionRequest, AdmissionService
+
+L, D, H, B = 4, 32, 64, 8
+
+
+def _make_hooks():
+    def loss(p, b):
+        h = b["x"]
+        for i in range(L):
+            h = jnp.tanh(h @ p[f"w{i}"])
+        return jnp.mean((h - b["y"]) ** 2)
+
+    def fwd_bwd(p, b):
+        return jax.value_and_grad(loss)(p, b)
+
+    def adam_init(p):
+        return jax.tree.map(
+            lambda x: (jnp.zeros_like(x), jnp.zeros_like(x)), p)
+
+    def adam(p, g, s):
+        def upd(pp, gg, ss):
+            m, v = ss
+            m = 0.9 * m + 0.1 * gg
+            v = 0.999 * v + 0.001 * gg * gg
+            return pp - 1e-3 * m / (jnp.sqrt(v) + 1e-8), (m, v)
+        out = jax.tree.map(upd, p, g, s,
+                           is_leaf=lambda x: isinstance(x, tuple))
+        return {k: out[k][0] for k in out}, {k: out[k][1] for k in out}
+
+    return fwd_bwd, adam, adam_init
+
+
+def _request(job_id="job", batch=B, capacity=1 << 30, **kw):
+    fwd_bwd, adam, adam_init = _make_hooks()
+    params = {f"w{i}": jax.ShapeDtypeStruct(
+        (D, H) if i % 2 == 0 else (H, D), jnp.float32) for i in range(L)}
+    data = {"x": jax.ShapeDtypeStruct((batch, D), jnp.float32),
+            "y": jax.ShapeDtypeStruct((batch, D), jnp.float32)}
+    return AdmissionRequest(job_id, fwd_bwd, params, data,
+                            update_fn=adam, opt_init_fn=adam_init,
+                            capacity=capacity, **kw)
+
+
+def _obs_service(tmp_path, workers=1):
+    obs = Observability(enabled=True, audit_dir=str(tmp_path / "audit"))
+    return AdmissionService(workers=workers, cache=TraceCache(),
+                            obs=obs)
+
+
+# ---------------------------------------------------------------------------
+class TestAuditLog:
+    def test_append_reopen_round_trip(self, tmp_path):
+        d = str(tmp_path)
+        with AuditLog(d) as log:
+            for i in range(3):
+                rec = log.append({"kind": "decide", "i": i})
+                assert rec["seq"] == i + 1 and rec["ts"] > 0
+        with AuditLog(d) as log:
+            recs = log.records()
+            assert [r["i"] for r in recs] == [0, 1, 2]
+            assert log.recovery == {"records": 3, "torn_bytes": 0,
+                                    "quarantined": 0}
+
+    def test_torn_tail_quarantined_not_lost(self, tmp_path):
+        """A crash mid-append tears the active file's tail; reopen must
+        keep every intact record, quarantine the torn bytes, and keep
+        appending with a continuous sequence."""
+        d = str(tmp_path)
+        with AuditLog(d) as log:
+            for i in range(5):
+                log.append({"kind": "decide", "i": i})
+            path = log.path
+        torn = b'{"seq": 6, "kind": "dec'        # no newline: torn write
+        with open(path, "ab") as f:
+            f.write(torn)
+        with AuditLog(d) as log:
+            assert log.recovery["records"] == 5
+            assert log.recovery["torn_bytes"] == len(torn)
+            assert log.recovery["quarantined"] == 1
+            recs = log.records()
+            assert [r["i"] for r in recs] == [0, 1, 2, 3, 4]
+            qdir = os.path.join(d, AuditLog.QUARANTINE_DIR)
+            qfiles = os.listdir(qdir)
+            assert len(qfiles) == 1 and "torn" in qfiles[0]
+            with open(os.path.join(qdir, qfiles[0]), "rb") as f:
+                assert f.read() == torn
+            # appends continue from the last good record
+            assert log.append({"kind": "decide", "i": 5})["seq"] == 6
+
+    def test_corrupt_middle_line_truncates_from_there(self, tmp_path):
+        d = str(tmp_path)
+        with AuditLog(d) as log:
+            log.append({"kind": "a"})
+            path = log.path
+        with open(path, "ab") as f:
+            f.write(b"not json at all\n")
+            f.write(b'{"kind": "after-corruption"}\n')
+        with AuditLog(d) as log:
+            # the first corrupt byte ends the trusted prefix; everything
+            # after it is quarantined, even well-formed lines
+            assert log.recovery["records"] == 1
+            assert log.recovery["quarantined"] == 1
+            assert [r["kind"] for r in log.records()] == ["a"]
+
+    def test_rotation_preserves_order_and_durability(self, tmp_path):
+        d = str(tmp_path)
+        with AuditLog(d, max_bytes=128) as log:
+            for i in range(20):
+                log.append({"kind": "decide", "i": i})
+            assert log.rotations >= 1
+            assert [r["i"] for r in log.records()] == list(range(20))
+        with AuditLog(d, max_bytes=128) as log:
+            assert [r["i"] for r in log.records()] == list(range(20))
+
+    def test_fsync_mode_validated(self, tmp_path):
+        with pytest.raises(ValueError):
+            AuditLog(str(tmp_path), fsync="sometimes")
+
+
+# ---------------------------------------------------------------------------
+class TestMetricsRegistry:
+    def test_concurrent_mutation_is_exact(self):
+        reg = MetricsRegistry()
+        c = reg.counter("xmem_test_total")
+        g = reg.gauge("xmem_test_gauge")
+        h = reg.histogram("xmem_test_seconds")
+        threads, per = 8, 500
+
+        def work():
+            for i in range(per):
+                c.inc()
+                g.inc()
+                g.dec()
+                h.observe(float(i))
+
+        ts = [threading.Thread(target=work) for _ in range(threads)]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join()
+        assert c.value == threads * per
+        assert g.value == 0
+        assert h.count == threads * per
+        assert h.max == float(per - 1)
+
+    def test_labeled_series_are_distinct_and_get_or_create(self):
+        reg = MetricsRegistry()
+        a = reg.counter("xmem_req_total", labels={"kind": "decide"})
+        b = reg.counter("xmem_req_total", labels={"kind": "plan"})
+        a.inc(3)
+        b.inc(1)
+        assert reg.counter("xmem_req_total",
+                           labels={"kind": "decide"}) is a
+        text = reg.to_prometheus()
+        parsed = parse_prometheus(text)
+        assert parsed['xmem_req_total{kind="decide"}'] == 3.0
+        assert parsed['xmem_req_total{kind="plan"}'] == 1.0
+
+    def test_prometheus_histogram_summary_round_trip(self):
+        reg = MetricsRegistry()
+        h = reg.histogram("xmem_lat_seconds")
+        for v in range(100):
+            h.observe(v / 100.0)
+        parsed = parse_prometheus(reg.to_prometheus())
+        assert parsed["xmem_lat_seconds_count"] == 100.0
+        assert parsed["xmem_lat_seconds_sum"] == pytest.approx(49.5)
+        assert parsed['xmem_lat_seconds{quantile="0.5"}'] == \
+            pytest.approx(h.percentile(0.5))
+
+    def test_collector_flattens_and_swallows_errors(self):
+        reg = MetricsRegistry()
+        reg.register_collector(
+            "good", lambda: {"flat": 1, "nested": {"x": 2, "y": 3}})
+        reg.register_collector("bad", lambda: 1 / 0)
+        out = reg.to_json()["collected"]
+        assert out["good_flat"] == 1
+        assert out["good_nested_x"] == 2 and out["good_nested_y"] == 3
+        assert out["bad_collect_errors"] == 1
+        # collected series also land in the Prometheus exposition
+        parsed = parse_prometheus(reg.to_prometheus())
+        assert parsed["good_nested_y"] == 3.0
+
+    def test_counterdict_behaves_like_the_dict_it_replaced(self):
+        d = CounterDict(("a", "b"), name="xmem_cd_total", label="k")
+        assert dict(d.items()) == {"a": 0, "b": 0}
+        d["a"] += 2
+        d.inc("c")                       # auto-created, first-seen order
+        assert list(d.keys()) == ["a", "b", "c"]
+        assert {**d} == {"a": 2, "b": 0, "c": 1}
+        assert d == {"a": 2, "b": 0, "c": 1}
+        with pytest.raises(KeyError):
+            d["unknown"]
+
+
+# ---------------------------------------------------------------------------
+class TestSpans:
+    def test_nesting_parent_links_and_correlation_inheritance(self):
+        tr = Tracer()
+        with obs_spans.activate(tr, "xm-test"):
+            with tr.span("outer", correlation_id="xm-test") as outer:
+                with tr.span("inner") as inner:
+                    assert inner.parent_id == outer.span_id
+                    assert inner.correlation_id == "xm-test"
+                tr.event("point")
+        spans = {s.name: s for s in tr.spans()}
+        # an event inside an open span inherits parent + correlation
+        assert spans["point"].parent_id == spans["outer"].span_id
+        assert spans["point"].correlation_id == "xm-test"
+        assert spans["inner"].t_end >= spans["inner"].t_start
+        assert spans["outer"].parent_id is None
+
+    def test_ring_bound_counts_drops(self):
+        tr = Tracer(max_spans=4)
+        for i in range(10):
+            tr.event(f"e{i}")
+        assert len(tr.spans()) == 4
+        assert tr.started == 10 and tr.dropped == 6
+        assert [s.name for s in tr.spans()] == ["e6", "e7", "e8", "e9"]
+
+    def test_chrome_trace_export_loads_as_json(self):
+        tr = Tracer()
+        with obs_spans.activate(tr, "xm-chrome"):
+            with obs_spans.span("root", job_id="j"):
+                obs_spans.event("mark", n=1)
+        doc = json.loads(json.dumps(tr.to_chrome_trace()))
+        assert doc["traceEvents"]
+        root = next(e for e in doc["traceEvents"]
+                    if e["name"] == "root")
+        assert root["ph"] == "X" and root["dur"] >= 0
+        assert root["args"]["correlation_id"] == "xm-chrome"
+
+    def test_disabled_module_helpers_are_noops(self):
+        assert obs_spans.current() is None
+        assert obs_spans.current_correlation_id() is None
+        assert obs_spans.span("anything") is obs_spans._NOOP
+        obs_spans.event("anything")      # must not raise
+
+    def test_mint_correlation_ids_unique(self):
+        ids = {mint_correlation_id() for _ in range(256)}
+        assert len(ids) == 256
+        assert all(i.startswith("xm-") and len(i) == 19 for i in ids)
+
+
+# ---------------------------------------------------------------------------
+class TestServiceObservability:
+    def test_instrumented_decision_bit_identical_to_bare(self, tmp_path):
+        bare = AdmissionService(workers=1, cache=TraceCache())
+        inst = _obs_service(tmp_path)
+        try:
+            d0 = bare.decide(_request("bit"))
+            d1 = inst.decide(_request("bit"))
+            assert d1.peak_bytes == d0.peak_bytes
+            assert d1.peak_tensor_bytes == d0.peak_tensor_bytes
+            assert d1.persistent_bytes == d0.persistent_bytes
+            assert d1.safe_threshold == d0.safe_threshold
+            assert d1.breakdown == d0.breakdown
+            # the correlation ID rides the instrumented decision only,
+            # and the uninstrumented wire format is unchanged
+            assert d1.correlation_id and d0.correlation_id is None
+            assert d1.to_json()["correlation_id"] == d1.correlation_id
+            assert "correlation_id" not in d0.to_json()
+        finally:
+            bare.close()
+            inst.close()
+
+    def test_decide_many_exactly_one_audit_record_each(self, tmp_path):
+        svc = _obs_service(tmp_path, workers=2)
+        try:
+            reqs = [_request(f"many-{i}", batch=B + i) for i in range(6)]
+            decisions = svc.decide_many(reqs)
+            assert len(decisions) == 6
+            recs = svc.obs.audit.records(kind="decide")
+            by_job = {}
+            for r in recs:
+                by_job.setdefault(r["job_id"], []).append(r)
+            for d in decisions:
+                mine = by_job[d.job_id]
+                assert len(mine) == 1, (
+                    f"{d.job_id}: {len(mine)} audit records")
+                assert mine[0]["correlation_id"] == d.correlation_id
+                assert mine[0]["peak_bytes"] == d.peak_bytes
+            cids = [d.correlation_id for d in decisions]
+            assert len(set(cids)) == 6 and all(cids)
+            # the registry counted every request exactly once
+            counters = svc.obs.registry.to_json()["counters"]
+            assert counters["xmem_service_requests_total"] == 6
+        finally:
+            svc.close()
+
+    def test_rejection_plan_chain_shares_correlation_id(self, tmp_path):
+        """The reject→plan chain: a rejection that triggers the
+        remediation planner writes a plan audit record carrying the
+        SAME correlation ID as the decide record — reconstructible
+        offline from the log alone."""
+        import dataclasses as dc
+
+        from repro.configs import get_smoke
+        from repro.configs.base import smoke_shape
+        from repro.configs.registry import input_specs
+        from repro.models import model as M
+        from repro.plan import PlanContext, PlanSpace
+        from repro.train import TrainPolicy, make_estimator_hooks
+
+        MIB = 2 ** 20
+        cfg = dc.replace(get_smoke("starcoder2-3b"), remat="none")
+        policy = TrainPolicy(optimizer="adamw", microbatches=1)
+        shape = smoke_shape(48, 32)
+        ctx = PlanContext(cfg, policy, shape,
+                          space=PlanSpace(batches=(8,), microbatches=(),
+                                          remat=(), devices=()))
+        svc = _obs_service(tmp_path)
+        try:
+            fwd, upd, init = make_estimator_hooks(cfg, policy)
+            req = AdmissionRequest(
+                "chain", fwd, M.abstract_params(cfg),
+                input_specs(cfg, shape), update_fn=upd,
+                opt_init_fn=init, capacity=10 * MIB,
+                meta={"plan": ctx})
+            decision = svc.decide(req)
+            assert not decision.admit and decision.counter_offers
+            cid = decision.correlation_id
+            assert cid
+            decide_recs = [r for r in
+                           svc.obs.audit.records(kind="decide")
+                           if r["job_id"] == "chain"]
+            plan_recs = [r for r in svc.obs.audit.records(kind="plan")
+                         if r["job_id"] == "chain"]
+            assert len(decide_recs) == 1 and len(plan_recs) == 1
+            assert decide_recs[0]["correlation_id"] == cid
+            assert plan_recs[0]["correlation_id"] == cid
+            assert decide_recs[0]["n_offers"] == \
+                len(decision.counter_offers)
+        finally:
+            svc.close()
+
+    def test_fleet_placement_record_carries_decision_cid(self, tmp_path):
+        from repro.sched import FleetScheduler, build_fleet
+        from repro.service import JobArrival
+
+        svc = _obs_service(tmp_path)
+        try:
+            probe = svc.decide(_request("probe"))
+            cap = probe.safe_threshold * 2
+            fwd_bwd, adam, adam_init = _make_hooks()
+            params = {f"w{i}": jax.ShapeDtypeStruct(
+                (D, H) if i % 2 == 0 else (H, D), jnp.float32)
+                for i in range(L)}
+            data = {"x": jax.ShapeDtypeStruct((B, D), jnp.float32),
+                    "y": jax.ShapeDtypeStruct((B, D), jnp.float32)}
+            job = JobArrival("fleet-job", fwd_bwd, params, data,
+                             update_fn=adam, opt_init_fn=adam_init,
+                             capacity=cap)
+            sched = FleetScheduler(svc, build_fleet(2, cap),
+                                   obs=svc.obs)
+            out = sched.place(job, tick=1)
+            assert out.placed
+            cid = out.decision.correlation_id
+            assert cid
+            place_recs = [r for r in
+                          svc.obs.audit.records(kind="place")
+                          if r["job_id"] == "fleet-job"]
+            decide_recs = [r for r in
+                           svc.obs.audit.records(kind="decide")
+                           if r["job_id"] == "fleet-job"]
+            assert len(place_recs) == 1 and len(decide_recs) == 1
+            # decide → place share the request's correlation ID
+            assert place_recs[0]["correlation_id"] == cid
+            assert decide_recs[0]["correlation_id"] == cid
+            assert place_recs[0]["placed"] and \
+                place_recs[0]["nodes"]
+        finally:
+            svc.close()
+
+    def test_daemon_metrics_kind_serves_both_formats(self, tmp_path):
+        from repro.launch.served import handle_request
+
+        svc = _obs_service(tmp_path)
+        try:
+            svc.decide(_request("daemon"))
+            out = handle_request(svc, {"kind": "metrics"})
+            assert out["ok"]
+            assert out["metrics"]["counters"][
+                "xmem_service_requests_total"] >= 1
+            parsed = parse_prometheus(out["prometheus"])
+            assert parsed["xmem_service_requests_total"] >= 1.0
+            # the metrics request itself was counted by kind
+            out2 = handle_request(svc, {"kind": "metrics"})
+            assert parse_prometheus(out2["prometheus"])[
+                'xmem_daemon_requests_total{kind="metrics"}'] >= 1.0
+        finally:
+            svc.close()
+
+    def test_request_scope_yields_none_when_disabled(self):
+        obs = Observability(enabled=False)
+        with obs.request("decide", job_id="x") as cid:
+            assert cid is None
+        assert obs.tracer.started == 0
+
+
+# ---------------------------------------------------------------------------
+class TestTimelineAndIngest:
+    def test_timeline_matches_decision_headline(self, tmp_path):
+        svc = _obs_service(tmp_path)
+        try:
+            decision = svc.decide(_request("tl"))
+            assert decision.report is not None
+            path = str(tmp_path / "timeline.json")
+            assert write_timeline(decision.report, path) == path
+            with open(path) as f:
+                doc = json.load(f)
+            assert doc["traceEvents"]
+            assert doc["otherData"]["peak_bytes"] == decision.peak_bytes
+            assert doc["otherData"]["persistent_bytes"] == \
+                decision.persistent_bytes
+            counters = [e for e in doc["traceEvents"]
+                        if e["ph"] == "C" and e["name"] == "memory"]
+            assert counters, "demand-curve counter track missing"
+            peak_seen = max(e["args"]["reserved"] for e in counters)
+            assert peak_seen == decision.peak_bytes
+            slices = [e for e in doc["traceEvents"] if e["ph"] == "X"]
+            assert slices, "block-lifecycle slice tracks missing"
+            assert doc["otherData"]["blocks_rendered"] == len(slices)
+        finally:
+            svc.close()
+
+    def test_timeline_top_k_bounds_slices(self, tmp_path):
+        svc = _obs_service(tmp_path)
+        try:
+            decision = svc.decide(_request("tk"))
+            doc = timeline_events(decision.report, top_k=3)
+            slices = [e for e in doc["traceEvents"] if e["ph"] == "X"]
+            assert len(slices) == 3
+            sizes = [e["args"]["bytes"] for e in slices]
+            assert sizes == sorted(sizes, reverse=True)
+        finally:
+            svc.close()
+
+    def test_residual_ingestion_persists_across_reopen(self, tmp_path):
+        d = str(tmp_path / "telemetry")
+        ing = TelemetryIngestor(d)
+        snap = GPUMemorySnapshot(timestamp=1.0, reserved_mb=1.5,
+                                 allocated_mb=1.2)
+        rec = ing.ingest("digest-a", "fam0", estimate_bytes=2 ** 20,
+                         snapshot=snap)
+        assert rec["observed_bytes"] == int(1.5 * 2 ** 20)
+        assert rec["residual_bytes"] == rec["observed_bytes"] - 2 ** 20
+        assert rec["ratio"] == pytest.approx(1.5)
+        ing.ingest("digest-a", "fam0", estimate_bytes=2 ** 20,
+                   observed_bytes=2 ** 20)
+        ing.close()
+        ing = TelemetryIngestor(d)
+        rows = ing.residuals("digest-a", "fam0")
+        assert len(rows) == 2
+        summary = ing.summary()["digest-a/fam0"]
+        assert summary["n"] == 2
+        assert summary["max_ratio"] == pytest.approx(1.5)
+        assert summary["min_ratio"] == pytest.approx(1.0)
+        ing.close()
+
+    def test_ingest_cli_round_trip(self, tmp_path, capsys):
+        from repro.obs.ingest import main
+
+        d = str(tmp_path / "telemetry")
+        assert main(["--dir", d, "--model-digest", "abc",
+                     "--family", "fam", "--estimate-bytes", "1000000",
+                     "--observed-mb", "1.2"]) == 0
+        rec = json.loads(capsys.readouterr().out)
+        assert rec["observed_bytes"] == int(1.2 * 2 ** 20)
+        assert main(["--dir", d, "--summary"]) == 0
+        summary = json.loads(capsys.readouterr().out)
+        assert summary["abc/fam"]["n"] == 1
